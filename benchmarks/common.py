@@ -1,0 +1,33 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+from repro.apps import get_app, make_task
+from repro.core import explore
+
+# modest budgets so the whole harness runs on one CPU core; the paper's
+# full budget (400 evals) is used by passing full=True
+FAST = dict(pop_size=14, n_gen=4, max_evals=70)
+FULL = dict(pop_size=40, n_gen=9, max_evals=400)
+
+APPS_F32 = ("blackscholes", "kmeans", "radar", "fluidanimate", "heartwall")
+
+
+def budget(full: bool) -> Dict:
+    return dict(FULL if full else FAST)
+
+
+def timed(fn: Callable, *args, **kwargs) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def explore_app(name: str, family: str, *, full: bool = False, seed: int = 0,
+                n_train: int = 3, n_test: int = 2, n_sites: int = 10,
+                robustness: bool = False):
+    task = make_task(get_app(name), n_train=n_train, n_test=n_test)
+    return explore(task, family=family, n_sites=n_sites, seed=seed,
+                   robustness=robustness, **budget(full))

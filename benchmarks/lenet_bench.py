@@ -1,0 +1,103 @@
+"""Paper §V-H: LeNet-5/MNIST case study — Fig. 10 (FLOP breakdown),
+Fig. 11 (PLC vs PLI), Table V (per-layer mantissa bits)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import budget
+from repro.core import ExplorationTask, explore, profile
+from repro.data.synthetic import synthetic_digits
+from repro.models.lenet import (accuracy, init_lenet5, lenet5_forward,
+                                lenet5_loss)
+
+Row = Tuple[str, float, str]
+
+LAYER_ORDER = ("conv1", "avgpool1", "conv2", "avgpool2", "conv3", "fc",
+               "tanh", "internal")
+
+
+def _train_lenet(steps: int = 80, n: int = 512):
+    imgs, labels = synthetic_digits(n, seed=0)
+    params = init_lenet5(jax.random.key(0))
+
+    @jax.jit
+    def step(p):
+        g = jax.grad(lenet5_loss)(p, imgs, labels)
+        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+
+    for _ in range(steps):
+        params = step(params)
+    return params, imgs, labels
+
+
+def _acc_error(params, labels):
+    """Error metric = accuracy drop vs the exact model (paper's 'accuracy
+    loss')."""
+    lab = np.asarray(labels)
+
+    def err_fn(approx_logits, exact_logits):
+        a = np.argmax(np.asarray(approx_logits), -1).reshape(-1)
+        e = np.argmax(np.asarray(exact_logits), -1).reshape(-1)
+        n = len(a)
+        return max(0.0, float(np.mean(e == lab[:n]) - np.mean(a == lab[:n])))
+    return err_fn
+
+
+def lenet_case_study(full: bool = False) -> List[Row]:
+    rows = []
+    t0 = time.perf_counter()
+    params, imgs, labels = _train_lenet(steps=60 if not full else 120)
+    base_acc = float(accuracy(params, imgs, labels))
+    eval_imgs = imgs[:256]
+    eval_labels = labels[:256]
+
+    # Fig. 10: FLOP breakdown per layer
+    prof = profile(lenet5_forward, params, eval_imgs)
+    by_leaf = {}
+    for path, st in prof.scopes.items():
+        leaf = path.split("/")[-1] if path else ""
+        by_leaf[leaf] = by_leaf.get(leaf, 0) + st.flops
+    tot = max(prof.total_flops, 1)
+    conv_share = sum(v for k, v in by_leaf.items()
+                     if k.startswith("conv")) / tot
+    rows.append(("fig10/lenet_flops", (time.perf_counter() - t0) * 1e6,
+                 f"base_acc={base_acc:.3f};conv_share={conv_share:.2f}"))
+
+    # Fig. 11 + Table V: PLC vs PLI exploration over layer scopes
+    fwd = lambda im: lenet5_forward(params, im)
+    task = ExplorationTask(
+        name="lenet", fn=fwd,
+        train_inputs=[(eval_imgs,)],
+        test_inputs=[(imgs[256:448],)],
+        error_fn=_acc_error(params, eval_labels))
+    reports = {}
+    for family in ("plc", "pli"):
+        t1 = time.perf_counter()
+        rep = explore(task, family=family, n_sites=8, robustness=False,
+                      **budget(full))
+        us = (time.perf_counter() - t1) * 1e6
+        reports[family] = rep
+        parts = [f"sav@{int(t*100)}%={rep.savings(t):.3f}"
+                 for t in (0.01, 0.05, 0.10)]
+        rows.append((f"fig11/lenet_{family}", us,
+                     ";".join(parts) + f";sites={len(rep.sites)}"))
+
+    # Table V: recommended per-layer bits at each error budget (PLI)
+    rep = reports["pli"]
+    for thr in (0.01, 0.05, 0.10):
+        genome = rep.best_genome(thr)
+        if genome is None:
+            continue
+        named = {}
+        for site, bits in zip(rep.sites, genome):
+            leaf = site.split("/")[-1]
+            named[leaf] = min(named.get(leaf, 24), int(bits))
+        cells = ";".join(f"{k}={named.get(k, 24)}" for k in LAYER_ORDER
+                         if k in named or k in ("tanh", "internal"))
+        rows.append((f"table5/bits@{int(thr*100)}%", 0.0, cells))
+    return rows

@@ -1,0 +1,47 @@
+"""Beyond-paper: NEAT applied to an LM — per-layer-class mantissa
+precision for a (reduced) assigned architecture, the LLM-scale analogue of
+the paper's CNN study. Uses scope-mode placement on the real model code
+(the same scopes the production stack runs under)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import budget
+from repro.configs import get_arch
+from repro.core import ExplorationTask, explore
+from repro.models import build_model
+
+Row = Tuple[str, float, str]
+
+
+def lm_precision(full: bool = False, arch: str = "h2o-danube-3-4b"
+                 ) -> List[Row]:
+    cfg = get_arch(arch).reduced(n_layers=2, d_model=64, n_heads=4,
+                                 d_ff=128, vocab=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (4, 32), 0,
+                              cfg.vocab_size)
+
+    fwd = lambda t: model.forward(params, t)
+    task = ExplorationTask(
+        name=f"lm/{arch}", fn=fwd,
+        train_inputs=[(toks,)],
+        test_inputs=[(jax.random.randint(jax.random.key(2), (4, 32), 0,
+                                         cfg.vocab_size),)])
+    t0 = time.perf_counter()
+    rep = explore(task, family="plc", n_sites=8, robustness=False,
+                  **budget(full))
+    us = (time.perf_counter() - t0) * 1e6
+    parts = [f"sav@{int(t*100)}%={rep.savings(t):.3f}"
+             for t in (0.01, 0.05, 0.10)]
+    g = rep.best_genome(0.05)
+    if g is not None:
+        parts.append("bits@5%=" + ",".join(
+            f"{s.split('/')[-1]}:{b}" for s, b in zip(rep.sites, g)))
+    return [(f"lm_precision/{arch}", us, ";".join(parts))]

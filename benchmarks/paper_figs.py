@@ -1,0 +1,130 @@
+"""One function per paper table/figure. Each returns
+(name, us_per_call, derived) rows for run.py's CSV."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from benchmarks.common import APPS_F32, budget, explore_app, timed
+from repro.apps import get_app, make_task
+from repro.core import (CallStack, CurrentScope, MantissaTrunc, explore,
+                        harmonic_mean, neat_transform, profile)
+
+Row = Tuple[str, float, str]
+
+
+def fig04_flop_breakdown(full: bool = False) -> List[Row]:
+    """Fig. 4: single/double FLOP ratio per benchmark."""
+    rows = []
+    apps = list(APPS_F32) + ["ferret", "particlefilter"]
+    for name in apps:
+        ctx = jax.experimental.enable_x64() if name in (
+            "ferret", "particlefilter") else _null()
+        with ctx:
+            task = make_task(get_app(name), n_train=1, n_test=0)
+            us, prof = timed(profile, get_app(name).fn,
+                             *task.train_inputs[0])
+            d = prof.dtype_breakdown()
+            tot = max(sum(d.values()), 1)
+            f32 = d.get("float32", 0) / tot
+            f64 = d.get("float64", 0) / tot
+        rows.append((f"fig04/{name}", us,
+                     f"f32={f32:.2f};f64={f64:.2f};flops={prof.total_flops}"))
+    return rows
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def fig05_06_wp_vs_cip(full: bool = False) -> List[Row]:
+    """Fig. 5 (hulls) + Fig. 6 (quantized savings): WP vs CIP per app."""
+    rows = []
+    sav_cip, sav_wp = {0.01: [], 0.05: [], 0.10: []}, \
+        {0.01: [], 0.05: [], 0.10: []}
+    for name in APPS_F32:
+        t0 = time.perf_counter()
+        rep_wp = explore_app(name, "wp", full=full, n_sites=1)
+        rep_cip = explore_app(name, "cip", full=full)
+        us = (time.perf_counter() - t0) * 1e6
+        parts = []
+        for thr in (0.01, 0.05, 0.10):
+            sw, sc = rep_wp.savings(thr), rep_cip.savings(thr)
+            sav_wp[thr].append(max(sw, 1e-6))
+            sav_cip[thr].append(max(sc, 1e-6))
+            parts.append(f"wp@{int(thr*100)}%={sw:.3f};"
+                         f"cip@{int(thr*100)}%={sc:.3f}")
+        hull = ";".join(f"({p.error:.4f},{p.energy:.3f})"
+                        for p in rep_cip.hull[:6])
+        rows.append((f"fig05/{name}", us, ";".join(parts) + ";hull=" + hull))
+    for thr in (0.01, 0.05, 0.10):
+        extra = harmonic_mean(sav_cip[thr]) - harmonic_mean(sav_wp[thr])
+        rows.append((f"fig06/hmean@{int(thr*100)}%", 0.0,
+                     f"cip_minus_wp={extra:+.3f};"
+                     f"cip={harmonic_mean(sav_cip[thr]):.3f};"
+                     f"wp={harmonic_mean(sav_wp[thr]):.3f}"))
+    return rows
+
+
+def fig07_memory_savings(full: bool = False) -> List[Row]:
+    """Fig. 7: memory-transfer energy savings at error thresholds (CIP)."""
+    rows = []
+    for name in APPS_F32:
+        t0 = time.perf_counter()
+        rep = explore_app(name, "cip", full=full)
+        us = (time.perf_counter() - t0) * 1e6
+        parts = [f"mem@{int(t*100)}%={rep.mem_savings(t):.3f}"
+                 for t in (0.01, 0.05, 0.10)]
+        rows.append((f"fig07/{name}", us, ";".join(parts)))
+    return rows
+
+
+def fig08_precision_target(full: bool = False) -> List[Row]:
+    """Fig. 8: optimization-target study on the mixed-precision app."""
+    rows = []
+    with jax.experimental.enable_x64():
+        for target in ("single", "double"):
+            task = make_task(get_app("ferret"), n_train=2, n_test=1)
+            task.target = target
+            t0 = time.perf_counter()
+            rep = explore(task, family="cip", n_sites=4,
+                          robustness=False, **budget(full))
+            us = (time.perf_counter() - t0) * 1e6
+            parts = [f"sav@{int(t*100)}%={rep.savings(t):.3f}"
+                     for t in (0.01, 0.05, 0.10)]
+            rows.append((f"fig08/ferret_{target}", us, ";".join(parts)))
+    return rows
+
+
+def fig09_fcs_radar(full: bool = False) -> List[Row]:
+    """Fig. 9: CIP vs FCS on radar (caller-sensitive FFT precision)."""
+    t0 = time.perf_counter()
+    rep_cip = explore_app("radar", "cip", full=full, seed=3)
+    rep_fcs = explore_app("radar", "fcs", full=full, seed=3)
+    us = (time.perf_counter() - t0) * 1e6
+    parts = []
+    for thr in (0.01, 0.05, 0.10):
+        parts.append(f"cip@{int(thr*100)}%={rep_cip.savings(thr):.3f};"
+                     f"fcs@{int(thr*100)}%={rep_fcs.savings(thr):.3f}")
+    return [("fig09/radar_cip_vs_fcs", us, ";".join(parts))]
+
+
+def table3_robustness(full: bool = False) -> List[Row]:
+    """Table III: train->test correlation coefficients."""
+    rows = []
+    for name in APPS_F32:
+        t0 = time.perf_counter()
+        rep = explore_app(name, "cip", full=full, robustness=True,
+                          n_train=3, n_test=3)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"table3/{name}", us,
+                     f"R_error={rep.robustness_error_r:.3f};"
+                     f"R_energy={rep.robustness_energy_r:.3f}"))
+    return rows

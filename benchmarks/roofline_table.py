@@ -1,0 +1,91 @@
+"""Assemble experiments/dryrun/*.json into the §Dry-run/§Roofline tables
+(markdown written to experiments/roofline.md, rows returned for run.py)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "roofline.md")
+
+
+def load_records(d: str = DRYRUN_DIR) -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt(x, digits=4):
+    return f"{x:.{digits}g}"
+
+
+def render_markdown(recs: List[dict]) -> str:
+    lines = ["# Roofline table (single-pod 16x16 = 256 chips, TPU v5e "
+             "constants)", "",
+             "| arch | shape | status | compute_s | memory_s (census) | "
+             "analytic_mem_s | collective_s | bottleneck | MFU | "
+             "useful-FLOP ratio | temp GiB/chip |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if "single_pod" not in r.get("mesh", ""):
+            continue
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']}: "
+                         f"{reason} | | | | | | | | |")
+            continue
+        ro = r["roofline"]
+        temp = r["memory_analysis"].get("temp_size_in_bytes", 0) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {_fmt(ro['compute_s'])} "
+            f"| {_fmt(ro['memory_s'])} | {_fmt(ro['analytic_memory_s'])} "
+            f"| {_fmt(ro['collective_s'])} | {ro['bottleneck']} "
+            f"| {_fmt(ro['mfu'], 3)} | {_fmt(ro['useful_flop_ratio'], 3)} "
+            f"| {temp:.2f} |")
+    lines += ["", "# Multi-pod (2x16x16 = 512 chips) dry-run status", "",
+              "(lower+compile pass/fail — proves the 'pod' axis shards; "
+              "the roofline table above is single-pod per the assignment)",
+              "",
+              "| arch | shape | status |", "|---|---|---|"]
+    for r in recs:
+        if "multi_pod" not in r.get("mesh", ""):
+            continue
+        note = "" if r["status"] != "skipped" else " (documented skip)"
+        lines.append(f"| {r['arch']} | {r['shape']} "
+                     f"| {r['status']}{note} |")
+    return "\n".join(lines) + "\n"
+
+
+def roofline_rows(full: bool = False) -> List[Row]:
+    recs = load_records()
+    if not recs:
+        return [("roofline/table", 0.0, "no dryrun records yet")]
+    md = render_markdown(recs)
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write(md)
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skip = sum(1 for r in recs if r["status"] == "skipped")
+    fail = sum(1 for r in recs if r["status"] == "error")
+    rows: List[Row] = [("roofline/summary", 0.0,
+                        f"ok={ok};skipped={skip};failed={fail};"
+                        f"md={os.path.relpath(OUT_MD)}")]
+    # headline: worst and best MFU among ok single-pod cells
+    cells = [(r["arch"] + "/" + r["shape"], r["roofline"]["mfu"])
+             for r in recs if r["status"] == "ok"
+             and "single_pod" in r["mesh"]]
+    if cells:
+        worst = min(cells, key=lambda kv: kv[1])
+        best = max(cells, key=lambda kv: kv[1])
+        rows.append(("roofline/mfu_range", 0.0,
+                     f"worst={worst[0]}:{worst[1]:.3f};"
+                     f"best={best[0]}:{best[1]:.3f}"))
+    return rows

@@ -1,0 +1,55 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig05]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale budgets (400 evals per experiment)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import lenet_bench, lm_precision, paper_figs
+    from benchmarks import roofline_table
+
+    benches = [
+        ("fig04", paper_figs.fig04_flop_breakdown),
+        ("fig05_06", paper_figs.fig05_06_wp_vs_cip),
+        ("fig07", paper_figs.fig07_memory_savings),
+        ("fig08", paper_figs.fig08_precision_target),
+        ("fig09", paper_figs.fig09_fcs_radar),
+        ("table3", paper_figs.table3_robustness),
+        ("lenet", lenet_bench.lenet_case_study),
+        ("lm_precision", lm_precision.lm_precision),
+        ("roofline", roofline_table.roofline_rows),
+    ]
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        try:
+            rows = fn(full=args.full)
+        except Exception as e:
+            failed += 1
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name},0,ERROR:{type(e).__name__}")
+            continue
+        for (rname, us, derived) in rows:
+            print(f"{rname},{us:.0f},{derived}")
+    if failed:
+        raise SystemExit(f"{failed} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

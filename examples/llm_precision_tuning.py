@@ -1,0 +1,37 @@
+"""Beyond-paper: NEAT per-layer-class precision for an assigned LM arch
+(reduced config). The same placement machinery the CNN study used, on the
+production model code — the bits NEAT picks feed the scope-mode STE
+truncation for serving (launch/serve.py --rule).
+
+  PYTHONPATH=src python examples/llm_precision_tuning.py
+"""
+import jax
+
+from repro.configs import get_arch
+from repro.core import ExplorationTask, explore
+from repro.models import build_model
+
+cfg = get_arch("h2o-danube-3-4b").reduced(n_layers=2, d_model=64,
+                                          n_heads=4, d_ff=128, vocab=256)
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+toks = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab_size)
+toks2 = jax.random.randint(jax.random.key(2), (4, 32), 0, cfg.vocab_size)
+
+task = ExplorationTask(
+    name=f"lm/{cfg.name}", fn=lambda t: model.forward(params, t),
+    train_inputs=[(toks,)], test_inputs=[(toks2,)])
+
+report = explore(task, family="plc", n_sites=8, pop_size=14, n_gen=4,
+                 max_evals=80, seed=0)
+
+print(f"explored {report.n_evals} configs over layer classes:")
+print("  sites:", report.sites)
+for thr in (0.01, 0.05, 0.10):
+    print(f"savings @ {int(thr*100)}% output error: "
+          f"{report.savings(thr)*100:.1f}%")
+g = report.best_genome(0.05)
+if g is not None:
+    print("recommended bits @5%:",
+          {s.split('/')[-1]: int(b) for s, b in zip(report.sites, g)})
+print(f"robustness R_error = {report.robustness_error_r:.3f}")

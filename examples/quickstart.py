@@ -1,0 +1,33 @@
+"""Quickstart: explore the accuracy/energy tradeoff of a program with
+NEAT — the paper's §IV workflow in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.apps import get_app, make_task
+from repro.core import explore, profile
+
+# 1. Profile the program (paper step 1): which functions burn FLOPs?
+app = get_app("blackscholes")
+task = make_task(app, n_train=3, n_test=2)
+prof = profile(app.fn, *task.train_inputs[0])
+print("top FLOP functions:", prof.top_functions(5))
+print("coverage of top-5:", round(prof.coverage(prof.top_functions(5)), 3))
+
+# 2-5. Pick a placement family, let NSGA-II explore (<=400 configs),
+#      and read the frontier (paper steps 2-5).
+report = explore(task, family="cip", n_sites=4,
+                 pop_size=16, n_gen=5, max_evals=120, seed=0)
+
+print(f"\nexplored {report.n_evals} configurations")
+print("lower convex hull (error rate, normalized FPU energy):")
+for p in report.hull:
+    print(f"  err={p.error:8.5f}  energy={p.energy:6.3f}  "
+          f"bits={p.payload['genome']}")
+
+for thr in (0.01, 0.05, 0.10):
+    print(f"FPU energy savings @ {int(thr*100)}% error budget: "
+          f"{report.savings(thr)*100:.1f}%")
+print(f"robustness on unseen inputs: R_error="
+      f"{report.robustness_error_r:.3f}")

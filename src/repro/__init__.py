@@ -1,0 +1,4 @@
+"""repro — NEAT (automated floating-point approximation exploration) as a
+production JAX/TPU training + inference framework."""
+
+__version__ = "1.0.0"

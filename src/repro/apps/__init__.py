@@ -1,0 +1,15 @@
+"""JAX ports of the paper's benchmark suite (Parsec/Rodinia analogues).
+
+Each app is a pure numerical JAX program with ``pscope``-annotated
+functions — the exact structure NEAT instruments: blackscholes (finance),
+kmeans (clustering), particlefilter (tracking, double precision), radar
+(LPF + pulse compression sharing one FFT — the FCS showcase),
+fluidanimate (SPH), heartwall (template correlation, accuracy-critical),
+ferret (mixed float/double — the optimization-target study), and the
+LeNet-5 CNN case study.
+"""
+from repro.apps.registry import App, app_registry, get_app, make_task
+from repro.apps import (  # noqa: F401  (importing registers)
+    blackscholes, kmeans, particlefilter, radar, fluidanimate, heartwall,
+    ferret,
+)

@@ -1,0 +1,51 @@
+"""Blackscholes (Parsec): closed-form European option pricing.
+
+Paper Table II: 4 FLOP functions -> config space 24^4. Scopes: cndf,
+d_terms, call_price, put_price.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.registry import App, app_registry
+from repro.core.scope import pscope
+
+INV_SQRT2 = 0.7071067811865476
+
+
+def _cndf(x):
+    with pscope("cndf"):
+        return 0.5 * (1.0 + jax.lax.erf(x * INV_SQRT2))
+
+
+def _d_terms(spot, strike, rate, vol, t):
+    with pscope("d_terms"):
+        sig_sqrt = vol * jnp.sqrt(t)
+        d1 = (jnp.log(spot / strike) + (rate + 0.5 * vol * vol) * t) / sig_sqrt
+        d2 = d1 - sig_sqrt
+        return d1, d2
+
+
+def price(spot, strike, rate, vol, t):
+    d1, d2 = _d_terms(spot, strike, rate, vol, t)
+    disc = jnp.exp(-rate * t)
+    with pscope("call_price"):
+        call = spot * _cndf(d1) - strike * disc * _cndf(d2)
+    with pscope("put_price"):
+        put = strike * disc * _cndf(-d2) - spot * _cndf(-d1)
+    return call, put
+
+
+def make_inputs(key, n: int = 4096):
+    ks = jax.random.split(key, 5)
+    spot = jax.random.uniform(ks[0], (n,), jnp.float32, 10.0, 200.0)
+    strike = jax.random.uniform(ks[1], (n,), jnp.float32, 10.0, 200.0)
+    rate = jax.random.uniform(ks[2], (n,), jnp.float32, 0.005, 0.1)
+    vol = jax.random.uniform(ks[3], (n,), jnp.float32, 0.05, 0.9)
+    t = jax.random.uniform(ks[4], (n,), jnp.float32, 0.1, 3.0)
+    return (spot, strike, rate, vol, t)
+
+
+app_registry.register("blackscholes", App(
+    name="blackscholes", fn=price, make_inputs=make_inputs))

@@ -1,0 +1,51 @@
+"""Ferret (Parsec): content-based image similarity — feature extraction in
+*single* precision, ranking distances in *double* (the paper's Fig. 4
+shows ferret carrying an even float/double mix; Fig. 8 studies which
+optimization target pays more). Requires x64 for the double half.
+
+Scopes: features (f32), project (f32), rank (f64).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.registry import App, app_registry
+from repro.core.scope import pscope
+
+NIMG = 24
+DIMG = 64
+DFEAT = 32
+
+
+def _features(images, proj):
+    with pscope("features"):
+        f = jnp.tanh(images @ proj)        # f32 extraction
+        return f / (1e-6 + jnp.linalg.norm(f, axis=-1, keepdims=True))
+
+
+def _rank(feats, query):
+    with pscope("rank"):
+        f64 = feats.astype(jnp.float64)
+        q64 = query.astype(jnp.float64)
+        d = jnp.sum((f64 - q64[None, :]) ** 2, axis=-1)
+        scores = jnp.exp(-d)
+        return scores / jnp.sum(scores)
+
+
+def ferret(images, proj, query_image):
+    feats = _features(images, proj)
+    q = _features(query_image[None, :], proj)[0]
+    return _rank(feats, q)
+
+
+def make_inputs(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    images = jax.random.normal(k1, (NIMG, DIMG), jnp.float32)
+    proj = jax.random.normal(k2, (DIMG, DFEAT), jnp.float32) / 8.0
+    query = images[0] + jax.random.normal(k3, (DIMG,), jnp.float32) * 0.1
+    return (images, proj, query)
+
+
+app_registry.register("ferret", App(
+    name="ferret", fn=ferret, make_inputs=make_inputs))

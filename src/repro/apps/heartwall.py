@@ -1,0 +1,62 @@
+"""Heartwall (Rodinia): template tracking by normalized cross-correlation.
+The paper notes heartwall has only two FLOP functions and both are very
+bit-width sensitive (NEAT cannot push FPU energy below 71% at sane error)
+— the normalization division amplifies truncation error. Scopes:
+correlate, normalize."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.registry import App, app_registry
+from repro.core.scope import pscope
+
+IMG = 48
+TPL = 9
+
+
+def _correlate(image, template):
+    with pscope("correlate"):
+        out = jax.lax.conv_general_dilated(
+            image[None, :, :, None], template[:, :, None, None],
+            window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))[0, :, :, 0]
+        return out
+
+
+def _normalize(corr, image, template):
+    with pscope("normalize"):
+        ones = jnp.ones((TPL, TPL, 1, 1), image.dtype)
+        local_sum = jax.lax.conv_general_dilated(
+            image[None, :, :, None], ones, (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))[0, :, :, 0]
+        local_sq = jax.lax.conv_general_dilated(
+            (image * image)[None, :, :, None], ones, (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))[0, :, :, 0]
+        n = TPL * TPL
+        t_mean = jnp.mean(template)
+        t_var = jnp.sum((template - t_mean) ** 2)
+        num = corr - local_sum * t_mean
+        den = jnp.sqrt(jnp.maximum(
+            (local_sq - local_sum * local_sum / n) * t_var, 1e-8))
+        return num / den
+
+
+def heartwall(image, template):
+    corr = _correlate(image, template)
+    ncc = _normalize(corr, image, template)
+    return ncc
+
+
+def make_inputs(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    template = jax.random.normal(k1, (TPL, TPL), jnp.float32)
+    image = jax.random.normal(k2, (IMG, IMG), jnp.float32) * 0.3
+    r, c = jax.random.randint(k3, (2,), 5, IMG - TPL - 5)
+    image = jax.lax.dynamic_update_slice(
+        image, template + image[r:r + TPL, c:c + TPL] * 0.0, (r, c))
+    return (image, template)
+
+
+app_registry.register("heartwall", App(
+    name="heartwall", fn=heartwall, make_inputs=make_inputs))

@@ -1,0 +1,53 @@
+"""Kmeans (Rodinia): Lloyd iterations on synthetic clusters.
+
+Scopes: distance (the FLOP-dominant function), update, inertia.
+Assignment (argmin) is integer — not intercepted, as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.registry import App, app_registry
+from repro.core.scope import pscope
+
+K = 8
+ITERS = 6
+
+
+def _distances(points, centroids):
+    with pscope("distance"):
+        diff = points[:, None, :] - centroids[None, :, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+
+def _update(points, assign):
+    with pscope("update"):
+        onehot = jax.nn.one_hot(assign, K, dtype=points.dtype)
+        sums = onehot.T @ points
+        counts = jnp.maximum(onehot.sum(0)[:, None], 1.0)
+        return sums / counts
+
+
+def kmeans(points, centroids):
+    for _ in range(ITERS):
+        d = _distances(points, centroids)
+        assign = jnp.argmin(d, axis=-1)
+        centroids = _update(points, assign)
+    with pscope("inertia"):
+        d = _distances(points, centroids)
+        inertia = jnp.sum(jnp.min(d, axis=-1))
+    return centroids, inertia
+
+
+def make_inputs(key, n: int = 2048, dim: int = 8):
+    k1, k2, k3 = jax.random.split(key, 3)
+    true_c = jax.random.normal(k1, (K, dim), jnp.float32) * 4.0
+    label = jax.random.randint(k2, (n,), 0, K)
+    pts = true_c[label] + jax.random.normal(k3, (n, dim), jnp.float32)
+    init = true_c + 0.5   # deterministic perturbed init
+    return (pts, init)
+
+
+app_registry.register("kmeans", App(
+    name="kmeans", fn=kmeans, make_inputs=make_inputs))

@@ -1,0 +1,69 @@
+"""Particlefilter (Rodinia): 2-D object tracking, double precision
+(paper sets the double optimization target here; Table II: 53^10).
+
+Scopes: propagate, likelihood, normalize, estimate. Resampling uses
+integer indices (not intercepted). Requires x64 — run the exploration
+under ``jax.experimental.enable_x64``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.registry import App, app_registry
+from repro.core.scope import pscope
+
+T = 8      # time steps
+P = 512    # particles
+
+
+def _propagate(parts, noise):
+    with pscope("propagate"):
+        return parts + 0.8 * noise + 0.15
+
+
+def _likelihood(parts, obs):
+    with pscope("likelihood"):
+        d2 = jnp.sum((parts - obs[None, :]) ** 2, axis=-1)
+        return jnp.exp(-0.5 * d2)
+
+
+def _normalize(w):
+    with pscope("normalize"):
+        return w / jnp.sum(w)
+
+
+def _estimate(parts, w):
+    with pscope("estimate"):
+        return jnp.sum(parts * w[:, None], axis=0)
+
+
+def particle_filter(init_parts, noises, observations):
+    """init_parts: (P,2) f64; noises: (T,P,2); observations: (T,2)."""
+    parts = init_parts
+    est = []
+    for t in range(T):
+        parts = _propagate(parts, noises[t])
+        w = _likelihood(parts, observations[t])
+        w = _normalize(w)
+        est.append(_estimate(parts, w))
+        # systematic resampling (integer gather, not intercepted)
+        cum = jnp.cumsum(w)
+        u = (jnp.arange(P) + 0.5) / P
+        idx = jnp.searchsorted(cum, u)
+        parts = parts[jnp.clip(idx, 0, P - 1)]
+    return jnp.stack(est)
+
+
+def make_inputs(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    init = jax.random.normal(k1, (P, 2), jnp.float64)
+    noises = jax.random.normal(k2, (T, P, 2), jnp.float64) * 0.3
+    truth = jnp.cumsum(jnp.full((T, 2), 0.95, jnp.float64), axis=0)
+    obs = truth + jax.random.normal(k3, (T, 2), jnp.float64) * 0.2
+    return (init, noises, obs)
+
+
+app_registry.register("particlefilter", App(
+    name="particlefilter", fn=particle_filter, make_inputs=make_inputs,
+    target="double"))

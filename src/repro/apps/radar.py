@@ -1,0 +1,108 @@
+"""Radar (paper Fig. 3/9): embedded ground-moving-target pipeline with a
+low-pass filter (LPF) and pulse compression (PC), BOTH calling one shared
+FFT routine — the paper's motivating example for FCS placement: under CIP
+the FFT gets one FPI everywhere; under FCS the LPF's FFT and the PC's FFT
+can differ.
+
+The FFT is a real split-complex radix-2 implementation so every butterfly
+is visible float arithmetic (interceptable FLOPs, exactly like the
+compiled C binary Pin instruments).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps.registry import App, app_registry
+from repro.core.scope import pscope
+
+N = 256    # pulse length (power of two)
+PULSES = 8
+
+
+def _fft(re, im, inverse: bool = False):
+    """Iterative radix-2 DIT FFT over the last axis (split complex)."""
+    with pscope("fft"):
+        n = re.shape[-1]
+        bits = int(math.log2(n))
+        # bit-reversal permutation (static integer gather)
+        idx = jnp.arange(n)
+        rev = jnp.zeros_like(idx)
+        for b in range(bits):
+            rev = rev | (((idx >> b) & 1) << (bits - 1 - b))
+        re = jnp.take(re, rev, axis=-1)
+        im = jnp.take(im, rev, axis=-1)
+        sign = 1.0 if inverse else -1.0
+        for s in range(1, bits + 1):
+            m = 1 << s
+            half = m // 2
+            k = jnp.arange(n) % m
+            ang = sign * 2.0 * math.pi * (k % half) / m
+            wr = jnp.cos(ang).astype(re.dtype)
+            wi = jnp.sin(ang).astype(re.dtype)
+            is_hi = (k >= half)
+            partner = jnp.where(is_hi, jnp.arange(n) - half,
+                                jnp.arange(n) + half)
+            pr = jnp.take(re, partner, axis=-1)
+            pi = jnp.take(im, partner, axis=-1)
+            # hi lanes hold the twiddled term
+            tr = jnp.where(is_hi, re * wr - im * wi, pr * wr - pi * wi)
+            ti = jnp.where(is_hi, re * wi + im * wr, pr * wi + pi * wr)
+            re = jnp.where(is_hi, pr - tr, re + tr)
+            im = jnp.where(is_hi, pi - ti, im + ti)
+        if inverse:
+            re = re / n
+            im = im / n
+        return re, im
+
+
+def _lpf(re, im, response):
+    """Low-pass filter: FFT -> multiply response -> IFFT."""
+    with pscope("lpf"):
+        fr, fi = _fft(re, im)
+        fr = fr * response
+        fi = fi * response
+        return _fft(fr, fi, inverse=True)
+
+
+def _pulse_compress(re, im, chirp_re, chirp_im):
+    """Matched filter: FFT -> multiply conj(chirp spectrum) -> IFFT."""
+    with pscope("pc"):
+        fr, fi = _fft(re, im)
+        cr, ci = _fft(chirp_re, chirp_im)
+        mr = fr * cr + fi * ci           # x * conj(c)
+        mi = fi * cr - fr * ci
+        return _fft(mr, mi, inverse=True)
+
+
+def radar(re, im, response, chirp_re, chirp_im):
+    """re/im: (PULSES, N) echo pulses."""
+    lr, li = _lpf(re, im, response)
+    pr, pi = _pulse_compress(lr, li, chirp_re, chirp_im)
+    with pscope("detect"):
+        power = pr * pr + pi * pi
+        return power
+
+
+def make_inputs(key):
+    ks = jax.random.split(key, 3)
+    t = jnp.arange(N, dtype=jnp.float32) / N
+    # linear chirp
+    chirp_re = jnp.cos(2 * math.pi * (20 * t + 40 * t * t))
+    chirp_im = jnp.sin(2 * math.pi * (20 * t + 40 * t * t))
+    delay = jax.random.randint(ks[0], (PULSES,), 10, N // 2)
+    amp = jax.random.uniform(ks[1], (PULSES, 1), jnp.float32, 0.5, 2.0)
+    base = jnp.stack([jnp.roll(chirp_re, int(d)) for d in delay])
+    re = amp * base + jax.random.normal(ks[2], (PULSES, N)) * 0.1
+    im = jnp.zeros_like(re)
+    freq = jnp.fft.fftfreq(N)
+    response = (jnp.abs(freq) < 0.25).astype(jnp.float32)
+    return (re, im, response,
+            jnp.broadcast_to(chirp_re, (PULSES, N)),
+            jnp.broadcast_to(chirp_im, (PULSES, N)))
+
+
+app_registry.register("radar", App(
+    name="radar", fn=radar, make_inputs=make_inputs))

@@ -1,0 +1,40 @@
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+
+from repro.core.explorer import ExplorationTask, default_error_fn
+from repro.utils.registry import Registry
+
+
+@dataclasses.dataclass
+class App:
+    name: str
+    fn: Callable                        # pure: (*inputs) -> outputs
+    make_inputs: Callable               # (key) -> input tuple
+    error_fn: Callable = default_error_fn
+    target: str = "single"              # paper's optimization target
+    n_train: int = 5                    # paper: multiple train/test inputs
+    n_test: int = 5
+
+
+app_registry: Registry[App] = Registry("app")
+
+
+def get_app(name: str) -> App:
+    return app_registry.get(name)
+
+
+def make_task(app: App, *, seed: int = 0, n_train: Optional[int] = None,
+              n_test: Optional[int] = None) -> ExplorationTask:
+    key = jax.random.key(seed)
+    nt = n_train if n_train is not None else app.n_train
+    nv = n_test if n_test is not None else app.n_test
+    keys = jax.random.split(key, nt + nv)
+    train = [app.make_inputs(k) for k in keys[:nt]]
+    test = [app.make_inputs(k) for k in keys[nt:]]
+    return ExplorationTask(name=app.name, fn=app.fn, train_inputs=train,
+                           test_inputs=test, error_fn=app.error_fn,
+                           target=app.target)

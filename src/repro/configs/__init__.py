@@ -1,0 +1,10 @@
+"""Assigned-architecture configs (one module per arch) + shape sets."""
+from repro.configs.registry import arch_registry, get_arch, list_archs
+from repro.configs.shapes import SHAPES, InputShape, shape_cells
+
+# importing registers every arch
+from repro.configs import (  # noqa: F401
+    chameleon_34b, qwen3_moe_30b_a3b, granite_moe_1b_a400m, qwen2_5_32b,
+    qwen2_72b, h2o_danube3_4b, codeqwen1_5_7b, xlstm_1_3b,
+    seamless_m4t_medium, zamba2_7b,
+)

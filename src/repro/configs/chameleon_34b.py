@@ -1,0 +1,18 @@
+"""chameleon-34b [vlm] — early-fusion multimodal LM (arXiv:2405.09818).
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536 (text + VQ image
+codes in one table). Backbone only; the VQ-VAE image tokenizer is a stub —
+image patches arrive as ordinary token ids (early fusion means exactly
+this). Chameleon uses qk-norm for stability; swiglu; untied embeddings.
+"""
+from repro.configs.registry import arch_registry
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22016, vocab_size=65536,
+    qk_norm=True, act="swiglu", norm="rmsnorm",
+)
+
+arch_registry.register("chameleon-34b", CONFIG)

@@ -1,0 +1,15 @@
+"""codeqwen1.5-7b [dense] — hf:Qwen/CodeQwen1.5-7B (qwen1.5 arch).
+
+32L d_model=4096 32H (kv=32 -> full MHA) d_ff=13440 vocab=92416; QKV bias.
+"""
+from repro.configs.registry import arch_registry
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=13440, vocab_size=92416,
+    qkv_bias=True, act="swiglu", norm="rmsnorm", rope_theta=1e6,
+)
+
+arch_registry.register("codeqwen1.5-7b", CONFIG)

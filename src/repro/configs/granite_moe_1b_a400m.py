@@ -1,0 +1,17 @@
+"""granite-moe-1b-a400m [moe] — hf:ibm-granite/granite-3.0-1b-a400m-base.
+
+24L d_model=1024 16H (GQA kv=8) d_ff=512 (per expert) vocab=49155,
+MoE 32 experts top-8; tied embeddings (granite ties).
+"""
+from repro.configs.registry import arch_registry
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8,
+    d_ff=512, vocab_size=49155,
+    n_experts=32, top_k=8,
+    act="swiglu", norm="rmsnorm", tie_embeddings=True,
+)
+
+arch_registry.register("granite-moe-1b-a400m", CONFIG)

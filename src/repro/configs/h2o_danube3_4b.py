@@ -1,0 +1,16 @@
+"""h2o-danube-3-4b [dense] — arXiv:2401.16818 (danube line).
+
+24L d_model=3840 32H (GQA kv=8) d_ff=10240 vocab=32000; llama+mistral mix
+with sliding-window attention -> sub-quadratic, runs long_500k.
+"""
+from repro.configs.registry import arch_registry
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+    d_ff=10240, vocab_size=32000,
+    sliding_window=4096, act="swiglu", norm="rmsnorm",
+)
+
+arch_registry.register("h2o-danube-3-4b", CONFIG)

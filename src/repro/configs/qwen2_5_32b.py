@@ -1,0 +1,15 @@
+"""qwen2.5-32b [dense] — Qwen2.5 family (hf:Qwen/Qwen2.5-*).
+
+64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064; QKV bias on.
+"""
+from repro.configs.registry import arch_registry
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=27648, vocab_size=152064,
+    qkv_bias=True, act="swiglu", norm="rmsnorm", rope_theta=1e6,
+)
+
+arch_registry.register("qwen2.5-32b", CONFIG)

@@ -1,0 +1,15 @@
+"""qwen2-72b [dense] — arXiv:2407.10671.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064; QKV bias on.
+"""
+from repro.configs.registry import arch_registry
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=29568, vocab_size=152064,
+    qkv_bias=True, act="swiglu", norm="rmsnorm", rope_theta=1e6,
+)
+
+arch_registry.register("qwen2-72b", CONFIG)

@@ -1,0 +1,17 @@
+"""qwen3-moe-30b-a3b [moe] — hf:Qwen/Qwen3-30B-A3B.
+
+48L d_model=2048 32H (GQA kv=4) d_ff=768 (per expert) vocab=151936,
+MoE 128 experts top-8. Qwen3 uses qk-norm, no QKV bias, head_dim=128.
+"""
+from repro.configs.registry import arch_registry
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4,
+    d_ff=768, vocab_size=151936, head_dim=128,
+    n_experts=128, top_k=8,
+    qk_norm=True, act="swiglu", norm="rmsnorm", rope_theta=1e6,
+)
+
+arch_registry.register("qwen3-moe-30b-a3b", CONFIG)

@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+from repro.utils.registry import Registry
+
+arch_registry: Registry[ModelConfig] = Registry("architecture")
+
+
+def get_arch(name: str) -> ModelConfig:
+    return arch_registry.get(name)
+
+
+def list_archs() -> list[str]:
+    return arch_registry.names()

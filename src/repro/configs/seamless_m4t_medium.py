@@ -1,0 +1,18 @@
+"""seamless-m4t-medium [audio] — arXiv:2308.11596.
+
+Enc-dec backbone: 12L encoder + 12L decoder, d_model=1024 16H (MHA kv=16)
+d_ff=4096 vocab=256206. Speech frontend is a STUB per the assignment:
+input_specs supplies precomputed frame embeddings.
+"""
+from repro.configs.registry import arch_registry
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec",
+    n_layers=24, n_enc_layers=12, n_dec_layers=12,
+    d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab_size=256206,
+    norm="layernorm", act="gelu",
+)
+
+arch_registry.register("seamless-m4t-medium", CONFIG)

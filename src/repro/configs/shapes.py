@@ -1,0 +1,49 @@
+"""The four assigned input-shape sets (same for every LM arch).
+
+``train_4k`` lowers ``train_step``; ``prefill_32k`` lowers a full-sequence
+forward; ``decode_32k`` / ``long_500k`` lower ``serve_step`` (one token
+against a KV cache of ``seq_len``). ``long_500k`` requires sub-quadratic
+attention — ``applies`` encodes the skip rule from the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+    def applies(self, cfg: ModelConfig) -> bool:
+        if self.name == "long_500k":
+            return cfg.is_subquadratic
+        return True
+
+    def skip_reason(self, cfg: ModelConfig) -> str:
+        if self.name == "long_500k" and not cfg.is_subquadratic:
+            return ("pure full-attention arch: 524k-token KV/O(T^2) "
+                    "attention exceeds the assignment's sub-quadratic "
+                    "requirement (skip noted in DESIGN.md)")
+        return ""
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", seq_len=4_096, global_batch=256,
+                           kind="train"),
+    "prefill_32k": InputShape("prefill_32k", seq_len=32_768, global_batch=32,
+                              kind="prefill"),
+    "decode_32k": InputShape("decode_32k", seq_len=32_768, global_batch=128,
+                             kind="decode"),
+    "long_500k": InputShape("long_500k", seq_len=524_288, global_batch=1,
+                            kind="decode"),
+}
+
+
+def shape_cells(cfg: ModelConfig):
+    """All (shape, applies?) cells for an arch, in canonical order."""
+    return [(s, s.applies(cfg)) for s in SHAPES.values()]

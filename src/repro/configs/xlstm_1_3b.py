@@ -1,0 +1,19 @@
+"""xlstm-1.3b [ssm] — arXiv:2405.04517 (xLSTM[7:1]).
+
+48 blocks d_model=2048 4 heads vocab=50304, d_ff=0 (blocks carry their own
+projections); every 8th block sLSTM, rest mLSTM. Constant-state recurrence
+-> sub-quadratic, runs long_500k.
+"""
+from repro.configs.registry import arch_registry
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    block_kinds=tuple("slstm" if (i % 8) == 7 else "mlstm"
+                      for i in range(48)),
+    norm="layernorm", act="gelu",
+)
+
+arch_registry.register("xlstm-1.3b", CONFIG)

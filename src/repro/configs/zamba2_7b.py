@@ -1,0 +1,19 @@
+"""zamba2-7b [hybrid] — arXiv:2411.15242.
+
+81 Mamba2 blocks d_model=3584, ssm_state=64, + ONE weight-shared
+attention+MLP block (32H kv=32, d_ff=14336) invoked every 6 blocks
+(we omit per-invocation LoRA; DESIGN.md). Hybrid -> runs long_500k.
+"""
+from repro.configs.registry import arch_registry
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    ssm_state=64, ssm_conv=4, ssm_expand=2, ssm_heads=112,
+    attn_period=6,
+    act="swiglu", norm="rmsnorm",
+)
+
+arch_registry.register("zamba2-7b", CONFIG)

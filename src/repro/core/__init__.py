@@ -1,0 +1,29 @@
+"""NEAT core — the paper's contribution as composable JAX modules."""
+from repro.core.fpi import (
+    FpImplementation, Identity, IDENTITY, MantissaTrunc, OperandTrunc,
+    PerOpTrunc, LambdaFPI, single_precision_fpis, double_precision_fpis,
+    fpi_registry,
+)
+from repro.core.placement import (
+    PlacementRule, WholeProgram, CurrentScope, CallStack, LayerCategory,
+    LayerInstance, rule_from_genome, register_fp_selector, selector_registry,
+)
+from repro.core.scope import pscope, current_stack, scope_path
+from repro.core.quantize import (
+    neat_quantize, quantize_here, use_rule, active_rule, ste_truncate,
+)
+from repro.core.interpreter import neat_transform, neat_transform_dynamic
+from repro.core.profiler import profile, Profile
+from repro.core.energy import (
+    EnergyReport, static_energy, census_energy, dynamic_fpu_energy,
+    EPI_PJ, MEM_PJ_PER_BYTE,
+)
+from repro.core.nsga2 import nsga2, NSGA2Result, Evaluated, pareto_front
+from repro.core.pareto import (
+    TradeoffPoint, pareto_points, lower_convex_hull, energy_at_threshold,
+    savings_at_threshold, harmonic_mean, correlation,
+)
+from repro.core.explorer import (
+    ExplorationTask, ExplorationReport, explore, default_error_fn,
+    sites_for_family,
+)

@@ -1,0 +1,199 @@
+"""The NEAT exploration driver — paper §IV steps 1-6 end to end.
+
+Given an application (a pure JAX function with `pscope`-annotated regions
+and train/test input sets), the explorer:
+
+1. profiles it (FLOP census per scope, top-N function selection),
+2. compiles one dynamic-bits evaluator per placement family,
+3. runs NSGA-II over per-site mantissa widths (<= 400 unique configs),
+4. reports the (error, energy) tradeoff points, lower convex hull and
+   quantized savings, and
+5. re-evaluates frontier configs on unseen test inputs for the paper's
+   robustness correlations (Table III).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as energy_mod
+from repro.core.interpreter import neat_transform_dynamic
+from repro.core.nsga2 import Evaluated, NSGA2Result, nsga2
+from repro.core.pareto import (TradeoffPoint, correlation, lower_convex_hull,
+                               pareto_points, savings_at_threshold)
+from repro.core.placement import default_categorizer, rule_from_genome
+from repro.core.profiler import Profile, profile
+from repro.utils.numerics import float_spec
+
+
+def default_error_fn(approx, exact) -> float:
+    """Relative L2 error across all output leaves (paper's 'error rate':
+    relative difference vs. the no-approximation baseline)."""
+    num = 0.0
+    den = 0.0
+    for a, e in zip(jax.tree.leaves(approx), jax.tree.leaves(exact)):
+        a = np.asarray(a, dtype=np.float64)
+        e = np.asarray(e, dtype=np.float64)
+        if not np.all(np.isfinite(a)):
+            return float("inf")
+        num += float(np.sum((a - e) ** 2))
+        den += float(np.sum(e ** 2))
+    return math.sqrt(num / max(den, 1e-300))
+
+
+@dataclasses.dataclass
+class ExplorationTask:
+    name: str
+    fn: Callable
+    train_inputs: List[tuple]
+    test_inputs: List[tuple]
+    error_fn: Callable = default_error_fn
+    target: str = "single"           # paper §IV step 2 optimization target
+    mode: str = "rne"
+
+
+@dataclasses.dataclass
+class ExplorationReport:
+    task: str
+    family: str
+    sites: List[str]
+    points: List[TradeoffPoint]          # every evaluated config
+    hull: List[TradeoffPoint]
+    n_evals: int
+    baseline_fpu_pj: float
+    baseline_mem_pj: float
+    flop_coverage: float                 # paper: >=98% for top-10
+    robustness_error_r: float = 1.0
+    robustness_energy_r: float = 1.0
+
+    def savings(self, thr: float) -> float:
+        return savings_at_threshold(self.points, thr)
+
+    def mem_savings(self, thr: float) -> float:
+        pts = [TradeoffPoint(p.error, p.payload["mem"], p.payload)
+               for p in self.points]
+        return savings_at_threshold(pts, thr)
+
+    def best_genome(self, thr: float) -> Optional[Tuple[int, ...]]:
+        ok = [p for p in self.points if p.error <= thr]
+        if not ok:
+            return None
+        return min(ok, key=lambda p: p.energy).payload["genome"]
+
+
+def sites_for_family(prof: Profile, family: str, n_sites: int) -> List[str]:
+    if family == "wp":
+        return ["__program__"]
+    if family == "plc":
+        cats = {}
+        for path, st in prof.scopes.items():
+            if not path:
+                continue
+            cat = default_categorizer(tuple(path.split("/")))
+            # skip compiler-internal scopes (einsum specs etc.)
+            if not cat or any(c in cat for c in "->,<(["):
+                continue
+            cats[cat] = cats.get(cat, 0) + st.flops
+        return [k for k, _ in sorted(cats.items(), key=lambda kv: -kv[1])[:n_sites]]
+    if family == "pli":
+        return prof.top_paths(n_sites)
+    # cip / fcs: top FLOP-intensive *functions* (innermost frames) plus the
+    # rule's tunable default FPI (paper §III-B4: unmatched FLOPs use "a
+    # default implementation") — this also makes the per-function space a
+    # strict superset of WP.
+    return prof.top_functions(n_sites) + ["__default__"]
+
+
+def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
+            pop_size: int = 40, n_gen: int = 9, max_evals: int = 400,
+            seed: int = 0, robustness: bool = True,
+            include_transcendental: bool = False) -> ExplorationReport:
+    # 1. profile (paper step 1) -- census on the first training input
+    prof = profile(task.fn, *task.train_inputs[0])
+    sites = sites_for_family(prof, family, n_sites)
+    coverage = prof.coverage(sites) if family in ("cip", "fcs") else 1.0
+
+    full_bits = 53 if task.target == "double" else (
+        8 if task.target == "half" else 24)
+
+    # 2. exact baselines + energy baseline
+    exact = [jax.tree.map(np.asarray, task.fn(*inp))
+             for inp in task.train_inputs]
+    base = energy_mod.static_energy(prof, None)
+
+    # 3. one compiled dynamic-bits evaluator
+    g = neat_transform_dynamic(task.fn, family, sites, target=task.target,
+                               mode=task.mode,
+                               include_transcendental=include_transcendental)
+    g = jax.jit(g)
+
+    extras: Dict[Tuple[int, ...], Dict] = {}
+
+    def eval_genome(genome: Tuple[int, ...]) -> Tuple[float, float]:
+        bits = jnp.asarray(genome, jnp.int32)
+        errs = []
+        for inp, ex in zip(task.train_inputs, exact):
+            out = g(bits, *inp)
+            errs.append(task.error_fn(jax.tree.map(np.asarray, out), ex))
+        err = float(np.median(errs))
+        rule = rule_from_genome(family, sites, genome, target=task.target,
+                                mode=task.mode)
+        rep = energy_mod.static_energy(prof, rule)
+        e_fpu = rep.fpu_pj / max(base.fpu_pj, 1e-30)
+        e_mem = rep.mem_pj / max(base.mem_pj, 1e-30)
+        extras[tuple(genome)] = {"mem": e_mem, "genome": tuple(genome)}
+        # clamp unusable configs so NSGA-II can still rank them
+        if not math.isfinite(err):
+            err = 1e9
+        return (e_fpu, err)
+
+    # Seed the population with the "diagonal" (uniform-bits) genomes: the
+    # per-function families then strictly contain the whole-program
+    # solutions, so CIP/FCS/PLC/PLI can never do worse than WP at equal
+    # budget (the paper observes the GA occasionally losing to WP without
+    # this — Fig. 5 Fluidanimate/Ferret/Radar).
+    n_sites_eff = len(sites)
+    diag_bits = [b for b in range(2, full_bits + 1, 2)] + [full_bits]
+    diag_bits = sorted(set(diag_bits))[: max(4, max_evals // 6)]
+    seeds = [(b,) * n_sites_eff for b in diag_bits]
+
+    res: NSGA2Result = nsga2(
+        eval_genome, n_genes=len(sites), low=1, high=full_bits,
+        pop_size=pop_size, n_gen=n_gen, max_evals=max_evals, seed=seed,
+        seed_genomes=seeds)
+
+    points = [TradeoffPoint(error=e.objectives[1], energy=e.objectives[0],
+                            payload=extras[e.genome])
+              for e in res.evaluated]
+    hull = lower_convex_hull(points)
+
+    report = ExplorationReport(
+        task=task.name, family=family, sites=sites, points=points,
+        hull=hull, n_evals=res.n_evals,
+        baseline_fpu_pj=base.fpu_pj, baseline_mem_pj=base.mem_pj,
+        flop_coverage=coverage)
+
+    # 5. robustness on unseen inputs (paper §V-G)
+    if robustness and task.test_inputs:
+        test_exact = [jax.tree.map(np.asarray, task.fn(*inp))
+                      for inp in task.test_inputs]
+        frontier = pareto_points(points)[:16]
+        tr_err, te_err, tr_e, te_e = [], [], [], []
+        for p in frontier:
+            bits = jnp.asarray(p.payload["genome"], jnp.int32)
+            errs = [task.error_fn(jax.tree.map(np.asarray, g(bits, *inp)), ex)
+                    for inp, ex in zip(task.test_inputs, test_exact)]
+            errs = [e if math.isfinite(e) else 1e9 for e in errs]
+            tr_err.append(p.error)
+            te_err.append(float(np.median(errs)))
+            tr_e.append(p.energy)
+            te_e.append(p.energy)   # static energy is input-independent
+        report.robustness_error_r = correlation(tr_err, te_err)
+        report.robustness_energy_r = correlation(tr_e, te_e)
+
+    return report

@@ -1,0 +1,193 @@
+"""Floating Point Implementations (FPIs), paper §III-B3 / §IV step 3.
+
+An FPI describes *how* a floating point operation is approximated. The
+paper's evaluation uses mantissa bit truncation (24 FPIs for fp32, 53 for
+fp64); users may define custom FPIs by subclassing ``FpImplementation``
+(the paper's ``FpImplementation`` virtual class) and overriding
+``perform_operation`` to rewrite operands and/or results directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.utils.numerics import float_spec, truncate_mantissa
+from repro.utils.registry import Registry
+
+# Op classes an FPI may target (paper: "The FPI can be applied to one or
+# more floating point arithmetic instruction").
+OP_CLASSES = ("add", "sub", "mul", "div", "dot", "conv", "transcendental")
+
+fpi_registry: Registry["FpImplementation"] = Registry("fpi")
+
+
+class FpImplementation:
+    """Base FPI. Identity by default.
+
+    ``perform_operation`` mirrors the paper's PerformOperation subroutine:
+    it receives the op class, the would-be operands and the exactly
+    computed result, and returns the approximated result. The default
+    pipeline is quantize(result); subclasses may also pre-quantize
+    operands (see ``quantize_operands``).
+    """
+
+    name: str = "identity"
+    #: op classes this FPI applies to; others pass through untouched.
+    ops: Tuple[str, ...] = OP_CLASSES
+
+    def applies_to(self, op_class: str) -> bool:
+        return op_class in self.ops
+
+    def quantize(self, x: jnp.ndarray) -> jnp.ndarray:  # result transform
+        return x
+
+    def quantize_operands(self, op_class: str,
+                          operands: Sequence[jnp.ndarray]) -> Sequence[jnp.ndarray]:
+        return operands
+
+    def perform_operation(self, op_class: str, operands: Sequence[jnp.ndarray],
+                          result: jnp.ndarray) -> jnp.ndarray:
+        if not self.applies_to(op_class):
+            return result
+        return self.quantize(result)
+
+    # -- energy model hooks -------------------------------------------------
+    def mantissa_bits(self, dtype) -> int:
+        """Effective mantissa bits for the energy model (full = identity)."""
+        return float_spec(dtype).mantissa_bits
+
+    def __repr__(self):
+        return f"<FPI {self.name}>"
+
+
+class Identity(FpImplementation):
+    name = "identity"
+
+
+@dataclasses.dataclass(frozen=True)
+class MantissaTrunc(FpImplementation):
+    """The paper's FPI family: keep `bits` effective mantissa bits.
+
+    bits=24 (fp32) / 53 (fp64) is the identity; bits=8 on fp32 emulates a
+    bf16-mantissa FPU. ``mode="trunc"`` reproduces the paper's raw bit
+    truncation; ``"rne"`` (default) is round-to-nearest-even, which the
+    TPU-adapted kernels implement natively.
+    """
+    bits: int = 24
+    mode: str = "rne"
+    ops: Tuple[str, ...] = OP_CLASSES
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return f"mant{self.bits}{'t' if self.mode == 'trunc' else ''}"
+
+    def quantize(self, x: jnp.ndarray) -> jnp.ndarray:
+        spec = float_spec(x.dtype)
+        bits = min(self.bits, spec.mantissa_bits)
+        return truncate_mantissa(x, bits, self.mode)
+
+    def mantissa_bits(self, dtype) -> int:
+        return min(self.bits, float_spec(dtype).mantissa_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerOpTrunc(FpImplementation):
+    """Different mantissa widths per op class (paper §IV step 3 example:
+    8 bits for add/sub, 24 bits for mul)."""
+    bits_by_op: Tuple[Tuple[str, int], ...] = ()
+    mode: str = "rne"
+    default_bits: int = 24
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        inner = ",".join(f"{k}={v}" for k, v in self.bits_by_op)
+        return f"peropt({inner})"
+
+    @property
+    def ops(self) -> Tuple[str, ...]:  # type: ignore[override]
+        return OP_CLASSES
+
+    def _bits_for(self, op_class: str) -> int:
+        return dict(self.bits_by_op).get(op_class, self.default_bits)
+
+    def perform_operation(self, op_class, operands, result):
+        spec = float_spec(result.dtype)
+        bits = min(self._bits_for(op_class), spec.mantissa_bits)
+        return truncate_mantissa(result, bits, self.mode)
+
+    def mantissa_bits(self, dtype) -> int:
+        full = float_spec(dtype).mantissa_bits
+        vals = [min(v, full) for _, v in self.bits_by_op] or [self.default_bits]
+        return max(vals)
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandTrunc(FpImplementation):
+    """Truncate *operands* before the op (the fused-matmul kernel's
+    semantics): models an FPU whose input datapath is narrowed."""
+    bits: int = 24
+    mode: str = "rne"
+    ops: Tuple[str, ...] = OP_CLASSES
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return f"opmant{self.bits}"
+
+    def quantize_operands(self, op_class, operands):
+        if not self.applies_to(op_class):
+            return operands
+        out = []
+        for o in operands:
+            if hasattr(o, "dtype") and jnp.issubdtype(o.dtype, jnp.floating):
+                spec = float_spec(o.dtype)
+                out.append(truncate_mantissa(o, min(self.bits, spec.mantissa_bits),
+                                             self.mode))
+            else:
+                out.append(o)
+        return out
+
+    def perform_operation(self, op_class, operands, result):
+        return result  # operands already handled
+
+    def mantissa_bits(self, dtype) -> int:
+        return min(self.bits, float_spec(dtype).mantissa_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class LambdaFPI(FpImplementation):
+    """Arbitrary user FPI from a result-transform callable (e.g. a neural
+    approximation of `sin`, paper's [23])."""
+    fn: Callable[[jnp.ndarray], jnp.ndarray] = lambda x: x
+    label: str = "lambda"
+    ops: Tuple[str, ...] = OP_CLASSES
+    model_bits: int = 24
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return self.label
+
+    def quantize(self, x):
+        return self.fn(x)
+
+    def mantissa_bits(self, dtype) -> int:
+        return min(self.model_bits, float_spec(dtype).mantissa_bits)
+
+
+IDENTITY = Identity()
+
+
+def single_precision_fpis(mode: str = "rne") -> list[MantissaTrunc]:
+    """The paper's 24 fp32 FPIs (1..24 mantissa bits)."""
+    return [MantissaTrunc(bits=b, mode=mode) for b in range(1, 25)]
+
+
+def double_precision_fpis(mode: str = "rne") -> list[MantissaTrunc]:
+    """The paper's 53 fp64 FPIs (1..53 mantissa bits)."""
+    return [MantissaTrunc(bits=b, mode=mode) for b in range(1, 54)]
+
+
+fpi_registry.register("identity", IDENTITY)
+for _b in (4, 8, 10, 16, 24):
+    fpi_registry.register(f"mant{_b}", MantissaTrunc(bits=_b))

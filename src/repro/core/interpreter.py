@@ -1,0 +1,338 @@
+"""The NEAT jaxpr interpreter — the Pin-tool analogue (paper-faithful mode).
+
+``neat_transform(fn, rule)`` returns a function computing ``fn`` with every
+intercepted floating-point primitive replaced by the FPI the placement rule
+assigns, given the equation's *name stack* (recorded by ``pscope`` /
+``jax.named_scope`` at trace time). This reproduces Pin's per-FLOP dynamic
+replacement: CIP consults the innermost frame, FCS walks the stack outward
+— exactly the paper's semantics, at jaxpr granularity.
+
+Higher-order primitives (scan/while/cond/pjit/custom_jvp/...) are handled
+by re-emitting them with interpreted bodies, so the transform composes with
+``jax.jit`` and control flow.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.extend import core as jcore
+
+try:  # DropVar has no jax.extend home yet
+    from jax._src.core import DropVar as _DropVar
+except ImportError:  # pragma: no cover
+    class _DropVar:  # fallback: nothing matches
+        pass
+
+from repro.core.fpi import FpImplementation
+from repro.core.placement import PlacementRule
+from repro.core.scope import parse_name_stack
+
+# jax primitive name -> NEAT op class (paper: SSE ADDSS/SUBSS/MULSS/DIVSS +
+# their fp64 twins; dot/conv represent the same scalar madd streams a C
+# binary would execute — see DESIGN.md "changed assumptions").
+PRIM_OP_CLASS: Dict[str, str] = {
+    "add": "add",
+    "add_any": "add",
+    "sub": "sub",
+    "mul": "mul",
+    "div": "div",
+    "dot_general": "dot",
+    "conv_general_dilated": "conv",
+}
+
+TRANSCENDENTALS = {
+    "exp", "log", "tanh", "logistic", "sqrt", "rsqrt", "pow", "integer_pow",
+    "erf", "sin", "cos", "log1p", "expm1", "cbrt", "atan2",
+}
+
+DEFAULT_INTERCEPT = tuple(PRIM_OP_CLASS)
+
+
+def _op_class(prim_name: str, include_transcendental: bool) -> str | None:
+    cls = PRIM_OP_CLASS.get(prim_name)
+    if cls is None and include_transcendental and prim_name in TRANSCENDENTALS:
+        return "transcendental"
+    return cls
+
+
+def _read(env, var):
+    if isinstance(var, jcore.Literal):
+        return var.val
+    return env[var]
+
+
+def _float_out(outvars) -> bool:
+    for v in outvars:
+        aval = v.aval
+        if hasattr(aval, "dtype") and jnp.issubdtype(aval.dtype, jnp.floating):
+            return True
+    return False
+
+
+class NeatInterpreter:
+    def __init__(self, rule: PlacementRule, *,
+                 include_transcendental: bool = False):
+        self.rule = rule
+        self.include_transcendental = include_transcendental
+        # census of intercepted flops per (scope-path, op_class, dtype) —
+        # filled during interpretation, used by the dynamic energy model
+        self.census: Dict[Tuple[str, str, str], int] = {}
+
+    # -- interception hook (overridden by the dynamic-bits interpreter) ------
+    def intercept(self, stack: Tuple[str, ...], op_class: str,
+                  out_dtype) -> FpImplementation | None:
+        return self.rule.select(stack, op_class, out_dtype)
+
+    # -- sub-jaxpr helpers ---------------------------------------------------
+    def _closed_runner(self, closed: jcore.ClosedJaxpr,
+                       prefix: Tuple[str, ...]) -> Callable:
+        def run(*args):
+            return self.eval_jaxpr(closed.jaxpr, closed.consts, args, prefix)
+        return run
+
+    def _merge_stack(self, prefix: Tuple[str, ...],
+                     inner: Tuple[str, ...]) -> Tuple[str, ...]:
+        # inner name stacks of sub-jaxprs may or may not already carry the
+        # outer frames; avoid duplicating a shared prefix.
+        if prefix and inner[:len(prefix)] == prefix:
+            return inner
+        return prefix + inner
+
+    # -- the interpreter ------------------------------------------------------
+    def eval_jaxpr(self, jaxpr: jcore.Jaxpr, consts, args,
+                   prefix: Tuple[str, ...] = ()):
+        env: Dict = {}
+        for v, c in zip(jaxpr.constvars, consts):
+            env[v] = c
+        for v, a in zip(jaxpr.invars, args):
+            env[v] = a
+
+        for eqn in jaxpr.eqns:
+            invals = [_read(env, v) for v in eqn.invars]
+            prim = eqn.primitive
+            name = prim.name
+            stack = self._merge_stack(
+                prefix, parse_name_stack(eqn.source_info.name_stack))
+
+            if name == "pjit":
+                closed = eqn.params["jaxpr"]
+                outvals = self.eval_jaxpr(closed.jaxpr, closed.consts,
+                                          invals, stack)
+            elif name in ("custom_jvp_call", "custom_vjp_call",
+                          "custom_vjp_call_jaxpr"):
+                closed = eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")
+                outvals = self.eval_jaxpr(closed.jaxpr, closed.consts,
+                                          invals, stack)
+            elif name == "remat2" or name == "checkpoint":
+                inner = eqn.params["jaxpr"]  # plain Jaxpr, no consts
+                outvals = self.eval_jaxpr(inner, (), invals, stack)
+            elif name == "scan":
+                outvals = self._eval_scan(eqn, invals, stack)
+            elif name == "while":
+                outvals = self._eval_while(eqn, invals, stack)
+            elif name == "cond":
+                outvals = self._eval_cond(eqn, invals, stack)
+            else:
+                op_class = _op_class(name, self.include_transcendental)
+                fpi: FpImplementation | None = None
+                if op_class is not None and _float_out(eqn.outvars):
+                    out_dtype = eqn.outvars[0].aval.dtype
+                    fpi = self.intercept(stack, op_class, out_dtype)
+                    if fpi is not None:
+                        invals = list(fpi.quantize_operands(op_class, invals))
+                    self._record(stack, op_class, out_dtype, eqn)
+                ans = prim.bind(*invals, **eqn.params)
+                outvals = list(ans) if prim.multiple_results else [ans]
+                if fpi is not None:
+                    outvals = [
+                        fpi.perform_operation(op_class, invals, o)
+                        if jnp.issubdtype(jnp.result_type(o), jnp.floating) else o
+                        for o in outvals
+                    ]
+
+            if not prim.multiple_results and not isinstance(outvals, (list, tuple)):
+                outvals = [outvals]
+            for v, o in zip(eqn.outvars, outvals):
+                if not isinstance(v, _DropVar):
+                    env[v] = o
+
+        return [_read(env, v) for v in jaxpr.outvars]
+
+    # -- higher-order re-emission ---------------------------------------------
+    def _eval_scan(self, eqn, invals, stack):
+        p = eqn.params
+        num_consts, num_carry = p["num_consts"], p["num_carry"]
+        closed = p["jaxpr"]
+        consts = invals[:num_consts]
+        init = invals[num_consts:num_consts + num_carry]
+        xs = invals[num_consts + num_carry:]
+        body = self._closed_runner(closed, stack)
+
+        def f(carry, x):
+            outs = body(*consts, *carry, *x)
+            return tuple(outs[:num_carry]), tuple(outs[num_carry:])
+
+        carry, ys = lax.scan(f, tuple(init), tuple(xs), length=p["length"],
+                             reverse=p["reverse"], unroll=p.get("unroll", 1))
+        return list(carry) + list(ys)
+
+    def _eval_while(self, eqn, invals, stack):
+        p = eqn.params
+        cn, bn = p["cond_nconsts"], p["body_nconsts"]
+        cond_consts = invals[:cn]
+        body_consts = invals[cn:cn + bn]
+        init = tuple(invals[cn + bn:])
+        cond_run = self._closed_runner(p["cond_jaxpr"], stack)
+        body_run = self._closed_runner(p["body_jaxpr"], stack)
+        out = lax.while_loop(
+            lambda c: cond_run(*cond_consts, *c)[0],
+            lambda c: tuple(body_run(*body_consts, *c)),
+            init)
+        return list(out)
+
+    def _eval_cond(self, eqn, invals, stack):
+        branches = eqn.params["branches"]
+        index, *ops = invals
+        fns = [self._closed_runner(br, stack) for br in branches]
+        out = lax.switch(index, [lambda *a, f=f: tuple(f(*a)) for f in fns], *ops)
+        return list(out)
+
+    # -- census ----------------------------------------------------------------
+    def _record(self, stack, op_class, dtype, eqn):
+        from repro.core.profiler import eqn_flops
+        key = ("/".join(stack), op_class, str(jnp.dtype(dtype)))
+        self.census[key] = self.census.get(key, 0) + eqn_flops(eqn)
+
+
+class _DynFPI:
+    """FPI stand-in whose mantissa width is a traced scalar (one entry of
+    the genome bits vector). Result-quantization only."""
+
+    def __init__(self, bits_scalar, mode: str):
+        self.bits = bits_scalar
+        self.mode = mode
+
+    def quantize_operands(self, op_class, operands):
+        return operands
+
+    def perform_operation(self, op_class, operands, result):
+        from repro.utils.numerics import truncate_mantissa_dynamic
+        return truncate_mantissa_dynamic(result, self.bits, self.mode)
+
+
+class DynamicNeatInterpreter(NeatInterpreter):
+    """Interpreter whose placement decisions are static (stack matching at
+    trace time) but whose mantissa widths come from a traced bits vector —
+    one jit compile serves the whole NSGA-II run."""
+
+    def __init__(self, family: str, sites: Sequence[str], *,
+                 target: str = "single", mode: str = "rne",
+                 include_transcendental: bool = False):
+        from repro.core.placement import PlacementRule
+        super().__init__(PlacementRule(target=target),
+                         include_transcendental=include_transcendental)
+        self.family = family
+        self.sites = list(sites)
+        self.site_idx = {s: i for i, s in enumerate(self.sites)}
+        self.mode = mode
+        self.target = target
+        self.bits_vec = None   # set per call by neat_transform_dynamic
+
+    def _site_for(self, stack: Tuple[str, ...]) -> int | None:
+        if self.family == "wp":
+            return 0
+        default_idx = self.site_idx.get("__default__")
+        if self.family == "cip":
+            if stack and stack[-1] in self.site_idx:
+                return self.site_idx[stack[-1]]
+            return default_idx
+        if self.family == "fcs":
+            for frame in reversed(stack):
+                if frame in self.site_idx:
+                    return self.site_idx[frame]
+            return default_idx
+        if self.family == "plc":
+            from repro.core.placement import default_categorizer
+            return self.site_idx.get(default_categorizer(stack))
+        if self.family == "pli":
+            path = "/".join(stack)
+            best, best_len = None, -1
+            for key, i in self.site_idx.items():
+                if (path == key or path.startswith(key + "/")
+                        or ("/" not in key and key in stack)):
+                    if len(key) > best_len:
+                        best, best_len = i, len(key)
+            return best
+        raise ValueError(f"unknown family {self.family!r}")
+
+    def intercept(self, stack, op_class, out_dtype):
+        from repro.core.placement import _is_target_dtype
+        if not _is_target_dtype(out_dtype, self.target):
+            return None
+        idx = self._site_for(stack)
+        if idx is None:
+            return None
+        return _DynFPI(self.bits_vec[idx], self.mode)
+
+
+def neat_transform_dynamic(fn: Callable, family: str, sites: Sequence[str],
+                           *, target: str = "single", mode: str = "rne",
+                           include_transcendental: bool = False) -> Callable:
+    """Return ``g(bits, *args)`` == `fn(*args)` under `family` placement
+    with per-site mantissa widths from the traced int vector ``bits``.
+
+    Jit ``g`` once; every genome evaluation is then a compiled call.
+    """
+    cache: Dict = {}
+
+    def g(bits, *args, **kwargs):
+        interp = DynamicNeatInterpreter(
+            family, sites, target=target, mode=mode,
+            include_transcendental=include_transcendental)
+        interp.bits_vec = jnp.asarray(bits, jnp.int32)
+        key = (jax.tree.structure((args, kwargs)), tuple(
+            (getattr(x, "shape", None), str(getattr(x, "dtype", type(x))))
+            for x in jax.tree.leaves((args, kwargs))))
+        if key not in cache:
+            closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
+                *args, **kwargs)
+            cache[key] = (closed, jax.tree.structure(out_shape))
+        closed, out_tree = cache[key]
+        flat = jax.tree.leaves((args, kwargs))
+        outs = interp.eval_jaxpr(closed.jaxpr, closed.consts, flat)
+        return jax.tree.unflatten(out_tree, outs)
+
+    return g
+
+
+def neat_transform(fn: Callable, rule: PlacementRule, *,
+                   include_transcendental: bool = False) -> Callable:
+    """Return `fn` with NEAT placement-rule enforcement (paper mode).
+
+    The returned callable also exposes ``.last_census`` — the FLOP census of
+    the most recent call, keyed by (scope path, op class, dtype) — which the
+    energy model consumes.
+    """
+    cache: Dict = {}
+
+    def wrapped(*args, **kwargs):
+        interp = NeatInterpreter(
+            rule, include_transcendental=include_transcendental)
+        key = jax.tree.structure((args, kwargs)), tuple(
+            (getattr(x, "shape", None), str(getattr(x, "dtype", type(x))))
+            for x in jax.tree.leaves((args, kwargs)))
+        if key not in cache:
+            closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
+                *args, **kwargs)
+            cache[key] = (closed, jax.tree.structure(out_shape))
+        closed, out_tree = cache[key]
+        flat = jax.tree.leaves((args, kwargs))
+        outs = interp.eval_jaxpr(closed.jaxpr, closed.consts, flat)
+        wrapped.last_census = dict(interp.census)
+        return jax.tree.unflatten(out_tree, outs)
+
+    wrapped.last_census = {}
+    return wrapped

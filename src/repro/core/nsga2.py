@@ -1,0 +1,180 @@
+"""NSGA-II (Deb et al. [18]) — the paper's exploration engine (§IV step 5).
+
+From-scratch implementation specialized to integer genomes (per-site
+mantissa widths). Both objectives are minimized: (energy, error). The
+evaluation budget matches the paper: at most ~400 configurations per
+experiment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Evaluated:
+    genome: Tuple[int, ...]
+    objectives: Tuple[float, ...]   # (energy, error), minimized
+
+
+@dataclasses.dataclass
+class NSGA2Result:
+    population: List[Evaluated]          # final population
+    evaluated: List[Evaluated]           # every unique config evaluated
+    n_evals: int
+
+    def front(self) -> List[Evaluated]:
+        return pareto_front(self.evaluated)
+
+
+def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
+    return all(x <= y for x, y in zip(a, b)) and any(x < y for x, y in zip(a, b))
+
+
+def pareto_front(points: List[Evaluated]) -> List[Evaluated]:
+    front: List[Evaluated] = []
+    for p in points:
+        if not any(dominates(q.objectives, p.objectives)
+                   for q in points if q is not p):
+            if not any(q.objectives == p.objectives for q in front):
+                front.append(p)
+    return sorted(front, key=lambda e: e.objectives)
+
+
+def fast_non_dominated_sort(objs: np.ndarray) -> List[np.ndarray]:
+    """Return index arrays per front, best first. objs: (n, m)."""
+    n = objs.shape[0]
+    S: List[List[int]] = [[] for _ in range(n)]
+    counts = np.zeros(n, dtype=np.int64)
+    fronts: List[List[int]] = [[]]
+    for p in range(n):
+        for q in range(n):
+            if p == q:
+                continue
+            if dominates(objs[p], objs[q]):
+                S[p].append(q)
+            elif dominates(objs[q], objs[p]):
+                counts[p] += 1
+        if counts[p] == 0:
+            fronts[0].append(p)
+    i = 0
+    while fronts[i]:
+        nxt: List[int] = []
+        for p in fronts[i]:
+            for q in S[p]:
+                counts[q] -= 1
+                if counts[q] == 0:
+                    nxt.append(q)
+        i += 1
+        fronts.append(nxt)
+    return [np.array(f, dtype=np.int64) for f in fronts if len(f)]
+
+
+def crowding_distance(objs: np.ndarray) -> np.ndarray:
+    n, m = objs.shape
+    dist = np.zeros(n)
+    if n <= 2:
+        return np.full(n, np.inf)
+    for k in range(m):
+        order = np.argsort(objs[:, k])
+        dist[order[0]] = dist[order[-1]] = np.inf
+        span = objs[order[-1], k] - objs[order[0], k]
+        if span <= 0:
+            continue
+        dist[order[1:-1]] += (objs[order[2:], k] - objs[order[:-2], k]) / span
+    return dist
+
+
+def _tournament(rng, ranks, crowd):
+    i, j = rng.integers(0, len(ranks), size=2)
+    if ranks[i] != ranks[j]:
+        return i if ranks[i] < ranks[j] else j
+    return i if crowd[i] >= crowd[j] else j
+
+
+def nsga2(
+    eval_fn: Callable[[Tuple[int, ...]], Tuple[float, ...]],
+    n_genes: int,
+    low: int,
+    high: int,
+    *,
+    pop_size: int = 40,
+    n_gen: int = 9,
+    max_evals: int = 400,
+    p_crossover: float = 0.9,
+    p_mutate: float | None = None,
+    seed: int = 0,
+    seed_genomes: Sequence[Sequence[int]] = (),
+) -> NSGA2Result:
+    """Run NSGA-II over integer genomes in [low, high]^n_genes.
+
+    ``eval_fn`` maps a genome to the objective tuple (minimized). Results
+    are memoized so the ``max_evals`` budget counts unique configurations,
+    as in the paper's "at most 400 configurations ... evaluated".
+    """
+    rng = np.random.default_rng(seed)
+    p_mut = p_mutate if p_mutate is not None else 1.0 / max(n_genes, 1)
+    cache: Dict[Tuple[int, ...], Tuple[float, ...]] = {}
+    order: List[Evaluated] = []
+
+    def evaluate(g: Tuple[int, ...]) -> Tuple[float, ...]:
+        if g not in cache:
+            if len(cache) >= max_evals:
+                # budget exhausted: return a dominated sentinel
+                return tuple(float("inf") for _ in order[0].objectives) \
+                    if order else (float("inf"), float("inf"))
+            cache[g] = tuple(float(v) for v in eval_fn(g))
+            order.append(Evaluated(g, cache[g]))
+        return cache[g]
+
+    # init population: seeds + full-precision + random
+    pop: List[Tuple[int, ...]] = [tuple(int(v) for v in s) for s in seed_genomes]
+    pop.append(tuple([high] * n_genes))                 # exact baseline
+    while len(pop) < pop_size:
+        pop.append(tuple(int(v) for v in rng.integers(low, high + 1, n_genes)))
+    pop = pop[:pop_size]
+    objs = np.array([evaluate(g) for g in pop])
+
+    for _ in range(n_gen):
+        if len(cache) >= max_evals:
+            break
+        fronts = fast_non_dominated_sort(objs)
+        ranks = np.zeros(len(pop), dtype=np.int64)
+        crowd = np.zeros(len(pop))
+        for r, f in enumerate(fronts):
+            ranks[f] = r
+            crowd[f] = crowding_distance(objs[f])
+        children: List[Tuple[int, ...]] = []
+        while len(children) < pop_size:
+            a = pop[_tournament(rng, ranks, crowd)]
+            b = pop[_tournament(rng, ranks, crowd)]
+            if rng.random() < p_crossover:
+                mask = rng.random(n_genes) < 0.5
+                child = tuple(int(x if m else y)
+                              for x, y, m in zip(a, b, mask))
+            else:
+                child = a
+            child = tuple(
+                int(rng.integers(low, high + 1)) if rng.random() < p_mut else v
+                for v in child)
+            children.append(child)
+        union = pop + children
+        union_objs = np.array([evaluate(g) for g in union])
+        # environmental selection
+        fronts = fast_non_dominated_sort(union_objs)
+        new_idx: List[int] = []
+        for f in fronts:
+            if len(new_idx) + len(f) <= pop_size:
+                new_idx.extend(f.tolist())
+            else:
+                cd = crowding_distance(union_objs[f])
+                keep = f[np.argsort(-cd)][: pop_size - len(new_idx)]
+                new_idx.extend(keep.tolist())
+                break
+        pop = [union[i] for i in new_idx]
+        objs = union_objs[new_idx]
+
+    final = [Evaluated(g, cache[g]) for g in pop if g in cache]
+    return NSGA2Result(population=final, evaluated=order, n_evals=len(cache))

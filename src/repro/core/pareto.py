@@ -1,0 +1,78 @@
+"""Tradeoff-space analysis: lower convex hulls and quantized savings.
+
+Reproduces the paper's reporting: Fig. 5/11a plot the lower convex hull of
+(error rate, normalized energy); Figs. 6/7/11b quantize the hull at error
+thresholds (1/5/10/20%) and report energy savings vs. the exact baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TradeoffPoint:
+    error: float            # relative error vs exact baseline (0 = exact)
+    energy: float           # normalized energy (1 = exact baseline)
+    payload: object = None  # e.g. the genome / rule
+
+
+def pareto_points(points: Sequence[TradeoffPoint]) -> List[TradeoffPoint]:
+    """Non-dominated subset (min error, min energy), sorted by error."""
+    pts = sorted(points, key=lambda p: (p.error, p.energy))
+    out: List[TradeoffPoint] = []
+    best = float("inf")
+    for p in pts:
+        if p.energy < best - 1e-15:
+            out.append(p)
+            best = p.energy
+    return out
+
+
+def lower_convex_hull(points: Sequence[TradeoffPoint]) -> List[TradeoffPoint]:
+    """Lower convex hull over (error, energy) — the paper's frontier plot."""
+    pts = pareto_points(points)
+    if len(pts) <= 2:
+        return pts
+    hull: List[TradeoffPoint] = []
+    for p in pts:
+        while len(hull) >= 2:
+            (x1, y1), (x2, y2) = ((hull[-2].error, hull[-2].energy),
+                                  (hull[-1].error, hull[-1].energy))
+            # pop if hull[-1] is above the chord hull[-2]->p
+            if (x2 - x1) * (p.energy - y1) - (p.error - x1) * (y2 - y1) <= 0:
+                hull.pop()
+            else:
+                break
+        hull.append(p)
+    return hull
+
+
+def energy_at_threshold(points: Sequence[TradeoffPoint],
+                        max_error: float) -> float:
+    """Minimum normalized energy among configs with error <= max_error.
+    Returns 1.0 (baseline) if nothing qualifies."""
+    ok = [p.energy for p in points if p.error <= max_error]
+    return min(ok) if ok else 1.0
+
+
+def savings_at_threshold(points: Sequence[TradeoffPoint],
+                         max_error: float) -> float:
+    """Energy savings (fraction) at an error budget — Figs. 6/7 bars."""
+    return 1.0 - energy_at_threshold(points, max_error)
+
+
+def harmonic_mean(xs: Iterable[float]) -> float:
+    xs = [max(x, 1e-12) for x in xs]
+    return len(xs) / sum(1.0 / x for x in xs)
+
+
+def correlation(xs: Sequence[float], ys: Sequence[float]) -> float:
+    """Pearson R between train-predicted and test-achieved metrics
+    (Table III)."""
+    x, y = np.asarray(xs, float), np.asarray(ys, float)
+    if len(x) < 2 or np.std(x) == 0 or np.std(y) == 0:
+        return 1.0
+    return float(np.corrcoef(x, y)[0, 1])

@@ -1,0 +1,187 @@
+"""Programmable placement rules, paper §III-B4 + Table I.
+
+A rule maps *program state* — here the scope/call stack, the op class and
+the dtype — to the FPI used for that FLOP. The paper ships WP, CIP and FCS;
+for CNNs it adds PLC (per layer category) and PLI (per layer instance).
+Rules compose; users can subclass ``PlacementRule`` with arbitrary logic
+(paper: "Sets of rules are specified as C++ routines that accept the
+program state as input and return a single FPI").
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.fpi import FpImplementation, IDENTITY, MantissaTrunc
+from repro.utils.registry import Registry
+
+selector_registry: Registry["PlacementRule"] = Registry("fp_selector")
+
+
+def _is_target_dtype(dtype, target: str) -> bool:
+    d = jnp.dtype(dtype)
+    if target == "single":
+        return d == jnp.dtype(jnp.float32)
+    if target == "double":
+        return d == jnp.dtype(jnp.float64)
+    if target == "half":
+        return d in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16))
+    if target == "any":
+        return jnp.issubdtype(d, jnp.floating)
+    raise ValueError(f"unknown optimization target {target!r}")
+
+
+@dataclasses.dataclass
+class PlacementRule:
+    """Base rule: identity everywhere.
+
+    ``target`` is the paper's FP optimization target (§IV step 2): only
+    FLOPs of the targeted precision are replaced.
+    """
+    target: str = "single"
+
+    def select(self, stack: Tuple[str, ...], op_class: str,
+               dtype) -> FpImplementation:
+        if not _is_target_dtype(dtype, self.target):
+            return IDENTITY
+        return self._select(stack, op_class)
+
+    def _select(self, stack: Tuple[str, ...], op_class: str) -> FpImplementation:
+        return IDENTITY
+
+    # names this rule can assign distinct FPIs to (genome layout for search)
+    def tunable_sites(self) -> Tuple[str, ...]:
+        return ()
+
+
+@dataclasses.dataclass
+class WholeProgram(PlacementRule):
+    """WP: one FPI for every FLOP in the program (tradeoff space 24/53)."""
+    fpi: FpImplementation = IDENTITY
+
+    def _select(self, stack, op_class):
+        return self.fpi
+
+    def tunable_sites(self):
+        return ("__program__",)
+
+
+@dataclasses.dataclass
+class CurrentScope(PlacementRule):
+    """CIP: FPI keyed by the currently-in-progress function = the innermost
+    scope frame. Unmapped scopes use ``default``."""
+    mapping: Dict[str, FpImplementation] = dataclasses.field(default_factory=dict)
+    default: FpImplementation = IDENTITY
+
+    def _select(self, stack, op_class):
+        if stack and stack[-1] in self.mapping:
+            return self.mapping[stack[-1]]
+        return self.default
+
+    def tunable_sites(self):
+        return tuple(self.mapping)
+
+
+@dataclasses.dataclass
+class CallStack(PlacementRule):
+    """FCS: walk the call stack from the most recent frame outward; the
+    first frame present in the mapping selects the FPI (paper Fig. 3: the
+    FFT inherits the FPI of its caller — LPF vs PC)."""
+    mapping: Dict[str, FpImplementation] = dataclasses.field(default_factory=dict)
+    default: FpImplementation = IDENTITY
+
+    def _select(self, stack, op_class):
+        for frame in reversed(stack):
+            if frame in self.mapping:
+                return self.mapping[frame]
+        return self.default
+
+    def tunable_sites(self):
+        return tuple(self.mapping)
+
+
+def default_categorizer(stack: Tuple[str, ...]) -> str:
+    """Layer category = innermost frame with instance digits stripped
+    ("conv1" -> "conv", "layer03.attn" -> "layer.attn")."""
+    if not stack:
+        return ""
+    return re.sub(r"\d+", "", stack[-1])
+
+
+@dataclasses.dataclass
+class LayerCategory(PlacementRule):
+    """PLC: one FPI per layer *category* (all conv layers share one FPI)."""
+    mapping: Dict[str, FpImplementation] = dataclasses.field(default_factory=dict)
+    default: FpImplementation = IDENTITY
+    categorize: Callable[[Tuple[str, ...]], str] = default_categorizer
+
+    def _select(self, stack, op_class):
+        return self.mapping.get(self.categorize(stack), self.default)
+
+    def tunable_sites(self):
+        return tuple(self.mapping)
+
+
+@dataclasses.dataclass
+class LayerInstance(PlacementRule):
+    """PLI: one FPI per layer *instance*, keyed by the full scope path
+    (longest-prefix match, so "model/conv1" covers everything beneath)."""
+    mapping: Dict[str, FpImplementation] = dataclasses.field(default_factory=dict)
+    default: FpImplementation = IDENTITY
+
+    def _select(self, stack, op_class):
+        path = "/".join(stack)
+        best, best_len = None, -1
+        for key, fpi in self.mapping.items():
+            if (path == key or path.startswith(key + "/")
+                    or ("/" not in key and key in stack)):
+                if len(key) > best_len:
+                    best, best_len = fpi, len(key)
+        return best if best is not None else self.default
+
+    def tunable_sites(self):
+        return tuple(self.mapping)
+
+
+# ---------------------------------------------------------------------------
+# Genome <-> rule bridging for the NSGA-II explorer.
+# ---------------------------------------------------------------------------
+
+RULE_FAMILIES = ("wp", "cip", "fcs", "plc", "pli")
+
+
+def rule_from_genome(family: str, sites: Sequence[str], bits: Sequence[int],
+                     *, target: str = "single", mode: str = "rne",
+                     default: FpImplementation = IDENTITY) -> PlacementRule:
+    """Build a placement rule from an integer genome of mantissa widths.
+
+    WP uses a single gene; the per-function/per-layer families map
+    ``sites[i] -> MantissaTrunc(bits[i])``. A ``"__default__"`` site sets
+    the rule's default FPI (applied to unmatched FLOPs).
+    """
+    if family == "wp":
+        return WholeProgram(target=target, fpi=MantissaTrunc(int(bits[0]), mode))
+    pairs = dict(zip(sites, bits))
+    if "__default__" in pairs:
+        default = MantissaTrunc(int(pairs.pop("__default__")), mode)
+    mapping = {s: MantissaTrunc(int(b), mode) for s, b in pairs.items()}
+    if family == "cip":
+        return CurrentScope(target=target, mapping=mapping, default=default)
+    if family == "fcs":
+        return CallStack(target=target, mapping=mapping, default=default)
+    if family == "plc":
+        return LayerCategory(target=target, mapping=mapping, default=default)
+    if family == "pli":
+        return LayerInstance(target=target, mapping=mapping, default=default)
+    raise ValueError(f"unknown rule family {family!r}")
+
+
+def register_fp_selector(name: str, rule: PlacementRule) -> PlacementRule:
+    """Paper §IV step 4: Register_FP_selector. Registered rules are
+    addressable by name (the paper's --fp_selector_name flag; our launch
+    scripts expose the same flag)."""
+    selector_registry.register(name, rule)
+    return rule

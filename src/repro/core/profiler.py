@@ -1,0 +1,183 @@
+"""FLOP/byte profiling per scope — paper §IV step 1 ("Profile the Program").
+
+Walks a jaxpr (recursing into higher-order primitives) and produces a
+census: FLOPs and bytes moved per (scope path, op class, dtype). This is
+the analogue of NEAT's profiling mode, which the user runs before precision
+tuning to find the top-N FLOP-intensive functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.extend import core as jcore
+
+from repro.core.scope import parse_name_stack
+from repro.core.interpreter import PRIM_OP_CLASS, TRANSCENDENTALS
+
+# estimated elementwise-op multiplier for transcendentals (a polynomial/
+# Newton implementation executes ~8 FLOPs per element)
+TRANSCENDENTAL_COST = 8
+
+
+def _numel(aval) -> int:
+    return int(np.prod(aval.shape)) if aval.shape else 1
+
+
+def eqn_flops(eqn) -> int:
+    """FLOPs executed by one jaxpr equation (scalar-op convention, matching
+    the paper's per-instruction counting: a dot is 2*M*N*K scalar FLOPs)."""
+    name = eqn.primitive.name
+    out = eqn.outvars[0].aval
+    if name == "dot_general":
+        dnums = eqn.params["dimension_numbers"]
+        (lc, _), (lb, _) = dnums
+        lhs = eqn.invars[0].aval
+        k = int(np.prod([lhs.shape[i] for i in lc])) if lc else 1
+        return 2 * _numel(out) * k
+    if name == "conv_general_dilated":
+        rhs = eqn.invars[1].aval           # kernel
+        # flops = 2 * out_numel * (kernel spatial * in_channels)
+        k = _numel(rhs) // max(rhs.shape[eqn.params["dimension_numbers"]
+                               .rhs_spec[0]], 1)
+        return 2 * _numel(out) * max(k, 1)
+    if name in TRANSCENDENTALS:
+        return TRANSCENDENTAL_COST * _numel(out)
+    return _numel(out)
+
+
+def eqn_bytes(eqn) -> int:
+    """Bytes touched by one equation (operands read + results written)."""
+    total = 0
+    for v in list(eqn.invars) + list(eqn.outvars):
+        aval = v.aval if not isinstance(v, jcore.Literal) else None
+        if aval is not None and hasattr(aval, "dtype"):
+            total += _numel(aval) * jnp.dtype(aval.dtype).itemsize
+    return total
+
+
+@dataclasses.dataclass
+class ScopeStats:
+    flops: int = 0
+    bytes: int = 0
+    by_op: Dict[str, int] = dataclasses.field(default_factory=dict)
+    by_dtype: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, op_class: str, dtype: str, flops: int, nbytes: int):
+        self.flops += flops
+        self.bytes += nbytes
+        self.by_op[op_class] = self.by_op.get(op_class, 0) + flops
+        self.by_dtype[dtype] = self.by_dtype.get(dtype, 0) + flops
+
+
+@dataclasses.dataclass
+class Profile:
+    """Result of profiling: per-scope stats + global totals."""
+    scopes: Dict[str, ScopeStats]
+
+    @property
+    def total_flops(self) -> int:
+        return sum(s.flops for s in self.scopes.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s.bytes for s in self.scopes.values())
+
+    def top_functions(self, n: int = 10) -> List[str]:
+        """Paper default: the top-N FLOP-intensive functions (scopes).
+
+        Scope paths are reduced to their innermost frame (the "function"),
+        aggregating across call sites; '' (unscoped) is excluded.
+        """
+        agg: Dict[str, int] = defaultdict(int)
+        for path, st in self.scopes.items():
+            leaf = path.split("/")[-1] if path else ""
+            if leaf:
+                agg[leaf] += st.flops
+        return [k for k, _ in
+                sorted(agg.items(), key=lambda kv: -kv[1])[:n]]
+
+    def top_paths(self, n: int = 10) -> List[str]:
+        items = [(p, s.flops) for p, s in self.scopes.items() if p]
+        return [k for k, _ in sorted(items, key=lambda kv: -kv[1])[:n]]
+
+    def dtype_breakdown(self) -> Dict[str, int]:
+        """Fig. 4 analogue: FLOPs per float dtype."""
+        agg: Dict[str, int] = defaultdict(int)
+        for st in self.scopes.values():
+            for dt, f in st.by_dtype.items():
+                agg[dt] += f
+        return dict(agg)
+
+    def coverage(self, functions: List[str]) -> float:
+        """Fraction of FLOPs inside the given functions (paper: >=98% for
+        the top-10)."""
+        covered = 0
+        for path, st in self.scopes.items():
+            leaf = path.split("/")[-1] if path else ""
+            if any(f == leaf or f in path.split("/") for f in functions):
+                covered += st.flops
+        t = self.total_flops
+        return covered / t if t else 0.0
+
+
+def _walk(jaxpr: jcore.Jaxpr, scopes: Dict[str, ScopeStats],
+          prefix: Tuple[str, ...], mult: int,
+          include_transcendental: bool) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        raw = parse_name_stack(eqn.source_info.name_stack)
+        stack = raw if (prefix and raw[:len(prefix)] == prefix) else prefix + raw
+        inner_mult = mult
+        sub = None
+        if name == "pjit":
+            sub = [eqn.params["jaxpr"]]
+        elif name in ("custom_jvp_call", "custom_vjp_call"):
+            sub = [eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")]
+        elif name in ("remat2", "checkpoint"):
+            inner = eqn.params["jaxpr"]
+            _walk(inner, scopes, stack, mult, include_transcendental)
+            continue
+        elif name == "scan":
+            sub = [eqn.params["jaxpr"]]
+            inner_mult = mult * int(eqn.params["length"])
+        elif name == "while":
+            # unknown trip count: count one iteration (documented)
+            sub = [eqn.params["cond_jaxpr"], eqn.params["body_jaxpr"]]
+        elif name == "cond":
+            # count the largest branch
+            sub = [max(eqn.params["branches"],
+                       key=lambda b: len(b.jaxpr.eqns))]
+        if sub is not None:
+            for closed in sub:
+                _walk(closed.jaxpr, scopes, stack, inner_mult,
+                      include_transcendental)
+            continue
+
+        op_class = PRIM_OP_CLASS.get(name)
+        if op_class is None and include_transcendental and name in TRANSCENDENTALS:
+            op_class = "transcendental"
+        if op_class is None:
+            continue
+        out = eqn.outvars[0].aval
+        if not (hasattr(out, "dtype")
+                and jnp.issubdtype(out.dtype, jnp.floating)):
+            continue
+        path = "/".join(stack)
+        st = scopes.setdefault(path, ScopeStats())
+        st.add(op_class, str(jnp.dtype(out.dtype)),
+               eqn_flops(eqn) * mult, eqn_bytes(eqn) * mult)
+
+
+def profile(fn: Callable, *args, include_transcendental: bool = True,
+            **kwargs) -> Profile:
+    """Trace `fn` on the given inputs and census FLOPs/bytes per scope."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    scopes: Dict[str, ScopeStats] = {}
+    _walk(closed.jaxpr, scopes, (), 1, include_transcendental)
+    return Profile(scopes=scopes)

@@ -1,0 +1,95 @@
+"""Quantization entry points used by models (scope mode).
+
+``neat_quantize`` is the straight-through-estimator truncation used inside
+differentiable model code: forward pass truncates mantissa bits, backward
+pass is identity (standard QAT practice) so NEAT placements can be applied
+to training as well as inference.
+
+Scope mode: model layers call ``quantize_here(x, op_class)``, which
+consults the active placement rule (installed with ``use_rule``) against
+the current ``pscope`` stack. With no active rule this is the identity and
+compiles away entirely.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from functools import partial
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fpi import FpImplementation, IDENTITY
+from repro.core.placement import PlacementRule
+from repro.core.scope import current_stack
+from repro.utils.numerics import float_spec, truncate_mantissa
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ste_truncate(x, bits: int, mode: str = "rne"):
+    """Mantissa truncation with straight-through gradient."""
+    return truncate_mantissa(x, bits, mode)
+
+
+def _ste_fwd(x, bits, mode):
+    return truncate_mantissa(x, bits, mode), None
+
+
+def _ste_bwd(bits, mode, res, g):
+    return (g,)
+
+
+ste_truncate.defvjp(_ste_fwd, _ste_bwd)
+
+
+def neat_quantize(x: jnp.ndarray, fpi: FpImplementation,
+                  *, ste: bool = True) -> jnp.ndarray:
+    """Apply an FPI's result transform to a tensor (STE by default)."""
+    if fpi is IDENTITY or not (hasattr(x, "dtype")
+                               and jnp.issubdtype(x.dtype, jnp.floating)):
+        return x
+    bits = fpi.mantissa_bits(x.dtype)
+    if bits >= float_spec(x.dtype).mantissa_bits:
+        return x
+    mode = getattr(fpi, "mode", "rne")
+    if ste:
+        return ste_truncate(x, bits, mode)
+    return fpi.quantize(x)
+
+
+# ---------------------------------------------------------------------------
+# Active-rule context (scope mode).
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+
+def active_rule() -> Optional[PlacementRule]:
+    return getattr(_tls, "rule", None)
+
+
+@contextlib.contextmanager
+def use_rule(rule: Optional[PlacementRule]) -> Iterator[None]:
+    """Install `rule` as the active placement rule for scope-mode code."""
+    prev = getattr(_tls, "rule", None)
+    _tls.rule = rule
+    try:
+        yield
+    finally:
+        _tls.rule = prev
+
+
+def quantize_here(x: jnp.ndarray, op_class: str = "dot",
+                  *, ste: bool = True) -> jnp.ndarray:
+    """Quantize `x` per the active rule at the current scope stack.
+
+    This is the scope-mode enforcement point models embed at layer
+    boundaries; identity (and zero compiled cost) when no rule is active.
+    """
+    rule = active_rule()
+    if rule is None or not (hasattr(x, "dtype")
+                            and jnp.issubdtype(x.dtype, jnp.floating)):
+        return x
+    fpi = rule.select(current_stack(), op_class, x.dtype)
+    return neat_quantize(x, fpi, ste=ste)

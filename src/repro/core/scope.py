@@ -1,0 +1,47 @@
+"""Precision scopes — the call-stack NEAT observes.
+
+The paper registers Pin callbacks on function entry/exit to track the call
+stack. The JAX analogue: model/app code wraps regions in ``pscope(name)``,
+which (a) pushes onto a thread-local stack consulted by scope-mode
+quantization and the energy model, and (b) enters ``jax.named_scope`` so
+that trace-time machinery (the jaxpr interpreter, the profiler) sees the
+identical stack via ``eqn.source_info.name_stack``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Tuple
+
+import jax
+
+_tls = threading.local()
+
+
+def current_stack() -> Tuple[str, ...]:
+    return tuple(getattr(_tls, "stack", ()))
+
+
+def scope_path(stack: Tuple[str, ...] | None = None) -> str:
+    return "/".join(current_stack() if stack is None else stack)
+
+
+@contextlib.contextmanager
+def pscope(name: str) -> Iterator[None]:
+    """Enter a named precision scope (nestable)."""
+    stack = list(getattr(_tls, "stack", ()))
+    stack.append(name)
+    _tls.stack = tuple(stack)
+    try:
+        with jax.named_scope(name):
+            yield
+    finally:
+        _tls.stack = tuple(stack[:-1])
+
+
+def parse_name_stack(name_stack) -> Tuple[str, ...]:
+    """Normalize a jaxpr ``source_info.name_stack`` to a tuple of frames."""
+    s = str(name_stack)
+    if not s:
+        return ()
+    return tuple(p for p in s.split("/") if p)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (
+    SyntheticLMDataset, synth_batch, synthetic_digits,
+)

@@ -1,0 +1,102 @@
+"""Deterministic synthetic data pipelines.
+
+LM stream: batch(step) is a pure function of (seed, step, shard), so
+* every data-parallel shard computes its slice locally — zero input I/O
+  or host broadcast at 1000-node scale,
+* restart/elastic-resume is exact: a restarted worker reproduces any step
+  (the trainer's straggler mitigation = deterministic skip-ahead),
+* no host-device transfer bottleneck for the dry-run path.
+
+The token process is a structured Markov-ish stream (not iid-uniform) so
+cross-entropy actually decreases during the example runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMDataset:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch(self, step: int, shard: int = 0, n_shards: int = 1) -> Dict:
+        """Deterministic batch for `step`; shard slices the global batch."""
+        local = self.global_batch // n_shards
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.seed), step), shard)
+        k1, k2 = jax.random.split(key)
+        base = jax.random.randint(k1, (local, self.seq_len + 1), 0,
+                                  self.vocab_size, jnp.int32)
+        # structure: with p=0.75 repeat (prev_token + 1) mod V
+        rep = jax.random.bernoulli(k2, 0.75, (local, self.seq_len + 1))
+        toks = [base[:, 0]]
+        # vectorized "copy previous + 1" chain via segment trick:
+        # t_i = where(rep_i, (t_{i-1}+1) % V, base_i) — computed with scan
+        def f(prev, xs):
+            b, r = xs
+            cur = jnp.where(r, (prev + 1) % self.vocab_size, b)
+            return cur, cur
+        _, rest = jax.lax.scan(
+            f, base[:, 0], (base[:, 1:].T, rep[:, 1:].T))
+        seq = jnp.concatenate([base[:, :1], rest.T], axis=1)
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+
+def synth_batch(vocab: int, batch: int, seq: int, step: int = 0,
+                seed: int = 0) -> Dict:
+    return SyntheticLMDataset(vocab, seq, batch, seed).batch(step)
+
+
+def synthetic_digits(n: int, seed: int = 0, noise: float = 0.35,
+                     image_hw: int = 32):
+    """MNIST-like synthetic digits for the LeNet-5 case study: 10 template
+    glyphs rendered on a 32x32 grid + Gaussian noise. Returns
+    (images (N,32,32,1) fp32 in [0,1], labels (N,) int32)."""
+    rng = np.random.default_rng(seed)
+    # 7-segment style templates on an 8x8 grid, upscaled
+    segs = {
+        "top": [(0, c) for c in range(2, 6)],
+        "mid": [(3, c) for c in range(2, 6)],
+        "bot": [(7, c) for c in range(2, 6)],
+        "tl": [(r, 2) for r in range(0, 4)],
+        "tr": [(r, 5) for r in range(0, 4)],
+        "bl": [(r, 2) for r in range(4, 8)],
+        "br": [(r, 5) for r in range(4, 8)],
+    }
+    digit_segs = {
+        0: ["top", "bot", "tl", "tr", "bl", "br"],
+        1: ["tr", "br"],
+        2: ["top", "tr", "mid", "bl", "bot"],
+        3: ["top", "tr", "mid", "br", "bot"],
+        4: ["tl", "tr", "mid", "br"],
+        5: ["top", "tl", "mid", "br", "bot"],
+        6: ["top", "tl", "mid", "bl", "br", "bot"],
+        7: ["top", "tr", "br"],
+        8: ["top", "mid", "bot", "tl", "tr", "bl", "br"],
+        9: ["top", "mid", "bot", "tl", "tr", "br"],
+    }
+    templates = np.zeros((10, 8, 8), np.float32)
+    for d, names in digit_segs.items():
+        for nm in names:
+            for (r, c) in segs[nm]:
+                templates[d, r, c] = 1.0
+    scale = image_hw // 8
+    big = np.kron(templates, np.ones((scale, scale), np.float32))
+    labels = rng.integers(0, 10, n).astype(np.int32)
+    images = big[labels]
+    # random shifts +- 2px and noise
+    out = np.zeros((n, image_hw, image_hw), np.float32)
+    for i in range(n):
+        dy, dx = rng.integers(-2, 3, 2)
+        out[i] = np.roll(np.roll(big[labels[i]], dy, 0), dx, 1)
+    out += rng.normal(0.0, noise, out.shape).astype(np.float32)
+    out = np.clip(out, 0.0, 1.0)
+    return jnp.asarray(out[..., None]), jnp.asarray(labels)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for NEAT's compute hot spots.
+
+Each kernel ships three layers:
+  <name>.py  — the pl.pallas_call with explicit BlockSpec VMEM tiling
+  ops.py     — jit'd public wrappers with interpret/TPU dispatch
+  ref.py     — pure-jnp oracles the tests assert against
+"""
+from repro.kernels.ops import (
+    mantissa_trunc,
+    quant_matmul,
+    flash_attention,
+)

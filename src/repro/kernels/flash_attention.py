@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: blocked flash attention with fused NEAT truncation.
+
+Online-softmax attention tiled for VMEM (FlashAttention adapted to the TPU
+memory hierarchy: HBM -> VMEM block streaming, MXU for QK^T and PV, VPU for
+the softmax update). Supports GQA (grouped KV heads), causal masking and
+sliding windows, and — the NEAT integration — optional mantissa truncation
+of the QK logits and of the output, fused so enforcement costs no extra
+HBM traffic.
+
+Layout: q (BH, Tq, D), kv (BHkv, Tk, D); grid (BH, Tq/bq, Tk/bk) with the
+KV dim innermost ("arbitrary") carrying running max / denominator /
+accumulator scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.mantissa_trunc import _trunc_block
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, kv_steps, block_q, block_k, tq, tk,
+            qk_bits, pv_bits, mode):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0].astype(jnp.float32)            # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if qk_bits < 24:
+        s = _trunc_block(s, qk_bits, mode)      # NEAT: truncated logits
+
+    # causal / sliding-window mask; queries right-aligned against keys
+    q_pos = (pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)) + (tk - tq)
+    k_pos = kv_i * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                       # (bq, 1)
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)                      # NEG_INF rows -> exp(<=0)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+
+    @pl.when(kv_i == kv_steps - 1)
+    def _done():
+        l = l_ref[:, :1]
+        out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        if pv_bits < 24:
+            out = _trunc_block(out, pv_bits, mode)   # NEAT: truncated PV
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "qk_bits", "pv_bits",
+                              "mode", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int | None = None, qk_bits: int = 24,
+                           pv_bits: int = 24, mode: str = "rne",
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D). Returns (B, Hq, Tq, D)."""
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    pq = (-tq) % block_q
+    pk = (-tk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else q
+    # pad keys on the LEFT so right-alignment (and causal masks) holds
+    kp = jnp.pad(k, ((0, 0), (0, 0), (pk, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (pk, 0), (0, 0))) if pk else v
+    tqp, tkp = tq + pq, tk + pk
+
+    q3 = qp.reshape(b * hq, tqp, d)
+    k3 = kp.reshape(b * hkv, tkp, d)
+    v3 = vp.reshape(b * hkv, tkp, d)
+    kv_steps = tkp // block_k
+    grid = (b * hq, tqp // block_q, kv_steps)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            kv_steps=kv_steps, block_q=block_q, block_k=block_k,
+            tq=tqp, tk=tkp, qk_bits=qk_bits, pv_bits=pv_bits, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda h, qi, ki, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda h, qi, ki, g=group: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, tqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),   # denominator
+            pltpu.VMEM((block_q, d), jnp.float32),     # accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q3, k3, v3)
+    out = out.reshape(b, hq, tqp, d)[:, :, :tq]
+    return out

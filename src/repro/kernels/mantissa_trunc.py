@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: mantissa truncation (the NEAT FPI hot path).
+
+Elementwise bit-level rounding executed entirely in VMEM: bitcast to the
+integer lane type, round-to-nearest-even (or truncate) at the dropped-bit
+boundary, mask, bitcast back, preserving NaN/Inf. Tiled (block_m, block_n)
+with the lane dim a multiple of 128 so the VPU operates on full registers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.utils.numerics import float_spec
+
+
+def _trunc_block(x: jnp.ndarray, bits: int, mode: str) -> jnp.ndarray:
+    """The in-register truncation — same math as the jnp oracle but written
+    against lax.bitcast so it lowers to pure VPU bit ops."""
+    spec = float_spec(x.dtype)
+    if bits >= spec.mantissa_bits:
+        return x
+    drop = spec.mantissa_bits - bits
+    u = lax.bitcast_convert_type(x, spec.uint_dtype)
+    one = jnp.array(1, spec.uint_dtype)
+    mask = ~((one << drop) - one)
+    if mode == "rne":
+        lsb = (u >> drop) & one
+        q = (u + (((one << (drop - 1)) - one) + lsb)) & mask
+    else:
+        q = u & mask
+    exp_mask = jnp.array(spec.exp_mask, spec.uint_dtype)
+    special = (u & exp_mask) == exp_mask
+    q = jnp.where(special, u, q)
+    return lax.bitcast_convert_type(q, x.dtype)
+
+
+def _kernel(x_ref, o_ref, *, bits: int, mode: str):
+    o_ref[...] = _trunc_block(x_ref[...], bits, mode)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "mode", "block_m", "block_n",
+                                    "interpret"))
+def mantissa_trunc_pallas(x: jnp.ndarray, bits: int, mode: str = "rne",
+                          *, block_m: int = 256, block_n: int = 512,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Truncate `x` to `bits` effective mantissa bits via the Pallas kernel.
+
+    `x` may be any shape; it is viewed as (M, N) with N the trailing dim.
+    Pure elementwise — bandwidth-bound — so blocks are sized to stream
+    ~1 MB VMEM tiles (256x512 fp32 = 512 KB in + 512 KB out).
+    """
+    spec = float_spec(x.dtype)
+    if bits >= spec.mantissa_bits:
+        return x
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    # pad to a (block_m * block_n) multiple, run a 1-D grid of 2-D tiles
+    tile = block_m * block_n
+    padded = ((n + tile - 1) // tile) * tile
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    x2 = flat.reshape(padded // block_n, block_n)
+    grid = (x2.shape[0] // block_m,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, mode=mode),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2)
+    return out.reshape(-1)[:n].reshape(orig_shape)

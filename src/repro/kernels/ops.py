@@ -1,0 +1,60 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``backend`` selects the implementation:
+  "auto"    — Pallas on TPU, jnp reference elsewhere (this container: jnp)
+  "pallas"  — pl.pallas_call compiled for TPU
+  "interpret" — Pallas with interpret=True (CPU emulation; tests use this)
+  "ref"     — the pure-jnp oracle
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mantissa_trunc import mantissa_trunc_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return backend
+
+
+def mantissa_trunc(x: jnp.ndarray, bits: int, mode: str = "rne",
+                   *, backend: str = "auto") -> jnp.ndarray:
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.mantissa_trunc_ref(x, bits, mode)
+    return mantissa_trunc_pallas(x, bits, mode, interpret=(b == "interpret"))
+
+
+def quant_matmul(a: jnp.ndarray, b: jnp.ndarray, *, a_bits: int = 24,
+                 b_bits: int = 24, out_bits: int = 24, mode: str = "rne",
+                 backend: str = "auto") -> jnp.ndarray:
+    be = _resolve(backend)
+    if be == "ref":
+        return _ref.quant_matmul_ref(a, b, a_bits, b_bits, out_bits, mode)
+    return quant_matmul_pallas(a, b, a_bits=a_bits, b_bits=b_bits,
+                               out_bits=out_bits, mode=mode,
+                               interpret=(be == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, qk_bits: int = 24,
+                    pv_bits: int = 24, mode: str = "rne",
+                    backend: str = "auto"):
+    be = _resolve(backend)
+    if be == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window, qk_bits=qk_bits,
+                                        pv_bits=pv_bits, mode=mode)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  qk_bits=qk_bits, pv_bits=pv_bits,
+                                  mode=mode, interpret=(be == "interpret"))

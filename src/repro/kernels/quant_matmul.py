@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused mantissa-truncated matmul.
+
+The TPU-native NEAT enforcement point. On x86/Pin, replacing a FLOP is
+free — the instruction itself is swapped. On TPU a *separate* truncation
+pass would re-stream every operand through HBM (pure overhead for a
+bandwidth-bound elementwise op). This kernel truncates the A and B tiles
+*in VMEM*, immediately before they enter the MXU, and truncates the fp32
+accumulator once on the final K step — NEAT enforcement at zero extra HBM
+traffic.
+
+Tiling: (block_m x block_k) @ (block_k x block_n) with a K-innermost grid
+and an fp32 VMEM accumulator; MXU-aligned blocks (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.mantissa_trunc import _trunc_block
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, a_bits, b_bits, out_bits,
+            mode, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _trunc_block(a_ref[...], a_bits, mode)   # VMEM-resident truncation
+    b = _trunc_block(b_ref[...], b_bits, mode)
+    acc_ref[...] += jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        out = _trunc_block(acc_ref[...], out_bits, mode)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("a_bits", "b_bits", "out_bits", "mode",
+                                    "block_m", "block_n", "block_k",
+                                    "interpret"))
+def quant_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
+                        a_bits: int = 24, b_bits: int = 24,
+                        out_bits: int = 24, mode: str = "rne",
+                        block_m: int = 128, block_n: int = 128,
+                        block_k: int = 128,
+                        interpret: bool = True) -> jnp.ndarray:
+    """(M, K) @ (K, N) with NEAT truncation fused into the MXU pipeline."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+
+    def pad(x, bm, bn):
+        pm = (-x.shape[0]) % bm
+        pn = (-x.shape[1]) % bn
+        if pm or pn:
+            x = jnp.pad(x, ((0, pm), (0, pn)))
+        return x
+
+    ap = pad(a, block_m, block_k)
+    bp = pad(b, block_k, block_n)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    k_steps = kp // block_k
+    grid = (mp // block_m, np_ // block_n, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, a_bits=a_bits, b_bits=b_bits,
+                          out_bits=out_bits, mode=mode, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]

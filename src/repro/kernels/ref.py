@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.numerics import truncate_mantissa
+
+
+def mantissa_trunc_ref(x: jnp.ndarray, bits: int,
+                       mode: str = "rne") -> jnp.ndarray:
+    """Oracle for kernels.mantissa_trunc."""
+    return truncate_mantissa(x, bits, mode)
+
+
+def quant_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, a_bits: int,
+                     b_bits: int, out_bits: int,
+                     mode: str = "rne") -> jnp.ndarray:
+    """Oracle for kernels.quant_matmul: truncate operands, fp32-accumulate
+    matmul, truncate the result."""
+    aq = truncate_mantissa(a, min(a_bits, _mant(a)), mode)
+    bq = truncate_mantissa(b, min(b_bits, _mant(b)), mode)
+    out = jnp.dot(aq.astype(jnp.float32), bq.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return truncate_mantissa(out, min(out_bits, 24), mode)
+
+
+def _mant(x) -> int:
+    from repro.utils.numerics import float_spec
+    return float_spec(x.dtype).mantissa_bits
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int | None = None,
+                        qk_bits: int = 24, pv_bits: int = 24,
+                        mode: str = "rne") -> jnp.ndarray:
+    """Oracle for kernels.flash_attention.
+
+    q: (B, Hq, Tq, D), k/v: (B, Hkv, Tk, D) with Hq % Hkv == 0 (GQA).
+    Optional NEAT truncation of the QK^T logits and the PV product.
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    if qk_bits < 24:
+        logits = truncate_mantissa(logits, qk_bits, mode)
+    tk = k.shape[2]
+    qpos = jnp.arange(tq)[:, None] + (tk - tq)   # right-aligned queries
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    if pv_bits < 24:
+        out = truncate_mantissa(out, pv_bits, mode)
+    return out.astype(q.dtype)

@@ -1,0 +1,350 @@
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+The XLA_FLAGS line below MUST run before any jax import — jax locks the
+device count on first init, and the production meshes need 512
+placeholder host devices.
+
+Per cell this produces: memory_analysis (fits-per-chip proof),
+cost_analysis (FLOPs/bytes for the roofline), and the collective schedule
+parsed from the partitioned HLO. Results are written as JSON under
+experiments/dryrun/ and summarized into EXPERIMENTS.md by
+benchmarks/roofline_table.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-moe-1b-a400m \
+      --shape train_4k [--multi-pod] [--all] [--rule mant8]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+import traceback
+from typing import Dict, Optional
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.core.placement import WholeProgram
+from repro.core.fpi import MantissaTrunc
+from repro.core.quantize import use_rule
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (Roofline, model_flops_for,
+                                   parse_collective_bytes)
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.clipping import clip_by_global_norm
+from repro.sharding.specs import (batch_shardings, cache_shardings,
+                                  make_rules, opt_state_shardings,
+                                  params_shardings, use_activation_sharding)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    shape = SHAPES[shape_name]
+    b, t = shape.global_batch, shape.seq_len
+    tok = lambda bb, tt: jax.ShapeDtypeStruct((bb, tt), jnp.int32)
+    if shape.kind == "train":
+        batch = {"tokens": tok(b, t), "labels": tok(b, t)}
+        if cfg.family == "encdec":
+            batch["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, t, cfg.d_model), jnp.dtype(cfg.dtype))
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": tok(b, t)}
+        if cfg.family == "encdec":
+            batch["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, t, cfg.d_model), jnp.dtype(cfg.dtype))
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": tok(b, 1)}
+
+
+def _cell_cfg(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    kind = SHAPES[shape_name].kind
+    changes = {}
+    if kind == "train":
+        changes.update(remat=True)
+    if cfg.family == "moe":
+        changes.update(moe_impl="ep")
+    # chunk sizes tuned for the 32k/500k shapes (VMEM-friendly temps)
+    if shape_name in ("prefill_32k",):
+        changes.update(attn_block_q=1024, ssd_chunk=128)
+    # scan-over-layers keeps compile time O(1) in depth. Decode for the
+    # non-transformer families stays unrolled (their stepwise caches are
+    # heterogeneous); their decode bodies are small.
+    if cfg.family in ("dense", "moe", "vlm"):
+        changes.update(scan_layers=True)
+    elif cfg.family in ("ssm", "hybrid") and kind != "decode":
+        changes.update(scan_layers=True)
+    return dataclasses.replace(cfg, **changes) if changes else cfg
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               rule_bits: Optional[int] = None, fsdp: bool = True,
+               sequence_parallel: bool = True, donate: bool = True,
+               tp_intermediates: bool = True,
+               overrides: Optional[Dict] = None) -> Dict:
+    """Lower + compile one (arch x shape x mesh) cell; return the record.
+
+    ``overrides`` are dataclasses.replace fields applied on top of the
+    cell config — the §Perf hillclimb's lever (remat_policy, ssd_chunk,
+    attn_block_q, moe_impl, dtype, ...).
+    """
+    shape = SHAPES[shape_name]
+    base_cfg = get_arch(arch)
+    if not shape.applies(base_cfg):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi_pod" if multi_pod else "single_pod",
+                "status": "skipped", "reason": shape.skip_reason(base_cfg)}
+    cfg = _cell_cfg(base_cfg, shape_name)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, fsdp=fsdp)
+    model = build_model(cfg)
+    rule = (WholeProgram(fpi=MantissaTrunc(rule_bits), target="half")
+            if rule_bits else None)
+
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    p_sh = params_shardings(rules, params_shape)
+    batch = input_specs(cfg, shape_name)
+    b_sh = batch_shardings(rules, batch)
+
+    t0 = time.time()
+    with mesh, use_rule(rule), use_activation_sharding(
+            rules, sequence_parallel=sequence_parallel,
+            tp_intermediates=tp_intermediates):
+        if shape.kind == "train":
+            opt_shape = jax.eval_shape(lambda: adamw_init(params_shape))
+            o_sh = opt_state_shardings(rules, opt_shape, params_shape)
+
+            grad_shard = bool(int(os.environ.get("REPRO_GRAD_SHARD", "0")))
+
+            def train_step(params, opt_state, batch):
+                def lossf(p):
+                    return model.loss(p, batch)[0]
+                loss, grads = jax.value_and_grad(lossf)(params)
+                if grad_shard:
+                    # pin grads to the param shardings so GSPMD emits
+                    # reduce-scatter (ZeRO) instead of all-reduce
+                    grads = jax.lax.with_sharding_constraint(grads, p_sh)
+                grads, gnorm = clip_by_global_norm(grads, 1.0)
+                params, opt_state = adamw_update(
+                    grads, opt_state, params, 1e-4)
+                return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_shape, opt_shape, batch)
+        elif shape.kind == "prefill":
+            def prefill(params, batch):
+                if cfg.family == "encdec":
+                    return model.forward(params, batch)
+                return model.forward(params, batch["tokens"])
+            jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_shape, batch)
+        else:   # decode
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_sh = cache_shardings(rules, cache_shape, shape.global_batch)
+
+            def serve_step(params, cache, batch):
+                return model.decode_step(params, cache, batch["tokens"])
+
+            jitted = jax.jit(
+                serve_step, in_shardings=(p_sh, c_sh, b_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_shape, cache_shape, batch)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        # exact FLOP/byte census of the traced program (global shapes):
+        # the profiler multiplies scan bodies by trip count, which XLA
+        # CPU's cost analysis does not.
+        from repro.core.profiler import profile as _profile
+        if shape.kind == "train":
+            prof = _profile(train_step, params_shape, opt_shape, batch)
+        elif shape.kind == "prefill":
+            prof = _profile(prefill, params_shape, batch)
+        else:
+            prof = _profile(serve_step, params_shape, cache_shape, batch)
+        jaxpr_flops = float(prof.total_flops)
+        jaxpr_bytes = float(prof.total_bytes)
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # some backends return [dict]
+        cost = cost[0] if cost else {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # top-level whiles are the layer scans; their trip count
+    if cfg.scan_layers and cfg.family in ("dense", "moe", "vlm"):
+        trips_hint = cfg.n_layers
+    elif cfg.scan_layers and cfg.family == "hybrid":
+        trips_hint = max(cfg.n_layers // max(cfg.attn_period, 1), 1)
+    elif cfg.scan_layers and cfg.family == "ssm":
+        trips_hint = 7            # longest homogeneous run (xLSTM 7:1)
+    else:
+        trips_hint = 1
+    coll = parse_collective_bytes(hlo, loop_trips_hint=trips_hint)
+
+    chips = int(np.prod(list(mesh.shape.values())))
+    mem_rec = {}
+    if mem is not None:
+        for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_rec[f] = int(v)
+    roof = Roofline(
+        # jaxpr census is global-shape; per-chip = /chips (GSPMD may add
+        # small redundant compute on top — the XLA number is recorded
+        # alongside as xla_flops_per_chip, loop-undercounted).
+        flops_per_chip=jaxpr_flops / chips,
+        hbm_bytes_per_chip=jaxpr_bytes / chips,
+        wire_bytes_per_chip=float(sum(coll.values())),
+        collectives=coll,
+        model_flops=model_flops_for(cfg, shape.kind, shape.seq_len,
+                                    shape.global_batch),
+        chips=chips,
+        arg_bytes=float(mem_rec.get("argument_size_in_bytes", 0)),
+        out_bytes=float(mem_rec.get("output_size_in_bytes", 0)),
+        temp_bytes=float(mem_rec.get("temp_size_in_bytes", 0)),
+    )
+    mem_rec["xla_flops_per_chip"] = float(cost.get("flops", 0.0))
+    mem_rec["xla_bytes_per_chip"] = float(cost.get("bytes accessed", 0.0))
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "chips": chips,
+        "status": "ok",
+        "rule_bits": rule_bits,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_rec,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if k in ("flops", "transcendentals",
+                                   "bytes accessed", "optimal_seconds")},
+        "roofline": roof.as_dict(),
+    }
+    return record
+
+
+def save_record(record: Dict, out_dir: str = OUT_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "_q" + str(record.get("rule_bits")) if record.get("rule_bits") \
+        else ""
+    name = (f"{record['arch']}_{record['shape']}_"
+            f"{record['mesh']}{suffix}.json").replace("/", "_")
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--rule", default=None,
+                    help="mantissa bits for a WP NEAT rule (e.g. 8)")
+    ap.add_argument("--out", default=OUT_DIR)
+    # §Perf hillclimb levers
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence-parallel activations")
+    ap.add_argument("--no-tp-hints", action="store_true",
+                    help="disable Megatron-TP intermediate constraints")
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["full", "dots"])
+    ap.add_argument("--moe-impl", default=None,
+                    choices=["ragged", "dense", "ep"])
+    ap.add_argument("--ssd-chunk", type=int, default=None)
+    ap.add_argument("--attn-block-q", type=int, default=None)
+    ap.add_argument("--dtype", default=None)
+    ap.add_argument("--suffix", default="",
+                    help="output filename suffix for variant records")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    rule_bits = int(args.rule) if args.rule else None
+    overrides = {}
+    for field, val in (("remat_policy", args.remat_policy),
+                       ("moe_impl", args.moe_impl),
+                       ("ssd_chunk", args.ssd_chunk),
+                       ("attn_block_q", args.attn_block_q),
+                       ("dtype", args.dtype),
+                       ("param_dtype", args.param_dtype)):
+        if val is not None:
+            overrides[field] = val
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = build_cell(arch, shape, multi_pod=mp,
+                                     rule_bits=rule_bits,
+                                     fsdp=not args.no_fsdp,
+                                     sequence_parallel=not args.no_sp,
+                                     tp_intermediates=not args.no_tp_hints,
+                                     overrides=overrides or None)
+                    if args.suffix:
+                        rec["variant"] = args.suffix
+                        rec["arch"] = rec["arch"] + args.suffix
+                except Exception as e:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi_pod_2x16x16" if mp
+                           else "single_pod_16x16",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                path = save_record(rec, args.out)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"[dryrun] OK   {tag}: compute={r['compute_s']:.4f}s "
+                          f"memory={r['memory_s']:.4f}s "
+                          f"collective={r['collective_s']:.4f}s "
+                          f"bottleneck={r['bottleneck']} "
+                          f"(compile {rec['compile_s']:.0f}s) -> {path}")
+                elif rec["status"] == "skipped":
+                    print(f"[dryrun] SKIP {tag}: {rec['reason']}")
+                else:
+                    print(f"[dryrun] FAIL {tag}: {rec['error']}")
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production meshes (TPU v5e numbers in launch/roofline.py).
+
+A function, not a module-level constant, so importing never touches jax
+device state. Single pod: 16x16 = 256 chips ("data","model"); multi-pod:
+2x16x16 = 512 chips ("pod","data","model") — the pod axis rides DCI and
+serves either as outer data parallelism (default) or pipeline stages
+(sharding/pipeline.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real local devices (CPU tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,290 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+TPU v5e hardware constants (per chip): 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI. The three terms (seconds, per step):
+
+  compute    = HLO_FLOPs / (chips x peak)      [cost_analysis is already
+                                                per-partition, so /chips is
+                                                implicit]
+  memory     = HLO_bytes / (chips x HBM_bw)
+  collective = wire_bytes / (chips x link_bw)
+
+``collective_bytes`` is not in cost_analysis: we parse the partitioned
+HLO and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, scaled by a ring-cost
+factor (all-reduce moves ~2x its operand bytes on the wire; the others
+~1x). HLO shapes in the partitioned module are per-device, so the sums
+are per-chip wire bytes and the division by chips is again implicit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# `%name = <shape-or-tuple> <collective>(...)`; "-done" lines never match
+# because the literal op text is e.g. "all-reduce-done(".
+_OP_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(token: str) -> int:
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(token))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))          # [n_groups, group_size]<=[total]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _line_wire_bytes(line: str):
+    m = _OP_RE.search(line)
+    if not m:
+        return None
+    shape_tok, base = m.group(1), m.group(2)
+    r = _result_bytes(shape_tok)
+    g = _group_size(line)
+    ring = (g - 1) / g if g > 1 else 0.0
+    if base == "all-reduce":
+        return base, 2.0 * r * ring
+    if base == "reduce-scatter":
+        return base, r * g * ring
+    if base == "collective-permute":
+        return base, float(r)
+    return base, r * ring      # all-gather / all-to-all
+
+
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """Loose HLO computation splitter. Returns (blocks, entry_name):
+    a header is a line ending in '{' with an arg list and no '=' before
+    the first paren (instruction lines always assign)."""
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.endswith("{") and "(" in ls and "=" not in ls.split("(")[0]:
+            name = ls.split("(")[0].strip()
+            is_entry = name.startswith("ENTRY")
+            name = name.replace("ENTRY", "").strip().lstrip("%")
+            cur = name
+            comps[cur] = []
+            if is_entry:
+                entry = name
+            continue
+        if cur is not None:
+            if ls == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_lines: list) -> int:
+    """XLA scan loops compare an induction var against a constant bound;
+    take the largest integer constant in the condition computation."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def parse_collective_bytes(hlo_text: str,
+                           loop_trips_hint: int = 1) -> Dict[str, float]:
+    """Per-chip wire bytes per collective kind from the partitioned HLO,
+    with while-loop (lax.scan) bodies multiplied by their trip counts.
+
+    Shapes in the partitioned module are per-device. Ring-algorithm wire
+    cost per participant, result bytes R, group size g:
+      all-reduce       2R(g-1)/g      (reduce-scatter + all-gather phases)
+      all-gather        R(g-1)/g      (R = gathered result)
+      reduce-scatter    Rg(g-1)/g     (input = R x g)
+      all-to-all        R(g-1)/g
+      collective-permute R
+    """
+    comps, entry = _split_computations(hlo_text)
+    if entry is None or entry not in comps:
+        # fall back to flat accounting
+        out = {k: 0.0 for k in COLLECTIVES}
+        for line in hlo_text.splitlines():
+            r = _line_wire_bytes(line)
+            if r:
+                out[r[0]] += r[1]
+        return out
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str, depth: int = 0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        out = {k: 0.0 for k in COLLECTIVES}
+        if name not in comps or depth > 16:
+            return out
+        memo[name] = out            # break recursion cycles
+        for line in comps[name]:
+            r = _line_wire_bytes(line)
+            if r:
+                out[r[0]] += r[1]
+            if " while(" in line or "= while(" in line:
+                bm = _WHILE_BODY_RE.search(line)
+                cm_ = _WHILE_COND_RE.search(line)
+                if bm:
+                    trips = _trip_count(
+                        comps.get(cm_.group(1), []) if cm_ else [])
+                    if trips <= 1 and depth == 0:
+                        # XLA hoists the loop bound out of the condition;
+                        # top-level whiles are the layer scans — use the
+                        # caller's known trip count.
+                        trips = max(trips, loop_trips_hint)
+                    sub = walk(bm.group(1), depth + 1)
+                    for k, v in sub.items():
+                        out[k] += v * trips
+            else:
+                # non-while subcomputations (fusions, conditionals)
+                for cm in re.finditer(
+                        r"(?:calls|branch_computations)="
+                        r"[{]?%?([\w.\-]+)", line):
+                    sub = walk(cm.group(1), depth + 1)
+                    for k, v in sub.items():
+                        out[k] += v
+        memo[name] = out
+        return out
+
+    total = dict(walk(entry))
+    # anything the call-edge walk missed (async wrappers, detached
+    # computations) is counted once so no traffic is dropped
+    for name, lines in comps.items():
+        if name in memo:
+            continue
+        for line in lines:
+            r = _line_wire_bytes(line)
+            if r:
+                total[r[0]] = total.get(r[0], 0.0) + r[1]
+    return total
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    collectives: Dict[str, float]
+    model_flops: float = 0.0          # 6ND (train) / 2ND (inference), global
+    chips: int = 256
+    # real per-chip numbers from compiled.memory_analysis()
+    arg_bytes: float = 0.0
+    out_bytes: float = 0.0
+    temp_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        """From XLA 'bytes accessed'. NOTE: the CPU backend fuses far less
+        than TPU, so this overcounts HBM traffic — treat as an upper
+        bound; ``analytic_memory_s`` is the residency-based estimate."""
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def analytic_memory_s(self) -> float:
+        """Residency-based per-chip traffic: arguments (params+inputs read
+        once) + outputs + 2x temporaries (write + read back)."""
+        return (self.arg_bytes + self.out_bytes
+                + 2.0 * self.temp_bytes) / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Ideal overlapped step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs (remat/redundancy waste)."""
+        tot = self.flops_per_chip * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the ideal overlapped step time."""
+        if self.step_s <= 0:
+            return 0.0
+        return (self.model_flops / self.chips) / (self.step_s * PEAK_FLOPS)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "collectives": self.collectives,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "analytic_memory_s": self.analytic_memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_s": self.step_s,
+            "model_flops": self.model_flops,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "mfu": self.mfu,
+            "chips": self.chips,
+        }
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                    new_tokens: int = 1) -> float:
+    """MODEL_FLOPS: 6ND for training, 2ND for inference forward, where N
+    = active params and D = tokens processed in the lowered step."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * seq_len * global_batch
+    if shape_kind == "prefill":
+        return 2.0 * n * seq_len * global_batch
+    return 2.0 * n * new_tokens * global_batch       # decode: one token

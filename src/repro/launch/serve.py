@@ -1,0 +1,53 @@
+"""Serving launcher: batched decode with optional NEAT reduced-precision
+placement (the paper's tradeoff, applied to LM inference).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b --reduced \
+      --prompts 6 --max-new 16 --rule mant8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_arch, list_archs
+from repro.core.fpi import MantissaTrunc
+from repro.core.placement import WholeProgram
+from repro.models import build_model
+from repro.serve.engine import DecodeEngine, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-1.3b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--prompts", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--rule", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    rule = None
+    if args.rule:
+        bits = int(args.rule.replace("mant", ""))
+        rule = WholeProgram(fpi=MantissaTrunc(bits), target="single")
+        print(f"[serve] NEAT rule: WP mant{bits}")
+
+    engine = DecodeEngine(model, params,
+                          ServeConfig(max_len=128, batch_slots=args.slots),
+                          rule=rule)
+    prompts = [[(7 * i + 3) % cfg.vocab_size for _ in range(4)]
+               for i in range(args.prompts)]
+    outs = engine.generate(prompts, max_new_tokens=args.max_new)
+    for i, o in enumerate(outs):
+        print(f"[serve] prompt {i}: {len(o)} tokens -> {o[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

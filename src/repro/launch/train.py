@@ -1,0 +1,86 @@
+"""Training launcher.
+
+Two modes:
+* default — runs on the real local devices (CPU demo / single host):
+  reduced or full config, synthetic data, checkpointing, NEAT rule option.
+* ``--dry-run`` — delegates to launch/dryrun.py semantics for the
+  production mesh (lower+compile only).
+
+Example (the end-to-end driver used by examples/train_100m.py):
+  PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+      --reduced --steps 200 --seq-len 128 --batch 8 --rule mant10
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_arch, list_archs
+from repro.core.fpi import MantissaTrunc
+from repro.core.placement import WholeProgram
+from repro.data.synthetic import SyntheticLMDataset
+from repro.models import build_model
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-1b-a400m",
+                    choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--rule", default=None,
+                    help="NEAT WP mantissa bits for QAT (e.g. 10)")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=args.layers, d_model=args.d_model,
+                          d_ff=4 * args.d_model, vocab=2048)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    from repro.utils.tree import tree_count_params
+    print(f"[train] arch={cfg.name} family={cfg.family} "
+          f"params={tree_count_params(params)/1e6:.1f}M")
+
+    rule = None
+    if args.rule:
+        rule = WholeProgram(fpi=MantissaTrunc(int(args.rule)),
+                            target="single")
+        print(f"[train] NEAT rule: WP mant{args.rule} (STE QAT)")
+
+    ds = SyntheticLMDataset(cfg.vocab_size, args.seq_len, args.batch)
+
+    def data_fn(step):
+        b = ds.batch(step)
+        if cfg.family == "encdec":
+            import jax.numpy as jnp
+            b["src_embeds"] = jax.random.normal(
+                jax.random.fold_in(jax.random.key(7), step),
+                (args.batch, args.seq_len, cfg.d_model), jnp.float32)
+        return b
+
+    tcfg = TrainerConfig(peak_lr=args.lr, warmup_steps=args.steps // 10,
+                         total_steps=args.steps,
+                         microbatches=args.microbatches,
+                         checkpoint_dir=args.checkpoint_dir)
+    trainer = Trainer(model.loss, tcfg, rule=rule)
+    _, _, history = trainer.fit(params, data_fn, steps=args.steps,
+                                log_every=max(args.steps // 10, 1))
+    if history:
+        print(f"[train] final loss {history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig
+from repro.models.model_api import Model, build_model, abstract_params

@@ -1,0 +1,201 @@
+"""Attention: GQA/MHA with RoPE, optional QKV bias, QK-norm, sliding
+window; a training path (flash kernel or jnp reference) and a decode path
+against a preallocated KV cache (flash-decoding style, shardable)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import quantize_here
+from repro.core.scope import pscope
+from repro.kernels import ops as kops
+from repro.models.config import ModelConfig
+from repro.models.layers import init_linear, init_norm, linear, norm, rotary
+
+NEG_INF = -1e30
+
+
+def _sdpa_scan(q, k, v, *, causal: bool, window, block_q: int):
+    """Memory-efficient attention: lax.scan over q blocks with an
+    in-scan remat body — peak temp is one (B, H, bq, Tk) logits block and
+    the backward recomputes it per block (flash semantics in pure jnp;
+    the Pallas kernel replaces this on real TPUs).
+
+    q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D); queries right-aligned.
+    """
+    b, hq, tq, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, tq)
+    pad = (-tq) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nq = (tq + pad) // bq
+    qb = q.reshape(b, hq, nq, bq, d).transpose(2, 0, 1, 3, 4)
+    starts = jnp.arange(nq) * bq
+    kg = k.reshape(b, hkv, 1, tk, d)
+    vg = v.reshape(b, hkv, 1, tk, d)
+
+    def body(carry, xs):
+        qblk, start = xs                       # (B,Hq,bq,D), scalar
+        qr = qblk.reshape(b, hkv, group, bq, d)
+        s = jnp.einsum("bhgqd,bhukd->bhgqk", qr.astype(jnp.float32),
+                       kg.astype(jnp.float32)) * scale
+        qpos = start + jnp.arange(bq)[:, None] + (tk - (tq + pad))
+        kpos = jnp.arange(tk)[None, :]
+        mask = jnp.ones((bq, tk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhukd->bhgqd", p, vg.astype(jnp.float32))
+        return carry, o.reshape(b, hq, bq, d).astype(q.dtype)
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), 0, (qb, starts))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, tq + pad, d)
+    return out[:, :, :tq]
+
+
+def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool):
+    backend = cfg.kernel_backend
+    if backend in ("pallas", "interpret"):
+        return kops.flash_attention(q, k, v, causal=causal,
+                                    window=cfg.sliding_window,
+                                    backend=backend)
+    tq, tk = q.shape[2], k.shape[2]
+    if max(tq, tk) <= 2 * cfg.attn_block_q:
+        return kops.flash_attention(q, k, v, causal=causal,
+                                    window=cfg.sliding_window,
+                                    backend="ref")
+    return _sdpa_scan(q, k, v, causal=causal, window=cfg.sliding_window,
+                      block_q=cfg.attn_block_q)
+
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d, h * dh, dtype, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, kv * dh, dtype, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, kv * dh, dtype, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = init_norm(dh, dtype)
+        p["knorm"] = init_norm(dh, dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    from repro.sharding.specs import shard_hint
+    b, t, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    with pscope("qkv"):
+        q = shard_hint(linear(p["wq"], x).reshape(b, t, h, dh), "heads")
+        k = shard_hint(linear(p["wk"], x).reshape(b, t, kv, dh), "heads")
+        v = shard_hint(linear(p["wv"], x).reshape(b, t, kv, dh), "heads")
+    if cfg.qk_norm:
+        q = norm(p["qnorm"], q)
+        k = norm(p["knorm"], k)
+    q = rotary(q, positions, cfg.rope_theta)
+    k = rotary(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(p, x, cfg: ModelConfig, *, causal: bool = True,
+              positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill). x: (B, T, D)."""
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t)
+    with pscope("attn"):
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        qh = q.transpose(0, 2, 1, 3)   # (B, H, T, Dh)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        with pscope("sdpa"):
+            out = _sdpa(qh, kh, vh, cfg, causal=causal)
+            out = quantize_here(out, "dot")
+        out = out.transpose(0, 2, 1, 3).reshape(b, t, -1)
+        with pscope("out_proj"):
+            return linear(p["wo"], out)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: Optional[int] = None, dtype=None):
+    """Preallocated cache: one (B, S, KV, Dh) K/V pair per layer."""
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    dt = dtype or cfg.compute_dtype
+    n = n_layers if n_layers is not None else cfg.n_layers
+    layer = lambda: {
+        "k": jnp.zeros((batch, max_len, kv, dh), dt),
+        "v": jnp.zeros((batch, max_len, kv, dh), dt),
+    }
+    return {"layers": [layer() for _ in range(n)],
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_attention(p, x, cfg: ModelConfig, layer_cache, pos
+                     ) -> Tuple[jnp.ndarray, dict]:
+    """Single-token decode. x: (B, 1, D); cache k/v: (B, S, KV, Dh);
+    pos: scalar int32 — the index being written.
+
+    The score/value contractions reduce over the cache's S axis, so under a
+    sequence-sharded cache GSPMD emits the flash-decoding partial-softmax
+    all-reduce automatically.
+    """
+    b, t, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    with pscope("attn"):
+        positions = jnp.full((t,), pos, jnp.int32)
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k"], k.astype(layer_cache["k"].dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["v"], v.astype(layer_cache["v"].dtype), pos, axis=1)
+        group = h // kv
+        qh = q.reshape(b, kv, group, dh)              # t == 1
+        with pscope("sdpa"):
+            scores = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                                ck.astype(jnp.float32)) / jnp.sqrt(
+                                    jnp.float32(dh))
+            scores = quantize_here(scores, "dot")
+            s_idx = jnp.arange(ck.shape[1])
+            valid = s_idx <= pos
+            if cfg.sliding_window is not None:
+                valid &= s_idx > pos - cfg.sliding_window
+            scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+            w = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bkgs,bskd->bkgd", w, cv.astype(jnp.float32))
+            out = quantize_here(out, "dot").astype(x.dtype)
+        out = out.reshape(b, 1, h * dh)
+        with pscope("out_proj"):
+            y = linear(p["wo"], out)
+    return y, {"k": ck, "v": cv}
+
+
+def cross_attention(p, x, memory, cfg: ModelConfig) -> jnp.ndarray:
+    """Encoder-decoder cross attention. x: (B, Tq, D), memory: (B, Tk, D)."""
+    b, tq, _ = x.shape
+    tk = memory.shape[1]
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    with pscope("cross_attn"):
+        with pscope("qkv"):
+            q = linear(p["wq"], x).reshape(b, tq, h, dh)
+            k = linear(p["wk"], memory).reshape(b, tk, kv, dh)
+            v = linear(p["wv"], memory).reshape(b, tk, kv, dh)
+        qh = q.transpose(0, 2, 1, 3)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        with pscope("sdpa"):
+            out = _sdpa(qh, kh, vh, cfg, causal=False)
+            out = quantize_here(out, "dot")
+        out = out.transpose(0, 2, 1, 3).reshape(b, tq, -1)
+        with pscope("out_proj"):
+            return linear(p["wo"], out)

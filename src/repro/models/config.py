@@ -1,0 +1,161 @@
+"""Model configuration — one dataclass covering every assigned family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None
+    rope_theta: float = 10_000.0
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    act: str = "swiglu"             # swiglu | gelu | relu
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_heads: int = 0              # mamba2 heads (d_inner // head_dim)
+    attn_period: int = 0            # hybrid: shared attn block every N layers
+    block_kinds: Tuple[str, ...] = ()  # xlstm: per-layer "mlstm" | "slstm"
+
+    # encoder-decoder
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+
+    # numerics
+    dtype: str = "bfloat16"         # compute dtype
+    param_dtype: str = "float32"
+
+    # NEAT / kernels integration
+    kernel_backend: str = "auto"    # auto | pallas | interpret | ref
+
+    # distribution / memory policy
+    remat: bool = False             # per-layer activation checkpointing
+    remat_policy: str = "full"      # full | dots (save dot outputs)
+    attn_block_q: int = 1024        # q-block for scanned attention
+    ssd_chunk: int = 128            # SSD chunk length
+    moe_impl: str = "ragged"        # ragged | dense | ep (shard_map)
+    # scan-over-layers: stacked params + lax.scan. Collapses the HLO to
+    # one block body (compile time O(1) in depth — the MaxText approach).
+    # Mutually exclusive with per-layer-INSTANCE NEAT placement (PLI);
+    # WP/PLC/FCS rules apply unchanged inside the scanned body.
+    scan_layers: bool = False
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // max(self.n_heads, 1))
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_inner(self) -> int:       # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Can this arch run long_500k? SSM/hybrid/sliding-window yes."""
+        return (self.family in ("ssm", "hybrid")
+                or self.sliding_window is not None)
+
+    @property
+    def has_decoder(self) -> bool:
+        return True   # no encoder-only archs in the assigned pool
+
+    def reduced(self, *, n_layers: int = 2, d_model: int = 64,
+                n_heads: int = 4, d_ff: int = 128, vocab: int = 512,
+                seq: int = 0) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        kv = max(1, min(self.n_kv_heads, n_heads))
+        changes = dict(
+            n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+            n_kv_heads=kv, d_ff=d_ff,
+            vocab_size=min(self.vocab_size, vocab), head_dim=None,
+            dtype="float32", param_dtype="float32",
+        )
+        if self.n_experts:
+            changes.update(n_experts=min(self.n_experts, 8),
+                           top_k=min(self.top_k, 2))
+        if self.family == "ssm":
+            changes.update(ssm_state=min(self.ssm_state or 16, 16),
+                           ssm_heads=2,
+                           block_kinds=tuple(self.block_kinds[:n_layers])
+                           or ("mlstm", "slstm")[:n_layers])
+        if self.family == "hybrid":
+            changes.update(ssm_state=min(self.ssm_state or 16, 16),
+                           ssm_heads=2, attn_period=2)
+        if self.family == "encdec":
+            changes.update(n_enc_layers=max(1, n_layers // 2),
+                           n_dec_layers=max(1, n_layers // 2))
+        if self.sliding_window:
+            changes["sliding_window"] = 32
+        return dataclasses.replace(self, **changes)
+
+    # -- analytic parameter/FLOP counts (roofline + energy model) -----------
+    def param_count(self) -> int:
+        V, D, L, H, KV, Dh, F = (self.vocab_size, self.d_model, self.n_layers,
+                                 self.n_heads, self.n_kv_heads, self.head_dim,
+                                 self.d_ff)
+        embed = V * D * (1 if self.tie_embeddings else 2)
+        attn = D * (H * Dh) + 2 * D * (KV * Dh) + (H * Dh) * D
+        if self.act == "swiglu":
+            mlp = 3 * D * F
+        else:
+            mlp = 2 * D * F
+        per_layer = attn + mlp
+        if self.family == "moe":
+            expert = mlp
+            per_layer = attn + self.n_experts * expert + D * self.n_experts
+        if self.family == "ssm":
+            di = self.d_inner
+            per_layer = (D * 2 * di + di * D + di * (self.ssm_conv)
+                         + di * 2 * self.ssm_state)
+        if self.family == "hybrid":
+            di = self.d_inner
+            mamba = (D * 2 * di + di * D + di * self.ssm_conv
+                     + di * 2 * self.ssm_state)
+            n_attn = max(1, L // max(self.attn_period, 1))
+            # shared attn block counted once (weight sharing)
+            return embed + L * mamba + (attn + mlp) + 2 * L * D
+        if self.family == "encdec":
+            enc = self.n_enc_layers * (attn + mlp)
+            dec = self.n_dec_layers * (2 * attn + mlp)   # + cross attn
+            return embed + enc + dec
+        return embed + L * per_layer + 2 * L * D
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        V, D, L, F = (self.vocab_size, self.d_model, self.n_layers, self.d_ff)
+        H, KV, Dh = self.n_heads, self.n_kv_heads, self.head_dim
+        embed = V * D * (1 if self.tie_embeddings else 2)
+        attn = D * (H * Dh) + 2 * D * (KV * Dh) + (H * Dh) * D
+        mlp = 3 * D * F if self.act == "swiglu" else 2 * D * F
+        active = attn + (self.top_k + self.n_shared_experts) * mlp \
+            + D * self.n_experts
+        return embed + L * active + 2 * L * D

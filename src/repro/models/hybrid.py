@@ -1,0 +1,187 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared transformer
+block (attention + MLP) invoked periodically — the weights are shared
+across invocations (arXiv:2411.15242; we omit the per-invocation LoRA
+adapters, recorded in DESIGN.md).
+
+NEAT significance: the shared block is the paper's radar/FFT pattern at LM
+scale — the same function called from many call sites. CIP must give every
+invocation one FPI; FCS can assign caller-specific precision because each
+invocation happens under a distinct ``pscope`` depth frame.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scope import pscope
+from repro.sharding.specs import shard_activations
+from repro.models import attention as attn_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (cross_entropy, embedding, init_embedding,
+                                 init_linear, init_mlp, init_norm, linear,
+                                 maybe_remat, mlp, norm, unembed)
+from repro.models.ssm import (init_mamba2, mamba2_forward, mamba2_init_cache,
+                              mamba2_step)
+
+
+def _n_shared_calls(cfg: ModelConfig) -> int:
+    period = max(cfg.attn_period, 1)
+    return max(1, cfg.n_layers // period)
+
+
+def _init_block(k, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {"norm": init_norm(cfg.d_model, dtype, cfg.norm),
+            "mamba": init_mamba2(k, cfg)}
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    params = {"embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                      dtype)}
+    if cfg.scan_layers:
+        period = max(cfg.attn_period, 1)
+        groups = cfg.n_layers // period
+        tail = cfg.n_layers - groups * period
+        gkeys = jax.random.split(ks[1], (groups, period))
+        params["blocks_stacked"] = jax.vmap(jax.vmap(
+            lambda k: _init_block(k, cfg)))(gkeys)
+        tkeys = jax.random.split(ks[2], max(tail, 1))
+        params["tail"] = [_init_block(tkeys[i], cfg) for i in range(tail)]
+    else:
+        params["blocks"] = [_init_block(ks[i + 1], cfg)
+                            for i in range(cfg.n_layers)]
+    # the single shared attention+MLP block; input is concat(hidden, embed)
+    sk = jax.random.split(ks[-2], 4)
+    params["shared"] = {
+        "in_proj": init_linear(sk[0], 2 * cfg.d_model, cfg.d_model, dtype),
+        "attn_norm": init_norm(cfg.d_model, dtype, cfg.norm),
+        "attn": attn_mod.init_attention(sk[1], cfg),
+        "ffn_norm": init_norm(cfg.d_model, dtype, cfg.norm),
+        "mlp": init_mlp(sk[2], cfg),
+    }
+    params["final_norm"] = init_norm(cfg.d_model, dtype, cfg.norm)
+    params["head"] = init_linear(ks[-1], cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def _shared_block(p, x, x0, cfg: ModelConfig):
+    """The weight-shared attn+MLP block (call under a caller pscope)."""
+    with pscope("shared_attn"):
+        h = linear(p["in_proj"], jnp.concatenate([x, x0], axis=-1))
+        a = norm(p["attn_norm"], h, cfg.norm)
+        h = h + attn_mod.attention(p["attn"], a, cfg)
+        m = norm(p["ffn_norm"], h, cfg.norm)
+        return h + mlp(p["mlp"], m, cfg)
+
+
+def _layer(block, shared, x, x0, cfg: ModelConfig, i: int):
+    period = max(cfg.attn_period, 1)
+    with pscope(f"layer{i:02d}"):
+        h = norm(block["norm"], x, cfg.norm)
+        x = x + mamba2_forward(block["mamba"], h, cfg,
+                               chunk=cfg.ssd_chunk)
+        x = shard_activations(x)
+        if (i + 1) % period == 0:
+            # distinct caller frame -> FCS can specialize this call
+            x = x + _shared_block(shared, x, x0, cfg)
+            x = shard_activations(x)
+    return x
+
+
+def _mamba_block(block, x, cfg: ModelConfig):
+    h = norm(block["norm"], x, cfg.norm)
+    x = x + mamba2_forward(block["mamba"], h, cfg, chunk=cfg.ssd_chunk)
+    return shard_activations(x)
+
+
+def forward(params, tokens, cfg: ModelConfig) -> jnp.ndarray:
+    with pscope("model"):
+        x = embedding(params["embed"], tokens, cfg.compute_dtype)
+        x = shard_activations(x)
+        x0 = x
+        if cfg.scan_layers:
+            shared = params["shared"]
+
+            def inner(y, block):
+                fn = maybe_remat(lambda b, yy: _mamba_block(b, yy, cfg),
+                                 cfg)
+                return fn(block, y), None
+
+            def group(carry, gblocks):
+                y, y0 = carry
+                y, _ = jax.lax.scan(inner, y, gblocks)
+                gfn = maybe_remat(
+                    lambda s, yy, yy0: _shared_block(s, yy, yy0, cfg), cfg)
+                y = shard_activations(y + gfn(shared, y, y0))
+                return (y, y0), None
+
+            (x, _), _ = jax.lax.scan(group, (x, x0),
+                                     params["blocks_stacked"])
+            for block in params["tail"]:
+                x = _mamba_block(block, x, cfg)
+        else:
+            for i, block in enumerate(params["blocks"]):
+                fn = maybe_remat(
+                    lambda b, s, y, y0, _i=i: _layer(b, s, y, y0, cfg, _i),
+                    cfg)
+                x = fn(block, params["shared"], x, x0)
+        x = norm(params["final_norm"], x, cfg.norm)
+        return unembed(params["head"], x, tied=False)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    period = max(cfg.attn_period, 1)
+    n_attn = _n_shared_calls(cfg)
+    return {
+        "mamba": [mamba2_init_cache(cfg, batch) for _ in range(cfg.n_layers)],
+        "attn": attn_mod.init_kv_cache(cfg, batch, max_len,
+                                       n_layers=n_attn),
+        "pos": jnp.zeros((), jnp.int32),
+        "x0": jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype),
+    }
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    period = max(cfg.attn_period, 1)
+    pos = cache["pos"]
+    with pscope("model"):
+        x = embedding(params["embed"], tokens, cfg.compute_dtype)
+        x0 = x
+        new_mamba, new_attn = [], []
+        attn_i = 0
+        for i, block in enumerate(params["blocks"]):
+            with pscope(f"layer{i:02d}"):
+                h = norm(block["norm"], x, cfg.norm)
+                y, mc = mamba2_step(block["mamba"], h, cfg,
+                                    cache["mamba"][i])
+                x = x + y
+                new_mamba.append(mc)
+                if (i + 1) % period == 0:
+                    with pscope("shared_attn"):
+                        sp = params["shared"]
+                        h2 = linear(sp["in_proj"],
+                                    jnp.concatenate([x, x0], axis=-1))
+                        a = norm(sp["attn_norm"], h2, cfg.norm)
+                        ya, lc = attn_mod.decode_attention(
+                            sp["attn"], a, cfg,
+                            cache["attn"]["layers"][attn_i], pos)
+                        h2 = h2 + ya
+                        m = norm(sp["ffn_norm"], h2, cfg.norm)
+                        x = x + h2 + mlp(sp["mlp"], m, cfg)
+                        new_attn.append(lc)
+                        attn_i += 1
+        x = norm(params["final_norm"], x, cfg.norm)
+        logits = unembed(params["head"], x, tied=False)
+    return logits, {"mamba": new_mamba,
+                    "attn": {"layers": new_attn, "pos": pos + 1},
+                    "pos": pos + 1, "x0": cache["x0"]}

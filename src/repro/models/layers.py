@@ -1,0 +1,145 @@
+"""Shared layers (pure-function style: params are dict pytrees).
+
+Every layer runs inside a ``pscope`` and routes its outputs through
+``quantize_here`` — the NEAT scope-mode enforcement points. With no active
+placement rule these are identities and compile away.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import quantize_here
+from repro.core.scope import pscope
+from repro.models.config import ModelConfig
+
+
+def maybe_remat(fn, cfg: "ModelConfig"):
+    """Apply the config's activation-checkpoint policy to a block fn."""
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False)
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def _init_dense(key, d_in, d_out, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, bias: bool = False,
+                scale: Optional[float] = None):
+    p = {"w": _init_dense(key, d_in, d_out, dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x, *, op_class: str = "dot"):
+    y = jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return quantize_here(y, op_class)
+
+
+def init_norm(d, dtype, kind: str = "rmsnorm"):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm(p, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rotary(x: jnp.ndarray, positions: jnp.ndarray,
+           theta: float) -> jnp.ndarray:
+    """RoPE. x: (..., T, H, Dh); positions: (..., T) or (T,)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]      # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+def init_embedding(key, vocab, d, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embedding(p, tokens, compute_dtype):
+    with pscope("embed"):
+        out = jnp.take(p["table"], tokens, axis=0).astype(compute_dtype)
+        return quantize_here(out, "dot")
+
+
+def unembed(p_embed_or_head, x, tied: bool):
+    with pscope("lm_head"):
+        w = (p_embed_or_head["table"].T if tied
+             else p_embed_or_head["w"])
+        logits = jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                            w.astype(jnp.float32))
+        return quantize_here(logits, "dot")
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"gate": init_linear(ks[0], d, f, dtype),
+                "up": init_linear(ks[1], d, f, dtype),
+                "down": init_linear(ks[2], f, d, dtype)}
+    return {"up": init_linear(ks[0], d, f, dtype),
+            "down": init_linear(ks[1], f, d, dtype)}
+
+
+def mlp(p, x, cfg: ModelConfig):
+    from repro.sharding.specs import shard_hint
+    with pscope("mlp"):
+        if cfg.act == "swiglu":
+            g = linear(p["gate"], x)
+            u = linear(p["up"], x)
+            h = quantize_here(jax.nn.silu(g) * u, "mul")
+        else:
+            u = linear(p["up"], x)
+            act = jax.nn.gelu if cfg.act == "gelu" else jax.nn.relu
+            h = quantize_here(act(u), "transcendental")
+        h = shard_hint(h, "hidden")     # keep the FFN tensor-parallel
+        return linear(p["down"], h)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,93 @@
+"""LeNet-5 (paper §V-H, Table IV) in pure JAX with NEAT scopes matching
+Table V's columns: Conv1, AvgPool1, Conv2, AvgPool2, Conv3, FC, Tanh,
+Internal Func. Tanh activations run under their own scope (the paper
+treats tanh as a separate instrumented function)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import quantize_here
+from repro.core.scope import pscope
+
+
+def _tanh(x):
+    with pscope("tanh"):
+        return quantize_here(jnp.tanh(x), "transcendental")
+
+
+def _conv(p, x, stride: int = 1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return quantize_here(y + p["b"], "conv")
+
+
+def _avg_pool(x, k: int = 2):
+    y = jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, k, k, 1),
+                              (1, k, k, 1), "VALID") / (k * k)
+    return quantize_here(y, "add")
+
+
+def init_lenet5(key, n_classes: int = 10):
+    ks = jax.random.split(key, 5)
+
+    def conv_p(k, kh, kw, cin, cout):
+        scale = 1.0 / (kh * kw * cin) ** 0.5
+        return {"w": jax.random.normal(k, (kh, kw, cin, cout)) * scale,
+                "b": jnp.zeros((cout,))}
+
+    def fc_p(k, din, dout):
+        return {"w": jax.random.normal(k, (din, dout)) / din ** 0.5,
+                "b": jnp.zeros((dout,))}
+
+    return {
+        "conv1": conv_p(ks[0], 5, 5, 1, 6),
+        "conv2": conv_p(ks[1], 5, 5, 6, 16),
+        "conv3": conv_p(ks[2], 5, 5, 16, 120),
+        "fc1": fc_p(ks[3], 120, 84),
+        "fc2": fc_p(ks[4], 84, n_classes),
+    }
+
+
+def lenet5_forward(params, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, 32, 32, 1) -> logits (B, 10). Table IV architecture."""
+    x = images
+    with pscope("conv1"):
+        x = _conv(params["conv1"], x)          # (B,28,28,6)
+    x = _tanh(x)
+    with pscope("avgpool1"):
+        x = _avg_pool(x)                       # (B,14,14,6)
+    x = _tanh(x)
+    with pscope("conv2"):
+        x = _conv(params["conv2"], x)          # (B,10,10,16)
+    x = _tanh(x)
+    with pscope("avgpool2"):
+        x = _avg_pool(x)                       # (B,5,5,16)
+    x = _tanh(x)
+    with pscope("conv3"):
+        x = _conv(params["conv3"], x)          # (B,1,1,120)
+    x = _tanh(x)
+    x = x.reshape(x.shape[0], -1)
+    with pscope("fc"):
+        x = quantize_here(x @ params["fc1"]["w"] + params["fc1"]["b"], "dot")
+    x = _tanh(x)
+    with pscope("internal"):
+        logits = quantize_here(
+            x @ params["fc2"]["w"] + params["fc2"]["b"], "dot")
+    return logits
+
+
+def lenet5_loss(params, images, labels) -> jnp.ndarray:
+    logits = lenet5_forward(params, images)
+    with pscope("internal"):
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+
+def accuracy(params, images, labels) -> jnp.ndarray:
+    logits = lenet5_forward(params, images)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,57 @@
+"""Unified Model facade — one protocol across all assigned families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, transformer, xlstm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable                 # (rng) -> params
+    forward: Callable              # (params, tokens_or_batch) -> logits
+    loss: Callable                 # (params, batch) -> (loss, metrics)
+    init_cache: Callable           # (batch, max_len) -> cache
+    decode_step: Callable          # (params, cache, tokens) -> (logits, cache)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+        moe_impl = "ragged" if fam == "moe" else "ragged"
+        return Model(
+            cfg=cfg,
+            init=lambda rng: mod.init_params(rng, cfg),
+            forward=lambda p, tok: mod.forward(p, tok, cfg),
+            loss=lambda p, batch: mod.loss_fn(p, batch, cfg),
+            init_cache=lambda b, s: mod.init_cache(cfg, b, s),
+            decode_step=lambda p, c, tok: mod.decode_step(p, c, tok, cfg),
+        )
+    if fam == "ssm":
+        mod = xlstm
+    elif fam == "hybrid":
+        mod = hybrid
+    elif fam == "encdec":
+        mod = encdec
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return Model(
+        cfg=cfg,
+        init=lambda rng: mod.init_params(rng, cfg),
+        forward=lambda p, tok: mod.forward(p, tok, cfg),
+        loss=lambda p, batch: mod.loss_fn(p, batch, cfg),
+        init_cache=lambda b, s: mod.init_cache(cfg, b, s),
+        decode_step=lambda p, c, tok: mod.decode_step(p, c, tok, cfg),
+    )
+
+
+def abstract_params(model: Model, seed: int = 0):
+    """ShapeDtypeStruct params (no allocation) — dry-run currency."""
+    return jax.eval_shape(lambda: model.init(jax.random.key(seed)))

@@ -1,0 +1,215 @@
+"""State-space blocks: a generic chunked linear recurrence (the Mamba-2
+SSD block-decomposition algorithm) plus the Mamba2 layer built on it.
+
+The recurrence  S_t = a_t * S_{t-1} + k_t (x) v_t,  y_t = q_t . S_t
+is evaluated chunk-parallel: quadratic attention-like matmuls within
+chunks (MXU-friendly), an associative scan across chunk states (log-depth,
+collective-free along time when the sequence is replicated; GSPMD inserts
+ppermutes when time is sharded). This is the TPU-idiomatic adaptation —
+no sequential T-step scan appears in the HLO hot path.
+
+``mlstm`` (xlstm.py) reuses the same engine: its matrix memory
+C_t = f_t C_{t-1} + i_t v_t k_t^T is the identical algebra with
+a = forget gate and v pre-scaled by the input gate.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import quantize_here
+from repro.core.scope import pscope
+from repro.models.config import ModelConfig
+from repro.models.layers import init_linear, init_norm, linear, norm
+
+
+def chunked_linear_recurrence(a, k, v, q, *, chunk: int = 128):
+    """y_t = q_t . S_t with S_t = a_t S_{t-1} + k_t (x) v_t.
+
+    a: (B, T, H) decay in (0, 1]; k, q: (B, T, H, N); v: (B, T, H, P).
+    Returns y: (B, T, H, P) and the final state (B, H, N, P).
+    """
+    b, t, h = a.shape
+    n, p = k.shape[-1], v.shape[-1]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tt = t + pad
+    nc = tt // chunk
+    a = a.reshape(b, nc, chunk, h)
+    k = k.reshape(b, nc, chunk, h, n)
+    v = v.reshape(b, nc, chunk, h, p)
+    q = q.reshape(b, nc, chunk, h, n)
+
+    la = jnp.log(jnp.maximum(a.astype(jnp.float32), 1e-20))
+    cum = jnp.cumsum(la, axis=2)                       # (B,nc,Q,H)
+
+    # --- intra-chunk (quadratic within the chunk) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j (decay from j+1..i)
+    li = cum[:, :, :, None, :]                          # i
+    lj = cum[:, :, None, :, :]                          # j
+    tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    L = jnp.exp(li - lj) * tri[None, None, :, :, None]  # (B,nc,Q,Q,H)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores * L,
+                         v.astype(jnp.float32))
+
+    # --- chunk states ---
+    last = cum[:, :, -1:, :]                            # total chunk decay
+    w = jnp.exp(last - cum)                             # decay j+1..end
+    s_chunk = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", w,
+                         k.astype(jnp.float32), v.astype(jnp.float32))
+    d_chunk = jnp.exp(last[:, :, 0, :])                 # (B,nc,H)
+
+    # --- associative scan over chunks: S'_c = d_c S'_{c-1} + S_c ---
+    def combine(x, y):
+        dx, sx = x
+        dy, sy = y
+        return dx * dy, sy + dy[..., None, None] * sx
+
+    d_run, s_run = jax.lax.associative_scan(
+        combine, (d_chunk, s_chunk), axis=1)
+    # state entering chunk c = S'_{c-1}
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_run[:, :1]), s_run[:, :-1]], axis=1)
+
+    # --- inter-chunk contribution ---
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         q.astype(jnp.float32) * jnp.exp(cum)[..., None],
+                         s_prev)
+
+    y = (y_intra + y_inter).reshape(b, tt, h, p)[:, :t]
+    final_state = s_run[:, -1]                          # (B,H,N,P)
+    return y, final_state
+
+
+def recurrence_step(state, a_t, k_t, v_t, q_t):
+    """Single decode step of the same recurrence.
+    state: (B,H,N,P); a_t: (B,H); k_t,q_t: (B,H,N); v_t: (B,H,P)."""
+    state = (a_t[..., None, None] * state
+             + k_t[..., :, None] * v_t[..., None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", q_t, state)
+    return y.astype(v_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 layer
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    heads = cfg.ssm_heads or max(1, di // 64)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z (di), x (di), B (n), C (n), dt (heads)]
+    d_in_proj = 2 * di + 2 * n + heads
+    p = {
+        "in_proj": init_linear(ks[0], d, d_in_proj, dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm_conv, di + 2 * n),
+                                   jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((heads,), jnp.float32),       # A = -exp(A_log)
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "out_norm": init_norm(di, dtype),
+        "out_proj": init_linear(ks[2], di, d, dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: (B,T,C), w: (K,C). With `state`
+    ((B,K-1,C)) runs in streaming mode and returns the new state."""
+    ksz = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (ksz - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(ksz))
+    new_state = xp[:, -(ksz - 1):] if ksz > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, *, chunk: int = 128):
+    """x: (B,T,D) -> (B,T,D)."""
+    b, t, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    heads = cfg.ssm_heads or max(1, di // 64)
+    hp = di // heads
+    with pscope("mamba"):
+        with pscope("in_proj"):
+            zxbcdt = linear(p["in_proj"], x)
+        z, xs, bmat, cmat, dt = jnp.split(
+            zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+        conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+        with pscope("conv"):
+            conv_out, _ = _causal_conv(conv_in, p["conv"].astype(x.dtype))
+        xs, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32)
+                             + p["dt_bias"][None, None, :])   # (B,T,H)
+        a = jnp.exp(-jnp.exp(p["A_log"])[None, None, :] * dt)  # decay
+        xh = xs.reshape(b, t, heads, hp)
+        k = jnp.broadcast_to(bmat[:, :, None, :], (b, t, heads, n))
+        q = jnp.broadcast_to(cmat[:, :, None, :], (b, t, heads, n))
+        v = xh.astype(jnp.float32) * dt[..., None]
+        with pscope("ssd"):
+            y, _ = chunked_linear_recurrence(a, k, v.astype(x.dtype), q,
+                                             chunk=chunk)
+            y = quantize_here(y, "dot")
+        y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, t, di).astype(x.dtype)
+        y = norm(p["out_norm"], y * jax.nn.silu(z))
+        with pscope("out_proj"):
+            return linear(p["out_proj"], y)
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int):
+    di, n = cfg.d_inner, cfg.ssm_state
+    heads = cfg.ssm_heads or max(1, di // 64)
+    hp = di // heads
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n),
+                          cfg.compute_dtype),
+        "state": jnp.zeros((batch, heads, n, hp), jnp.float32),
+    }
+
+
+def mamba2_step(p, x, cfg: ModelConfig, cache):
+    """x: (B,1,D) -> (B,1,D), new cache."""
+    b, _, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    heads = cfg.ssm_heads or max(1, di // 64)
+    hp = di // heads
+    with pscope("mamba"):
+        with pscope("in_proj"):
+            zxbcdt = linear(p["in_proj"], x)
+        z, xs, bmat, cmat, dt = jnp.split(
+            zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+        conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+        with pscope("conv"):
+            conv_out, conv_state = _causal_conv(
+                conv_in, p["conv"].astype(x.dtype), cache["conv"])
+        xs, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+        dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                             + p["dt_bias"][None, :])          # (B,H)
+        a = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dt)
+        xh = xs[:, 0].reshape(b, heads, hp)
+        k = jnp.broadcast_to(bmat[:, 0, None, :], (b, heads, n))
+        q = jnp.broadcast_to(cmat[:, 0, None, :], (b, heads, n))
+        v = xh.astype(jnp.float32) * dt[..., None]
+        with pscope("ssd"):
+            y, state = recurrence_step(cache["state"], a, k, v, q)
+            y = quantize_here(y, "dot")
+        y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, 1, di).astype(x.dtype)
+        y = norm(p["out_norm"], y * jax.nn.silu(z))
+        with pscope("out_proj"):
+            out = linear(p["out_proj"], y)
+    return out, {"conv": conv_state, "state": state}

@@ -1,0 +1,165 @@
+"""Decoder-only transformer LM — covers the dense, MoE and early-fusion
+VLM (Chameleon-style: image tokens are ordinary vocabulary entries)
+architectures. Pure-function params; every block under a ``pscope`` so
+NEAT placement rules address layers exactly like the paper addresses
+functions."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scope import pscope
+from repro.sharding.specs import shard_activations
+from repro.models import attention as attn_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (cross_entropy, embedding, init_embedding,
+                                 init_linear, init_mlp, init_norm, mlp, norm,
+                                 unembed, maybe_remat)
+from repro.models.moe import init_moe, moe_ffn, load_balance_loss
+
+
+def _init_layer(lk, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(lk, 2)
+    layer = {
+        "attn_norm": init_norm(cfg.d_model, dtype, cfg.norm),
+        "attn": attn_mod.init_attention(ks[0], cfg),
+        "ffn_norm": init_norm(cfg.d_model, dtype, cfg.norm),
+    }
+    if cfg.family == "moe":
+        layer["moe"] = init_moe(ks[1], cfg)
+    else:
+        layer["mlp"] = init_mlp(ks[1], cfg)
+    return layer
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.param_dtype)
+    params = {"embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                      dtype)}
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    if cfg.scan_layers:
+        # stacked leaves (L, ...) — the lax.scan layout
+        params["layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg))(layer_keys)
+    else:
+        params["layers"] = [_init_layer(k, cfg) for k in layer_keys]
+    params["final_norm"] = init_norm(cfg.d_model, dtype, cfg.norm)
+    if not cfg.tie_embeddings:
+        params["head"] = init_linear(ks[-1], cfg.d_model, cfg.vocab_size,
+                                     dtype)
+    return params
+
+
+def _block(layer, x, cfg: ModelConfig, i: int, *, moe_impl: str):
+    with pscope(f"layer{i:02d}"):
+        h = norm(layer["attn_norm"], x, cfg.norm)
+        x = x + attn_mod.attention(layer["attn"], h, cfg)
+        x = shard_activations(x)
+        h = norm(layer["ffn_norm"], x, cfg.norm)
+        if cfg.family == "moe":
+            x = x + moe_ffn(layer["moe"], h, cfg, impl=moe_impl)
+        else:
+            x = x + mlp(layer["mlp"], h, cfg)
+        x = shard_activations(x)
+    return x
+
+
+def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            *, moe_impl: str | None = None) -> jnp.ndarray:
+    """tokens: (B, T) int32 -> logits (B, T, V) fp32."""
+    moe_impl = moe_impl or cfg.moe_impl
+    with pscope("model"):
+        x = embedding(params["embed"], tokens, cfg.compute_dtype)
+        x = shard_activations(x)
+        if cfg.scan_layers:
+            def body(y, layer):
+                fn = maybe_remat(
+                    lambda l, yy: _block(l, yy, cfg, 0, moe_impl=moe_impl),
+                    cfg)
+                return fn(layer, y), None
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        else:
+            for i, layer in enumerate(params["layers"]):
+                fn = maybe_remat(
+                    lambda l, y, _i=i: _block(l, y, cfg, _i,
+                                              moe_impl=moe_impl), cfg)
+                x = fn(layer, x)
+        x = norm(params["final_norm"], x, cfg.norm)
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        return unembed(head, x, cfg.tie_embeddings)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *,
+            moe_impl: str | None = None,
+            aux_weight: float = 0.01) -> Tuple[jnp.ndarray, dict]:
+    moe_impl = moe_impl or cfg.moe_impl
+    logits = forward(params, batch["tokens"], cfg, moe_impl=moe_impl)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    metrics = {"ce": loss}
+    if cfg.family == "moe" and aux_weight:
+        x = embedding(params["embed"], batch["tokens"], cfg.compute_dtype)
+        layer0 = (jax.tree.map(lambda v: v[0], params["layers"])
+                  if cfg.scan_layers else params["layers"][0])
+        aux = load_balance_loss(layer0["moe"], x, cfg)
+        loss = loss + aux_weight * aux
+        metrics["aux"] = aux
+    return loss, metrics
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.scan_layers:
+        kv, dh = cfg.n_kv_heads, cfg.head_dim
+        dt = cfg.compute_dtype
+        return {"layers": {
+                    "k": jnp.zeros((cfg.n_layers, batch, max_len, kv, dh),
+                                   dt),
+                    "v": jnp.zeros((cfg.n_layers, batch, max_len, kv, dh),
+                                   dt)},
+                "pos": jnp.zeros((), jnp.int32)}
+    return attn_mod.init_kv_cache(cfg, batch, max_len)
+
+
+def _decode_block(layer, lc, x, pos, cfg: ModelConfig, i: int,
+                  moe_impl: str):
+    with pscope(f"layer{i:02d}" if not cfg.scan_layers else "layer"):
+        h = norm(layer["attn_norm"], x, cfg.norm)
+        y, new_lc = attn_mod.decode_attention(layer["attn"], h, cfg, lc,
+                                              pos)
+        x = x + y
+        h = norm(layer["ffn_norm"], x, cfg.norm)
+        if cfg.family == "moe":
+            x = x + moe_ffn(layer["moe"], h, cfg, impl=moe_impl)
+        else:
+            x = x + mlp(layer["mlp"], h, cfg)
+    return x, new_lc
+
+
+def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
+                *, moe_impl: str | None = None) -> Tuple[jnp.ndarray, dict]:
+    """One decode step. tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+    moe_impl = moe_impl or cfg.moe_impl
+    pos = cache["pos"]
+    with pscope("model"):
+        x = embedding(params["embed"], tokens, cfg.compute_dtype)
+        if cfg.scan_layers:
+            def body(y, xs):
+                layer, lc = xs
+                y, new_lc = _decode_block(layer, lc, y, pos, cfg, 0,
+                                          moe_impl)
+                return y, new_lc
+            x, new_layers = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+        else:
+            new_layers = []
+            for i, layer in enumerate(params["layers"]):
+                x, lc = _decode_block(layer, cache["layers"][i], x, pos,
+                                      cfg, i, moe_impl)
+                new_layers.append(lc)
+        x = norm(params["final_norm"], x, cfg.norm)
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = unembed(head, x, cfg.tie_embeddings)
+    return logits, {"layers": new_layers, "pos": pos + 1}

@@ -1,0 +1,341 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM (matrix memory,
+parallelizable) and sLSTM (scalar memory, sequential recurrence).
+
+The mLSTM recurrence C_t = f_t C_{t-1} + i_t v_t k_t^T is the same algebra
+as Mamba-2's SSD, so training reuses ``chunked_linear_recurrence`` — the
+chunk-parallel MXU-friendly engine — with a = sigmoid(f) and v scaled by
+the input gate (stabilized sigmoid-gate variant; the paper's exponential
+gating with running max is implemented in the decode step where it is
+cheap; DESIGN.md records this adaptation). sLSTM keeps the paper's
+sequential form via lax.scan (no parallel form exists — the recurrent
+R h_{t-1} term forbids it, as the xLSTM paper notes).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import quantize_here
+from repro.core.scope import pscope
+from repro.models.config import ModelConfig
+from repro.models.layers import (init_linear, init_norm, linear,
+                                 maybe_remat, norm)
+from repro.models.ssm import chunked_linear_recurrence, recurrence_step
+from repro.sharding.specs import shard_activations
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": init_linear(ks[0], d, d, dtype),
+        "wk": init_linear(ks[1], d, d, dtype),
+        "wv": init_linear(ks[2], d, d, dtype),
+        "wi": init_linear(ks[3], d, h, dtype),       # input gate (per head)
+        "wf": init_linear(ks[4], d, h, dtype),       # forget gate
+        "wo_gate": init_linear(ks[5], d, d, dtype),  # output gate
+        "out_norm": init_norm(dh, dtype),
+        "out_proj": init_linear(ks[6], d, d, dtype),
+    }
+
+
+def _mlstm_gates(p, x):
+    i = jax.nn.sigmoid(linear(p["wi"], x).astype(jnp.float32))  # (B,T,H)
+    f = jax.nn.sigmoid(linear(p["wf"], x).astype(jnp.float32) + 3.0)
+    return i, f
+
+
+def mlstm_forward(p, x, cfg: ModelConfig, *, chunk: int = 128):
+    b, t, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    with pscope("mlstm"):
+        with pscope("qkv"):
+            q = linear(p["wq"], x).reshape(b, t, h, dh)
+            k = linear(p["wk"], x).reshape(b, t, h, dh) / (dh ** 0.5)
+            v = linear(p["wv"], x).reshape(b, t, h, dh)
+        i, f = _mlstm_gates(p, x)
+        with pscope("memory"):
+            # matrix memory: C = f C + i v k^T ; numerator = q . C
+            num, _ = chunked_linear_recurrence(
+                f, k, (v.astype(jnp.float32) * i[..., None]).astype(x.dtype),
+                q, chunk=chunk)
+            # normalizer: n = f n + i k ; denom = |q . n|
+            den, _ = chunked_linear_recurrence(
+                f, k, i[..., None].astype(x.dtype),
+                q, chunk=chunk)
+            y = num / jnp.maximum(jnp.abs(den), 1.0)
+            y = quantize_here(y, "dot").astype(x.dtype)
+        y = norm(p["out_norm"], y)
+        o = jax.nn.sigmoid(linear(p["wo_gate"], x)).reshape(b, t, h, dh)
+        y = (y * o).reshape(b, t, d)
+        with pscope("out_proj"):
+            return linear(p["out_proj"], y)
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return {"C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh, 1), jnp.float32)}
+
+
+def mlstm_step(p, x, cfg: ModelConfig, cache):
+    b, _, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    with pscope("mlstm"):
+        with pscope("qkv"):
+            q = linear(p["wq"], x).reshape(b, h, dh)
+            k = linear(p["wk"], x).reshape(b, h, dh) / (dh ** 0.5)
+            v = linear(p["wv"], x).reshape(b, h, dh)
+        i, f = _mlstm_gates(p, x)
+        i, f = i[:, 0], f[:, 0]                               # (B,H)
+        with pscope("memory"):
+            num, C = recurrence_step(
+                cache["C"], f, k.astype(jnp.float32),
+                v.astype(jnp.float32) * i[..., None], q.astype(jnp.float32))
+            den, n = recurrence_step(
+                cache["n"], f, k.astype(jnp.float32),
+                i[..., None], q.astype(jnp.float32))
+            y = num.astype(jnp.float32) / jnp.maximum(jnp.abs(den), 1.0)
+            y = quantize_here(y, "dot").astype(x.dtype)
+        y = norm(p["out_norm"], y)
+        o = jax.nn.sigmoid(linear(p["wo_gate"], x)).reshape(b, h, dh)
+        y = (y * o).reshape(b, 1, d)
+        with pscope("out_proj"):
+            out = linear(p["out_proj"], y)
+    return out, {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # 4 gates (i, f, z, o), each with input + block-diagonal recurrent weights
+    return {
+        "wx": init_linear(ks[0], d, 4 * d, dtype),
+        "r": (jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+              / (dh ** 0.5)).astype(dtype),
+        "bias": jnp.zeros((4 * d,), dtype),
+        "out_norm": init_norm(d, dtype),
+        "up": init_linear(ks[2], d, int(d * 4 / 3), dtype),
+        "gate": init_linear(ks[3], d, int(d * 4 / 3), dtype),
+        "down": init_linear(ks[4], int(d * 4 / 3), d, dtype),
+    }
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32),
+            "nrm": jnp.zeros((batch, d), jnp.float32)}
+
+
+def _slstm_cell(p, cfg: ModelConfig, state, wx_t):
+    """One sLSTM step with exponential-gate stabilization."""
+    b = wx_t.shape[0]
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    hid = state["h"].reshape(b, h, dh)
+    rec = jnp.einsum("bhd,hdf->bhf", hid.astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(b, 4 * d)
+    pre = wx_t.astype(jnp.float32) + rec + p["bias"].astype(jnp.float32)
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    # stabilized exponential gating (xLSTM eq. 15-17)
+    m_new = jnp.maximum(fi + state["m"], ii)
+    i_g = jnp.exp(ii - m_new)
+    f_g = jnp.exp(fi + state["m"] - m_new)
+    c = f_g * state["c"] + i_g * z
+    nrm = f_g * state["nrm"] + i_g
+    h_new = o * c / jnp.maximum(nrm, 1.0)
+    return {"c": c, "h": h_new, "m": m_new, "nrm": nrm}
+
+
+def slstm_forward(p, x, cfg: ModelConfig):
+    b, t, d = x.shape
+    with pscope("slstm"):
+        with pscope("in_proj"):
+            wx = linear(p["wx"], x)                    # (B,T,4D)
+
+        def step(state, wx_t):
+            new = _slstm_cell(p, cfg, state, wx_t)
+            return new, new["h"]
+
+        init = slstm_init_cache(cfg, b)
+        with pscope("recurrence"):
+            _, hs = jax.lax.scan(step, init, wx.transpose(1, 0, 2))
+        y = hs.transpose(1, 0, 2).astype(x.dtype)      # (B,T,D)
+        y = norm(p["out_norm"], y)
+        with pscope("ffn"):
+            u = linear(p["up"], y)
+            g = jax.nn.sigmoid(linear(p["gate"], y))
+            y = linear(p["down"], u * g)
+        return quantize_here(y, "dot")
+
+
+def slstm_step(p, x, cfg: ModelConfig, cache):
+    with pscope("slstm"):
+        with pscope("in_proj"):
+            wx = linear(p["wx"], x)[:, 0]
+        new = _slstm_cell(p, cfg, cache, wx)
+        y = new["h"][:, None, :].astype(x.dtype)
+        y = norm(p["out_norm"], y)
+        with pscope("ffn"):
+            u = linear(p["up"], y)
+            g = jax.nn.sigmoid(linear(p["gate"], y))
+            y = linear(p["down"], u * g)
+        return quantize_here(y, "dot"), new
+
+
+# ---------------------------------------------------------------------------
+# Full xLSTM language model (stack of mLSTM/sLSTM blocks per block_kinds)
+# ---------------------------------------------------------------------------
+
+from repro.models.layers import (cross_entropy, embedding, init_embedding,
+                                 unembed)
+
+
+def block_kinds(cfg: ModelConfig):
+    if cfg.block_kinds:
+        return cfg.block_kinds
+    # xLSTM[7:1] default: every 8th block is sLSTM
+    return tuple("slstm" if (i % 8) == 7 else "mlstm"
+                 for i in range(cfg.n_layers))
+
+
+def _kind_runs(kinds):
+    """Group consecutive identical kinds: [('mlstm', 7), ('slstm', 1)]..."""
+    runs = []
+    for kind in kinds:
+        if runs and runs[-1][0] == kind:
+            runs[-1] = (kind, runs[-1][1] + 1)
+        else:
+            runs.append((kind, 1))
+    return runs
+
+
+def _init_block(k, cfg: ModelConfig, kind: str):
+    dtype = jnp.dtype(cfg.param_dtype)
+    init = init_mlstm if kind == "mlstm" else init_slstm
+    return {"norm": init_norm(cfg.d_model, dtype, cfg.norm),
+            "core": init(k, cfg)}
+
+
+def init_params(key, cfg: ModelConfig):
+    kinds = block_kinds(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    if cfg.scan_layers:
+        runs = _kind_runs(kinds)
+        blocks = []
+        i = 0
+        for kind, count in runs:
+            rkeys = jax.random.split(ks[i + 1], count)
+            blocks.append(jax.vmap(
+                lambda k, _kind=kind: _init_block(k, cfg, _kind))(rkeys))
+            i += count
+    else:
+        blocks = [_init_block(ks[i + 1], cfg, kind)
+                  for i, kind in enumerate(kinds)]
+    return {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": init_norm(cfg.d_model, dtype, cfg.norm),
+        "head": init_linear(ks[-1], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig) -> jnp.ndarray:
+    kinds = block_kinds(cfg)
+
+    def _layer(blk, y, i):
+        with pscope(f"layer{i:02d}"):
+            h = norm(blk["norm"], y, cfg.norm)
+            if kinds[i] == "mlstm":
+                y = y + mlstm_forward(blk["core"], h, cfg,
+                                      chunk=cfg.ssd_chunk)
+            else:
+                y = y + slstm_forward(blk["core"], h, cfg)
+            return shard_activations(y)
+
+    with pscope("model"):
+        x = embedding(params["embed"], tokens, cfg.compute_dtype)
+        x = shard_activations(x)
+        if cfg.scan_layers:
+            runs = _kind_runs(kinds)
+            for run_i, (kind, count) in enumerate(runs):
+                stacked = params["blocks"][run_i]
+
+                def body(y, blk, _kind=kind):
+                    with pscope(_kind):
+                        h = norm(blk["norm"], y, cfg.norm)
+                        if _kind == "mlstm":
+                            y = y + mlstm_forward(blk["core"], h, cfg,
+                                                  chunk=cfg.ssd_chunk)
+                        else:
+                            y = y + slstm_forward(blk["core"], h, cfg)
+                        return shard_activations(y), None
+
+                x, _ = jax.lax.scan(maybe_remat(body, cfg), x, stacked)
+        else:
+            for i, blk in enumerate(params["blocks"]):
+                fn = maybe_remat(lambda b, y, _i=i: _layer(b, y, _i), cfg)
+                x = fn(blk, x)
+        x = norm(params["final_norm"], x, cfg.norm)
+        return unembed(params["head"], x, tied=False)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    kinds = block_kinds(cfg)
+    caches = []
+    for kind in kinds:
+        caches.append(mlstm_init_cache(cfg, batch) if kind == "mlstm"
+                      else slstm_init_cache(cfg, batch))
+    return {"blocks": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    kinds = block_kinds(cfg)
+    with pscope("model"):
+        x = embedding(params["embed"], tokens, cfg.compute_dtype)
+        new = []
+        for i, blk in enumerate(params["blocks"]):
+            with pscope(f"layer{i:02d}"):
+                h = norm(blk["norm"], x, cfg.norm)
+                if kinds[i] == "mlstm":
+                    y, c = mlstm_step(blk["core"], h, cfg,
+                                      cache["blocks"][i])
+                else:
+                    y, c = slstm_step(blk["core"], h, cfg,
+                                      cache["blocks"][i])
+                x = x + y
+                new.append(c)
+        x = norm(params["final_norm"], x, cfg.norm)
+        logits = unembed(params["head"], x, tied=False)
+    return logits, {"blocks": new, "pos": cache["pos"] + 1}

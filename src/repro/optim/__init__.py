@@ -1,0 +1,6 @@
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.optim.schedule import warmup_cosine, constant_lr
+from repro.optim.clipping import clip_by_global_norm
+from repro.optim.grad_compress import (
+    compress_int8, decompress_int8, error_feedback_init,
+)

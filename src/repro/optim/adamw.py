@@ -1,0 +1,69 @@
+"""AdamW from scratch (no optax in this environment).
+
+State layout is a pytree mirroring params; under the production mesh the
+trainer shards optimizer moments over the "data" axis (ZeRO-1) via the
+sharding rules in ``repro.sharding.specs`` — the update math here is
+sharding-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # moments kept in fp32 regardless of param dtype
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, lr, cfg: AdamWConfig = AdamWConfig()
+                 ) -> Tuple[dict, dict]:
+    """Returns (new_params, new_state)."""
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g32)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        step = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return newp.astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for g, mu, nu, p in zip(flat_g, flat_mu, flat_nu, flat_p):
+        a, b, c = upd(g, mu, nu, p)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+    return (jax.tree.unflatten(tdef, new_p),
+            {"mu": jax.tree.unflatten(tdef, new_mu),
+             "nu": jax.tree.unflatten(tdef, new_nu),
+             "count": count})

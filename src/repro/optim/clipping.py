@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_global_norm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped grads, pre-clip global norm)."""
+    gnorm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                        .astype(g.dtype), grads), gnorm

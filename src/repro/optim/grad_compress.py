@@ -1,0 +1,53 @@
+"""Int8 gradient compression with error feedback (1-bit-Adam style
+residual correction) — a distributed-optimization option for cross-pod
+gradient reduction where the "pod" axis rides slower DCI links.
+
+compress -> all-reduce int8 (4x fewer bytes than fp32, 2x vs bf16) ->
+decompress; the quantization residual is fed back into the next step so
+the scheme is unbiased over time.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def error_feedback_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8(g: jnp.ndarray, err: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q int8, scale fp32 scalar, new error residual)."""
+    corrected = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, corrected - deq
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, err_tree):
+    """Compress every leaf; returns (packed tree, new error tree)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_tree)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress_int8(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    packed = jax.tree.unflatten(tdef, [
+        {"q": q, "scale": s} for q, s in zip(qs, scales)])
+    return packed, jax.tree.unflatten(tdef, errs)
+
+
+def decompress_tree(packed):
+    return jax.tree.map(
+        lambda leaf: decompress_int8(leaf["q"], leaf["scale"]),
+        packed, is_leaf=lambda x: isinstance(x, dict) and "q" in x)

@@ -1,0 +1,4 @@
+from repro.sharding.specs import (
+    ShardingRules, make_rules, params_shardings, batch_shardings,
+    cache_shardings, opt_state_shardings,
+)

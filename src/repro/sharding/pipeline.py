@@ -1,0 +1,74 @@
+"""GPipe-style pipeline parallelism over a mesh axis (default "pod").
+
+At 1000+ nodes the cross-pod DCI links are far slower than in-pod ICI, so
+pure DP across pods pays a full gradient all-reduce over the slow links.
+The pipeline option instead places contiguous layer groups on successive
+pod stages and streams microbatches with ``shard_map`` +
+``lax.ppermute``: cross-pod traffic becomes one activation tensor per
+microbatch boundary (B_micro x T x D) instead of the whole gradient.
+
+This module implements the schedule generically over a user-provided
+per-stage step function; it is exercised by tests and available to the
+launcher via ``--pipeline``, while the default dry-run keeps pod-as-DP.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(stage_fn: Callable, mesh: Mesh, *, axis: str = "pod",
+                     n_microbatches: int = 4):
+    """Build fn(stage_params, x) running a GPipe forward.
+
+    ``stage_fn(stage_params, x_micro) -> y_micro`` is the per-stage
+    computation; ``stage_params`` has a leading stage axis sharded over
+    ``axis``; x: (B, ...) with B divisible by n_microbatches.
+
+    Schedule: n_stages + n_micro - 1 ticks; each tick every stage
+    processes one microbatch (bubble at the edges), activations hop
+    stage->stage+1 via ppermute.
+    """
+    n_stages = mesh.shape[axis]
+
+    def run(stage_params, x):
+        def body(params_local, x_local):
+            # params_local: this stage's params — shard_map keeps the
+            # sharded leading axis at size 1, strip it; x_local: the full
+            # local batch (only stage 0's content matters; later stages
+            # receive activations via ppermute)
+            params_local = jax.tree.map(lambda a: a[0], params_local)
+            stage = jax.lax.axis_index(axis)
+            micro = jnp.split(x_local, n_microbatches, axis=0)
+            n_ticks = n_stages + n_microbatches - 1
+            outs = [None] * n_microbatches
+            carry = jnp.zeros_like(micro[0])
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            for t in range(n_ticks):
+                mb = t  # microbatch entering stage 0 at tick t
+                inject = micro[mb] if mb < n_microbatches else carry
+                xin = jnp.where(stage == 0, inject, carry)
+                y = stage_fn(params_local, xin)
+                # last stage emits microbatch t - (n_stages - 1)
+                out_idx = t - (n_stages - 1)
+                if 0 <= out_idx < n_microbatches:
+                    outs[out_idx] = y
+                carry = jax.lax.ppermute(y, axis, perm)
+            # only the last stage's outs are real; broadcast them
+            # (mask + psum — ppermute cannot fan out one source)
+            out = jnp.concatenate(outs, axis=0)
+            out = jnp.where(stage == n_stages - 1, out,
+                            jnp.zeros_like(out))
+            return jax.lax.psum(out, axis)
+
+        in_specs = (P(axis), P())          # params staged; batch replicated
+        out_specs = P()
+        fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+        return fn(stage_params, x)
+
+    return run

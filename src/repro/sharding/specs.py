@@ -1,0 +1,325 @@
+"""Partition-rule engine: path-pattern -> PartitionSpec, with divisibility
+checking and graceful fallback (an axis that does not divide a dim is
+dropped from that dim's spec rather than failing the lowering).
+
+Layout strategy (Megatron TP x FSDP x DP, EP for MoE, SP for long
+contexts):
+
+* batch dims      -> dp axes ("pod","data")
+* TP dims         -> "model": attention heads / FFN hidden / vocab / experts
+* FSDP dim        -> the non-TP weight dim shards over dp axes
+* KV caches       -> batch on dp when divisible; sequence on "model"
+                     (flash-decoding reduction), plus dp when batch == 1
+* optimizer state -> same as params (ZeRO-1 comes from FSDP dims)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]          # ("pod","data") or ("data",)
+    tp_axis: str = "model"
+    fsdp: bool = True                 # shard weights over dp too
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    # -- spec builders --------------------------------------------------------
+    def _fit(self, dim: int, axes) -> Optional[Any]:
+        """Return axes if they evenly divide dim, else try prefixes, else
+        None (replicated)."""
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            axes = (axes,)
+        for end in range(len(axes), 0, -1):
+            cand = axes[:end]
+            if dim % self.axis_size(cand) == 0:
+                return cand if len(cand) > 1 else cand[0]
+        return None
+
+    def spec(self, shape: Sequence[int], *dim_axes) -> P:
+        """PartitionSpec with per-dim candidate axes, divisibility-checked."""
+        assert len(shape) == len(dim_axes), (shape, dim_axes)
+        return P(*[self._fit(s, a) for s, a in zip(shape, dim_axes)])
+
+    def named(self, shape, *dim_axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, *dim_axes))
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True) -> ShardingRules:
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return ShardingRules(mesh=mesh, dp_axes=dp, fsdp=fsdp)
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (Megatron-style sequence parallelism).
+#
+# Model code calls ``shard_activations(x)`` at residual boundaries; with an
+# active context this pins (B, T, D) activations to (dp, tp, None) — the
+# sequence dim shards over "model" between blocks, so the per-layer remat
+# stash is 1/TP of the naive size. GSPMD inserts the all-gather before
+# attention and the reduce-scatter after, exactly the Megatron-SP schedule.
+# Without a context it is the identity (CPU smoke tests).
+# ---------------------------------------------------------------------------
+
+_act_tls = threading.local()
+
+
+@contextlib.contextmanager
+def use_activation_sharding(rules: Optional[ShardingRules],
+                            *, sequence_parallel: bool = True,
+                            tp_intermediates=True):
+    # tp_intermediates: True -> ("hidden", "heads"); False -> ();
+    # or an explicit tuple/str of hint kinds to enable.
+    if tp_intermediates is True:
+        kinds = ("hidden", "heads")
+    elif tp_intermediates is False:
+        kinds = ()
+    elif isinstance(tp_intermediates, str):
+        kinds = (tp_intermediates,)
+    else:
+        kinds = tuple(tp_intermediates)
+    prev = getattr(_act_tls, "ctx", None)
+    _act_tls.ctx = ((rules, sequence_parallel, kinds)
+                    if rules is not None else None)
+    try:
+        yield
+    finally:
+        _act_tls.ctx = prev
+
+
+def activation_rules() -> Optional[ShardingRules]:
+    ctx = getattr(_act_tls, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def shard_activations(x, kind: str = "residual"):
+    """Pin a (B, T, D) activation's sharding at a block boundary."""
+    ctx = getattr(_act_tls, "ctx", None)
+    if ctx is None or x.ndim != 3:
+        return x
+    rules, sp, _ = ctx
+    t_axis = rules.tp_axis if (sp and kind == "residual") else None
+    spec = rules.spec(x.shape, rules.dp_axes, t_axis, None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def shard_hint(x, kind: str):
+    """Pin Megatron-TP *intermediate* activations so GSPMD keeps the
+    matmuls tensor-parallel (all-reduce activations) instead of gathering
+    full weights per layer:
+      "hidden" — (B, T, F) FFN hidden, F on the model axis
+      "heads"  — (B, T, H, Dh) attention heads, H on the model axis
+    Identity without an active context or when tp_intermediates is off.
+    """
+    ctx = getattr(_act_tls, "ctx", None)
+    if ctx is None or kind not in ctx[2]:
+        return x
+    rules, _, _ = ctx
+    tp = rules.tp_axis
+    if kind == "hidden" and x.ndim == 3:
+        spec = rules.spec(x.shape, rules.dp_axes, None, tp)
+    elif kind == "heads" and x.ndim == 4:
+        spec = rules.spec(x.shape, rules.dp_axes, None, tp, None)
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules by path pattern
+# ---------------------------------------------------------------------------
+
+def _param_spec(rules: ShardingRules, path: str, shape) -> P:
+    """Assign a spec from the parameter's path + rank.
+
+    Rules are written against the *trailing* dims of each pattern; any
+    extra leading dims (the scan-over-layers stack, grouped stacks) are
+    padded with None (replicated layer axis).
+    """
+    r = rules
+    dp = r.dp_axes if r.fsdp else None
+    tp = r.tp_axis
+    ndim = len(shape)
+
+    def trailing(*base):
+        """Spec matching the last len(base) dims, None-padded in front."""
+        if ndim < len(base):
+            return None
+        axes = [None] * (ndim - len(base)) + list(base)
+        return r.spec(shape, *axes)
+
+    # MoE expert stacks (E, D, F) / (E, F, D): experts on model (EP)
+    if re.search(r"moe/(gate|up)$", path):
+        s = trailing(tp, dp, None)
+        if s is not None:
+            return s
+    if re.search(r"moe/down$", path):
+        s = trailing(tp, None, dp)
+        if s is not None:
+            return s
+    if re.search(r"router/w$", path):
+        s = trailing(dp, None)
+        if s is not None:
+            return s
+
+    # embeddings / lm head
+    if re.search(r"embed/table$", path):
+        return trailing(tp, dp) or P(*([None] * ndim))
+    if re.search(r"head/w$", path):
+        return trailing(dp, tp) or P(*([None] * ndim))
+
+    # column-parallel: d_model -> expanded dim on model
+    if re.search(r"(wq|wk|wv|gate|up|in_proj|wi|wf|wo_gate|wx|cross/w[qkv])"
+                 r"/w$", path):
+        s = trailing(dp, tp)
+        if s is not None:
+            return s
+    # row-parallel: contracted dim on model
+    if re.search(r"(wo|down|out_proj)/w$", path):
+        s = trailing(tp, dp)
+        if s is not None:
+            return s
+    # TP-expanded bias vectors
+    if re.search(r"(wq|wk|wv|gate|up|in_proj|wi|wf|wo_gate|wx)/b$", path):
+        return trailing(tp) or P(*([None] * ndim))
+
+    # mamba conv (K, C): channels follow d_inner (model)
+    if re.search(r"mamba.*conv$", path) or re.search(r"/conv$", path):
+        s = trailing(None, tp)
+        if s is not None:
+            return s
+    # slstm recurrent (h, dh, 4dh): heads on model
+    if re.search(r"/r$", path):
+        s = trailing(tp, None, None)
+        if s is not None:
+            return s
+    # lenet-style conv kernels (KH, KW, Cin, Cout)
+    if re.search(r"conv\d*/w$", path) and ndim == 4:
+        return r.spec(shape, None, None, None, tp)
+
+    if ndim <= 1:
+        return P(*([None] * ndim))
+    # fallback: FSDP the largest dim
+    axes: list = [None] * ndim
+    big = int(np.argmax(shape))
+    axes[big] = dp
+    return r.spec(shape, *axes)
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    keys = []
+    for path, leaf in flat:
+        keys.append(("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                              for p in path), leaf))
+    return keys, treedef
+
+
+def params_shardings(rules: ShardingRules, params_shape) -> Any:
+    """NamedShardings mirroring an (abstract) param tree."""
+    flat, treedef = _tree_paths(params_shape)
+    out = []
+    for path, leaf in flat:
+        spec = _param_spec(rules, path, leaf.shape)
+        out.append(NamedSharding(rules.mesh, spec))
+    return jax.tree.unflatten(treedef, out)
+
+
+def opt_state_shardings(rules: ShardingRules, opt_shape, params_shape) -> Any:
+    """Adam moments mirror the param shardings; count is replicated."""
+    pshard = params_shardings(rules, params_shape)
+    return {
+        "mu": pshard,
+        "nu": pshard,
+        "count": NamedSharding(rules.mesh, P()),
+    }
+
+
+def batch_shardings(rules: ShardingRules, batch_shape) -> Any:
+    """Token batches: batch dim over dp; model-dim activations on model."""
+    def spec_for(leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(rules.mesh, P())
+        axes = [None] * len(shape)
+        axes[0] = rules.dp_axes
+        # (B, T, D) activations: leave T/D replicated (sequence stays local)
+        return NamedSharding(rules.mesh,
+                             rules.spec(shape, *axes))
+    return jax.tree.map(spec_for, batch_shape)
+
+
+def cache_shardings(rules: ShardingRules, cache_shape, batch: int) -> Any:
+    """KV caches (B, S, KV, Dh) and SSM states.
+
+    batch divisible by dp  -> B on dp, S on model (flash-decode reduce)
+    batch == 1 (long ctx)  -> S over (data, model) jointly
+    """
+    r = rules
+    dp_ok = batch % r.axis_size(r.dp_axes) == 0
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return NamedSharding(r.mesh, P())
+        if path.endswith("pos"):
+            return NamedSharding(r.mesh, P())
+        if nd == 5:   # stacked (L, B, S, KV, Dh) scan-layers cache
+            if dp_ok:
+                return r.named(shape, None, r.dp_axes, r.tp_axis, None,
+                               None)
+            return r.named(shape, None, None, r.dp_axes + (r.tp_axis,),
+                           None, None)
+        if nd == 4 and ("k" in path.split("/")[-1:] or
+                        "v" in path.split("/")[-1:]):
+            if dp_ok:
+                return r.named(shape, r.dp_axes, r.tp_axis, None, None)
+            return r.named(shape, None, r.dp_axes + (r.tp_axis,), None, None)
+        if nd == 4:   # ssm state (B, H, N, P) / mlstm C (B, H, dh, dh)
+            tp_n = r.axis_size(r.tp_axis)
+            # shard heads on model when divisible, else the state row dim
+            if shape[1] % tp_n == 0:
+                axes = (r.tp_axis, None, None)
+            elif shape[2] % tp_n == 0:
+                axes = (None, r.tp_axis, None)
+            else:
+                axes = (None, None, r.tp_axis)
+            if dp_ok:
+                return r.named(shape, r.dp_axes, *axes)
+            return r.named(shape, None, *axes)
+        if nd == 3:   # conv state (B, K-1, C) or memory (B, 1, D)
+            if dp_ok:
+                return r.named(shape, r.dp_axes, None, r.tp_axis)
+            return r.named(shape, None, None, r.tp_axis)
+        if nd == 2:   # slstm scalar states (B, D)
+            if dp_ok:
+                return r.named(shape, r.dp_axes, r.tp_axis)
+            return r.named(shape, None, r.tp_axis)
+        axes = [None] * nd
+        if dp_ok:
+            axes[0] = r.dp_axes
+        return r.named(shape, *axes)
+
+    flat, treedef = _tree_paths(cache_shape)
+    return jax.tree.unflatten(treedef,
+                              [spec_for(p, l) for p, l in flat])

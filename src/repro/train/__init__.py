@@ -1,0 +1,2 @@
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import Trainer, TrainerConfig

@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing (no orbax in this environment).
+
+Guarantees:
+* **atomic** — state is written to ``step_XXXX.tmp/`` then ``os.rename``d;
+  a crash mid-write can never corrupt the latest-valid pointer,
+* **async** — serialization runs on a background thread; the train loop
+  donates nothing to it (arrays are fetched to host first),
+* **keep-k** — oldest checkpoints beyond ``keep`` are garbage-collected,
+* **elastic restore** — arrays are restored host-side then ``device_put``
+  with whatever shardings the *current* mesh prescribes, so a job may
+  resume on a different pod count / mesh shape than it saved from,
+* **integrity** — a manifest (step, tree structure, shapes, dtypes) is
+  fsynced before the rename; restore validates shapes against it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: Any, *, blocking: bool = False) -> None:
+        """Snapshot `state` (any pytree of arrays) at `step`."""
+        self.wait()                      # one in-flight save at a time
+        flat, _ = _flatten_with_paths(state)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+
+        def _write():
+            try:
+                tmp = os.path.join(self.directory, f"step_{step:08d}.tmp")
+                final = os.path.join(self.directory, f"step_{step:08d}")
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, "arrays.npz"), **host)
+                manifest = {
+                    "step": step,
+                    "arrays": {k: {"shape": list(v.shape),
+                                   "dtype": str(v.dtype)}
+                               for k, v in host.items()},
+                }
+                mpath = os.path.join(tmp, "manifest.json")
+                with open(mpath, "w") as f:
+                    json.dump(manifest, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)    # atomic publish
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            _write()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint write failed: {e}") from e
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                steps.append(int(name[5:]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of `target` (a pytree of arrays or
+        ShapeDtypeStructs). `shardings` (same structure or None) enables
+        elastic placement onto the current mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat_t, treedef = _flatten_with_paths(target)
+        flat_s = (_flatten_with_paths(shardings)[0]
+                  if shardings is not None else {})
+        out = {}
+        for key, ref in flat_t.items():
+            if key not in data:
+                raise KeyError(f"checkpoint missing array {key!r}")
+            arr = data[key]
+            want = tuple(ref.shape)
+            if tuple(arr.shape) != want:
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != target {want}")
+            if key in flat_s and flat_s[key] is not None:
+                out[key] = jax.device_put(arr, flat_s[key])
+            else:
+                out[key] = jax.numpy.asarray(arr, dtype=ref.dtype)
+        # rebuild in target order
+        leaves = [out[k] for k in flat_t]
+        return jax.tree.unflatten(treedef, leaves)

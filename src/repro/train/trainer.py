@@ -1,0 +1,147 @@
+"""The training loop: jit'd train_step with microbatch gradient
+accumulation, global-norm clipping, AdamW, NEAT placement-rule support
+(QAT under a mantissa policy), checkpoint/restart, and step-level fault
+retry. Sharding-agnostic: under a mesh the caller passes in/out shardings
+built by ``repro.sharding.specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.placement import PlacementRule
+from repro.core.quantize import use_rule
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.clipping import clip_by_global_norm
+from repro.optim.schedule import warmup_cosine
+from repro.train.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    clip_norm: float = 1.0
+    microbatches: int = 1             # gradient accumulation
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+    max_step_retries: int = 2         # transient-failure tolerance
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, cfg: TrainerConfig,
+                 rule: Optional[PlacementRule] = None):
+        """loss_fn(params, batch) -> (loss, metrics). `rule` applies NEAT
+        placement during training (straight-through truncation)."""
+        self.cfg = cfg
+        self.rule = rule
+        self.sched = warmup_cosine(cfg.peak_lr, cfg.warmup_steps,
+                                   cfg.total_steps)
+        self.ckpt = (CheckpointManager(cfg.checkpoint_dir,
+                                       cfg.keep_checkpoints)
+                     if cfg.checkpoint_dir else None)
+
+        def step_fn(params, opt_state, batch, step):
+            def lossm(p, b):
+                out = loss_fn(p, b)
+                return out if isinstance(out, tuple) else (out, {})
+
+            if cfg.microbatches > 1:
+                def micro(i, carry):
+                    gacc, lacc = carry
+                    mb = jax.tree.map(
+                        lambda x: jax.lax.dynamic_slice_in_dim(
+                            x, i * (x.shape[0] // cfg.microbatches),
+                            x.shape[0] // cfg.microbatches, 0), batch)
+                    (l, _), g = jax.value_and_grad(lossm, has_aux=True)(
+                        params, mb)
+                    gacc = jax.tree.map(jnp.add, gacc, g)
+                    return gacc, lacc + l
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, loss = jax.lax.fori_loop(
+                    0, cfg.microbatches, micro, (zeros, jnp.float32(0)))
+                grads = jax.tree.map(
+                    lambda g: g / cfg.microbatches, grads)
+                loss = loss / cfg.microbatches
+            else:
+                (loss, _), grads = jax.value_and_grad(lossm, has_aux=True)(
+                    params, batch)
+
+            grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+            lr = self.sched(step)
+            params, opt_state = adamw_update(grads, opt_state, params, lr,
+                                             cfg.adamw)
+            metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+            return params, opt_state, metrics
+
+        self._step_fn = step_fn
+        self._jitted: Optional[Callable] = None
+
+    def compile(self, donate: bool = True, **jit_kwargs) -> Callable:
+        if self._jitted is None:
+            kw = dict(jit_kwargs)
+            if donate:
+                kw.setdefault("donate_argnums", (0, 1))
+            self._jitted = jax.jit(self._step_fn, **kw)
+        return self._jitted
+
+    def init_state(self, params):
+        return adamw_init(params, self.cfg.adamw)
+
+    # -- the loop -------------------------------------------------------------
+    def fit(self, params, data_fn: Callable[[int], Dict], *,
+            steps: Optional[int] = None, start_step: int = 0,
+            log_every: int = 50, resume: bool = True):
+        """Run training. `data_fn(step)` must be deterministic in `step`
+        (the synthetic pipeline is) — that is what makes restart/straggler
+        skip-ahead exact."""
+        cfg = self.cfg
+        steps = steps if steps is not None else cfg.total_steps
+        opt_state = self.init_state(params)
+        step = start_step
+
+        if resume and self.ckpt is not None and self.ckpt.latest_step():
+            step = self.ckpt.latest_step()
+            state = self.ckpt.restore(
+                {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            print(f"[trainer] resumed from step {step}")
+
+        fn = self.compile()
+        history = []
+        with use_rule(self.rule):
+            while step < steps:
+                batch = data_fn(step)
+                for attempt in range(cfg.max_step_retries + 1):
+                    try:
+                        params, opt_state, metrics = fn(
+                            params, opt_state, batch, jnp.int32(step))
+                        break
+                    except Exception:
+                        if attempt == cfg.max_step_retries:
+                            raise
+                        # re-jit after transient failure (lost buffers)
+                        self._jitted = None
+                        fn = self.compile()
+                step += 1
+                if step % log_every == 0 or step == steps:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    history.append({"step": step, **m})
+                    print(f"[trainer] step {step}: " +
+                          " ".join(f"{k}={v:.4g}" for k, v in m.items()))
+                if (self.ckpt is not None
+                        and step % cfg.checkpoint_every == 0):
+                    self.ckpt.save(step, {"params": params,
+                                          "opt": opt_state})
+        if self.ckpt is not None:
+            self.ckpt.save(steps, {"params": params, "opt": opt_state},
+                           blocking=True)
+        return params, opt_state, history

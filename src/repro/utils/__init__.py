@@ -1,0 +1,8 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count_params,
+    tree_cast,
+    tree_zeros_like,
+    tree_global_norm,
+)
+from repro.utils.registry import Registry

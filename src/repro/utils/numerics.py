@@ -1,0 +1,134 @@
+"""Bit-level float numerics shared by the FPI layer and the kernels.
+
+All functions are pure jnp and shape-polymorphic; the Pallas kernels in
+``repro.kernels`` re-implement the hot paths with explicit VMEM tiling and
+are validated against these.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class FloatSpec(NamedTuple):
+    """Bit layout of an IEEE-ish float type."""
+    uint_dtype: object
+    total_bits: int
+    exp_bits: int
+    frac_bits: int      # stored fraction bits (excl. implicit leading 1)
+
+    @property
+    def mantissa_bits(self) -> int:
+        # Paper convention: mantissa bits *including* the implicit bit
+        # (24 for fp32, 53 for fp64, 8 for bf16, 11 for fp16).
+        return self.frac_bits + 1
+
+    @property
+    def exp_mask(self) -> int:
+        return ((1 << self.exp_bits) - 1) << self.frac_bits
+
+
+_SPECS = {
+    jnp.dtype(jnp.float32): FloatSpec(jnp.uint32, 32, 8, 23),
+    jnp.dtype(jnp.float64): FloatSpec(jnp.uint64, 64, 11, 52),
+    jnp.dtype(jnp.bfloat16): FloatSpec(jnp.uint16, 16, 8, 7),
+    jnp.dtype(jnp.float16): FloatSpec(jnp.uint16, 16, 5, 10),
+}
+
+
+def float_spec(dtype) -> FloatSpec:
+    d = jnp.dtype(dtype)
+    if d not in _SPECS:
+        raise ValueError(f"unsupported float dtype {d}")
+    return _SPECS[d]
+
+
+def truncate_mantissa(x: jnp.ndarray, bits: int, mode: str = "rne") -> jnp.ndarray:
+    """Reduce `x` to `bits` effective mantissa bits (incl. implicit bit).
+
+    ``bits`` follows the paper's convention: fp32 supports 1..24, fp64
+    1..53; ``bits == mantissa_bits`` is the identity. ``mode`` is ``"rne"``
+    (round-to-nearest-even, the IEEE default) or ``"trunc"`` (the paper's
+    bit truncation). NaN/Inf are preserved bit-exactly.
+    """
+    spec = float_spec(x.dtype)
+    if bits < 1:
+        raise ValueError(f"bits={bits} must be >= 1")
+    if bits >= spec.mantissa_bits:   # clamp: wider-than-native is identity
+        return x
+    drop = spec.mantissa_bits - bits           # low fraction bits removed
+    u = x.view(spec.uint_dtype)
+    one = jnp.array(1, spec.uint_dtype)
+    mask = ~((one << drop) - one)
+    if mode == "rne":
+        # round-half-to-even on the integer representation; a carry out of
+        # the fraction correctly bumps the exponent.
+        lsb = (u >> drop) & one
+        rounded = u + (((one << (drop - 1)) - one) + lsb)
+        q = rounded & mask
+    elif mode == "trunc":
+        q = u & mask
+    else:
+        raise ValueError(f"unknown rounding mode {mode!r}")
+    # keep NaN/Inf (exponent all-ones) bit-exact
+    exp_mask = jnp.array(spec.exp_mask, spec.uint_dtype)
+    is_special = (u & exp_mask) == exp_mask
+    q = jnp.where(is_special, u, q)
+    return q.view(x.dtype)
+
+
+def truncate_mantissa_dynamic(x: jnp.ndarray, bits: jnp.ndarray,
+                              mode: str = "rne") -> jnp.ndarray:
+    """``truncate_mantissa`` with a *traced* integer ``bits`` argument.
+
+    Lets a single compiled function serve every mantissa width — the NEAT
+    explorer jits one evaluator per placement family and feeds genome bit
+    vectors as runtime arguments. ``bits >= mantissa_bits`` is the identity.
+    """
+    spec = float_spec(x.dtype)
+    u = x.view(spec.uint_dtype)
+    one = jnp.array(1, spec.uint_dtype)
+    bits = jnp.asarray(bits, jnp.int32)
+    drop_i = jnp.clip(spec.mantissa_bits - bits, 0, spec.frac_bits)
+    drop = drop_i.astype(spec.uint_dtype)
+    dropc = jnp.maximum(drop, one)           # avoid UB shifts at drop == 0
+    mask = ~((one << dropc) - one)
+    if mode == "rne":
+        lsb = (u >> dropc) & one
+        q = (u + (((one << (dropc - one)) - one) + lsb)) & mask
+    elif mode == "trunc":
+        q = u & mask
+    else:
+        raise ValueError(f"unknown rounding mode {mode!r}")
+    exp_mask = jnp.array(spec.exp_mask, spec.uint_dtype)
+    is_special = (u & exp_mask) == exp_mask
+    q = jnp.where((drop_i == 0) | is_special, u, q)
+    return q.view(x.dtype)
+
+
+def manipulated_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-element count of manipulated mantissa bits, paper §III-C.
+
+    Counts trailing zero bits of the stored fraction and subtracts from the
+    available mantissa bits (incl. implicit bit): fp32 full precision -> 24,
+    value with zero fraction -> 1. Returns int32 array of x's shape.
+    """
+    spec = float_spec(x.dtype)
+    u = x.view(spec.uint_dtype)
+    frac = u & ((jnp.array(1, spec.uint_dtype) << spec.frac_bits)
+                - jnp.array(1, spec.uint_dtype))
+    # lowest set bit; frac==0 handled separately
+    lowest = frac & (~frac + jnp.array(1, spec.uint_dtype))
+    # exact for 2**k up to frac_bits<=52: use float64 when needed
+    f = lowest.astype(jnp.float64 if spec.frac_bits > 23 else jnp.float32)
+    tz = jnp.where(frac == 0, spec.frac_bits,
+                   jnp.round(jnp.log2(jnp.maximum(f, 1.0))).astype(jnp.int32))
+    return (spec.mantissa_bits - tz).astype(jnp.int32)
+
+
+def bits_for_storage(bits: int, dtype) -> int:
+    """Bits moved to memory for an element at `bits` mantissa precision:
+    sign + exponent + stored-fraction bits actually carrying information."""
+    spec = float_spec(dtype)
+    return 1 + spec.exp_bits + max(bits - 1, 0)

@@ -1,0 +1,41 @@
+"""A minimal name->object registry used for archs, FPIs and selectors."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Generic, Iterator, TypeVar
+
+T = TypeVar("T")
+
+
+class Registry(Generic[T]):
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: Dict[str, T] = {}
+
+    def register(self, name: str, item: T | None = None):
+        """Register an item, usable directly or as a decorator."""
+        if item is not None:
+            if name in self._items:
+                raise KeyError(f"{self.kind} {name!r} already registered")
+            self._items[name] = item
+            return item
+
+        def deco(fn: T) -> T:
+            self.register(name, fn)
+            return fn
+
+        return deco
+
+    def get(self, name: str) -> T:
+        if name not in self._items:
+            known = ", ".join(sorted(self._items))
+            raise KeyError(f"unknown {self.kind} {name!r}; known: {known}")
+        return self._items[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items
+
+    def names(self) -> list[str]:
+        return sorted(self._items)
+
+    def items(self) -> Iterator[tuple[str, T]]:
+        return iter(sorted(self._items.items()))

@@ -1,0 +1,49 @@
+"""Pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count_params(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return int(sum(np.prod(x.shape) if hasattr(x, "shape") else 1
+                   for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays/ShapeDtypeStructs."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_cast(tree, dtype):
+    """Cast every inexact-float leaf of a pytree to `dtype`."""
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(_cast, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_global_norm(tree):
+    """Global L2 norm across all leaves (for grad clipping)."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)

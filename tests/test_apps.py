@@ -1,0 +1,94 @@
+"""App correctness + the paper's qualitative claims on them."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import app_registry, get_app, make_task
+from repro.core import explore, profile
+
+
+def test_all_f32_apps_run_and_profile():
+    for name, app in app_registry.items():
+        if app.target == "double" or name == "ferret":
+            continue
+        task = make_task(app, n_train=1, n_test=0)
+        out = app.fn(*task.train_inputs[0])
+        for leaf in jax.tree.leaves(out):
+            assert np.all(np.isfinite(np.asarray(leaf, np.float64))), name
+        prof = profile(app.fn, *task.train_inputs[0])
+        assert prof.total_flops > 1000, name
+
+
+def test_radar_fft_against_jnp():
+    from repro.apps.radar import _fft, N
+    x = jax.random.normal(jax.random.key(0), (3, N))
+    fr, fi = _fft(x, jnp.zeros_like(x))
+    ref = jnp.fft.fft(x)
+    np.testing.assert_allclose(np.asarray(fr), np.asarray(ref.real),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fi), np.asarray(ref.imag),
+                               atol=1e-3, rtol=1e-3)
+    rr, ri = _fft(fr, fi, inverse=True)
+    np.testing.assert_allclose(np.asarray(rr), np.asarray(x),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_blackscholes_put_call_parity():
+    app = get_app("blackscholes")
+    (spot, strike, rate, vol, t) = make_task(app, n_train=1,
+                                             n_test=0).train_inputs[0]
+    call, put = app.fn(spot, strike, rate, vol, t)
+    lhs = np.asarray(call - put)
+    rhs = np.asarray(spot - strike * jnp.exp(-rate * t))
+    np.testing.assert_allclose(lhs, rhs, atol=2e-3, rtol=1e-3)
+
+
+def test_kmeans_reduces_inertia():
+    app = get_app("kmeans")
+    (pts, init) = make_task(app, n_train=1, n_test=0).train_inputs[0]
+    from repro.apps.kmeans import _distances
+    _, inertia = app.fn(pts, init)
+    d0 = _distances(pts, init)
+    inertia0 = float(jnp.sum(jnp.min(d0, axis=-1)))
+    assert float(inertia) <= inertia0
+
+
+def test_particlefilter_double_precision():
+    with jax.experimental.enable_x64():
+        app = get_app("particlefilter")
+        task = make_task(app, n_train=1, n_test=0)
+        est = app.fn(*task.train_inputs[0])
+        assert est.dtype == jnp.float64
+        assert np.all(np.isfinite(np.asarray(est)))
+
+
+def test_ferret_mixed_precision_profile():
+    with jax.experimental.enable_x64():
+        app = get_app("ferret")
+        task = make_task(app, n_train=1, n_test=0)
+        prof = profile(app.fn, *task.train_inputs[0])
+        dts = prof.dtype_breakdown()
+        assert "float32" in dts and "float64" in dts   # paper Fig. 4
+
+
+def test_heartwall_sensitive_to_truncation():
+    """Paper: heartwall's two FLOP functions are bit-width sensitive."""
+    from repro.core import CurrentScope, MantissaTrunc, neat_transform
+    app = get_app("heartwall")
+    inp = make_task(app, n_train=1, n_test=0).train_inputs[0]
+    exact = np.asarray(app.fn(*inp))
+    rule = CurrentScope(mapping={"normalize": MantissaTrunc(3),
+                                 "correlate": MantissaTrunc(3)})
+    approx = np.asarray(neat_transform(app.fn, rule)(*inp))
+    rel = np.linalg.norm(approx - exact) / np.linalg.norm(exact)
+    assert rel > 0.01      # aggressive truncation visibly hurts
+
+
+def test_explore_savings_positive():
+    task = make_task(get_app("kmeans"), n_train=2, n_test=1)
+    rep = explore(task, family="cip", n_sites=3, pop_size=10, n_gen=3,
+                  max_evals=50, seed=0)
+    assert rep.n_evals <= 50
+    assert rep.savings(0.10) > 0.1
+    assert rep.robustness_error_r > 0.5

@@ -1,0 +1,48 @@
+"""Assert every assigned architecture config matches the assignment's
+exact dimensions."""
+import pytest
+
+from repro.configs import get_arch
+
+ASSIGNED = {
+    # name: (L, d_model, H, kv, d_ff, vocab)
+    "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+    "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+    "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+    "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "seamless-m4t-medium": (24, 1024, 16, 16, 4096, 256206),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_exact_dims(name):
+    cfg = get_arch(name)
+    l, d, h, kv, ff, v = ASSIGNED[name]
+    assert cfg.n_layers == l
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_family_features():
+    assert get_arch("qwen3-moe-30b-a3b").n_experts == 128
+    assert get_arch("qwen3-moe-30b-a3b").top_k == 8
+    assert get_arch("granite-moe-1b-a400m").n_experts == 32
+    assert get_arch("granite-moe-1b-a400m").top_k == 8
+    assert get_arch("zamba2-7b").ssm_state == 64
+    assert get_arch("h2o-danube-3-4b").sliding_window is not None
+    assert get_arch("qwen2.5-32b").qkv_bias
+    assert get_arch("qwen2-72b").qkv_bias
+    assert get_arch("codeqwen1.5-7b").qkv_bias
+    assert get_arch("chameleon-34b").qk_norm
+    enc = get_arch("seamless-m4t-medium")
+    assert enc.n_enc_layers == 12 and enc.n_dec_layers == 12
+    kinds = get_arch("xlstm-1.3b").block_kinds
+    assert kinds.count("slstm") == 6 and kinds.count("mlstm") == 42

@@ -1,0 +1,166 @@
+"""Distribution layer: sharding specs, dry-run lowering on a small fake
+mesh, pipeline parallelism — run in subprocesses because the host device
+count must be set before jax initializes."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_param_shardings_divisibility():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_arch
+        from repro.models import build_model
+        from repro.sharding.specs import make_rules, params_shardings
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh)
+        cfg = get_arch("granite-moe-1b-a400m").reduced(
+            n_layers=2, d_model=64, n_heads=4, d_ff=32, vocab=512)
+        model = build_model(cfg)
+        shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        sh = params_shardings(rules, shape)
+        # every sharding must evenly divide its array
+        for s, leaf in zip(jax.tree.leaves(sh), jax.tree.leaves(shape)):
+            spec = s.spec
+            for dim, ax in zip(leaf.shape, spec):
+                if ax is None: continue
+                axes = (ax,) if isinstance(ax, str) else ax
+                size = 1
+                for a in axes: size *= mesh.shape[a]
+                assert dim % size == 0, (leaf.shape, spec)
+        print("SPECS_OK")
+    """)
+    assert "SPECS_OK" in out
+
+
+def test_tiny_dryrun_train_and_decode():
+    """A miniature of launch/dryrun.py on a 2x4 mesh: lower + compile a
+    train step and a decode step with full sharding plumbing."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_arch
+        from repro.models import build_model
+        from repro.optim.adamw import adamw_init, adamw_update
+        from repro.sharding.specs import *
+        import dataclasses
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh)
+        cfg = get_arch("qwen2.5-32b").reduced(
+            n_layers=2, d_model=64, n_heads=4, d_ff=128, vocab=512)
+        cfg = dataclasses.replace(cfg, remat=True)
+        model = build_model(cfg)
+        pshape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        oshape = jax.eval_shape(lambda: adamw_init(pshape))
+        p_sh = params_shardings(rules, pshape)
+        o_sh = opt_state_shardings(rules, oshape, pshape)
+        batch = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+        b_sh = batch_shardings(rules, batch)
+        def train_step(p, o, b):
+            loss, g = jax.value_and_grad(
+                lambda pp: model.loss(pp, b)[0])(p)
+            p, o = adamw_update(g, o, p, 1e-3)
+            return p, o, loss
+        with mesh, use_activation_sharding(rules):
+            c = jax.jit(train_step, in_shardings=(p_sh, o_sh, b_sh),
+                        out_shardings=(p_sh, o_sh, None)
+                        ).lower(pshape, oshape, batch).compile()
+        assert c.memory_analysis() is not None
+        print("TRAIN_LOWERED", int(c.cost_analysis().get("flops", 0)) > 0)
+        # decode
+        cshape = jax.eval_shape(lambda: model.init_cache(8, 64))
+        c_sh = cache_shardings(rules, cshape, 8)
+        b2 = {"tokens": jax.ShapeDtypeStruct((8, 1), jnp.int32)}
+        b2_sh = batch_shardings(rules, b2)
+        def serve_step(p, c, b):
+            return model.decode_step(p, c, b["tokens"])
+        with mesh:
+            c2 = jax.jit(serve_step, in_shardings=(p_sh, c_sh, b2_sh)
+                         ).lower(pshape, cshape, b2).compile()
+        print("DECODE_LOWERED")
+    """)
+    assert "TRAIN_LOWERED True" in out and "DECODE_LOWERED" in out
+
+
+def test_collective_parser_finds_traffic():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.roofline import parse_collective_bytes
+        mesh = jax.make_mesh((4,), ("model",))
+        w_sh = NamedSharding(mesh, P(None, "model"))
+        x_sh = NamedSharding(mesh, P(None))
+        def f(x, w):
+            return (x @ w).sum(-1)    # contract sharded dim -> all-reduce
+        c = jax.jit(f, in_shardings=(x_sh, w_sh)).lower(
+            jax.ShapeDtypeStruct((8, 64), jnp.float32),
+            jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+        coll = parse_collective_bytes(c.as_text())
+        print("WIRE", sum(coll.values()) > 0)
+    """, devices=4)
+    assert "WIRE True" in out
+
+
+def test_pipeline_forward_equivalence():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.sharding.pipeline import pipeline_forward
+        mesh = jax.make_mesh((4,), ("pod",))
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+        n_stage, d = 4, 16
+        ws = jax.random.normal(jax.random.key(0), (n_stage, d, d)) * 0.5
+        x = jax.random.normal(jax.random.key(1), (8, d))
+        run = pipeline_forward(stage_fn, mesh, axis="pod",
+                               n_microbatches=2)
+        got = run(ws, x)
+        want = x
+        for i in range(n_stage):
+            want = stage_fn(ws[i], want)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+        print("PIPELINE_OK")
+    """, devices=4)
+    assert "PIPELINE_OK" in out
+
+
+def test_moe_ep_shard_map():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.configs import get_arch
+        from repro.models.moe import init_moe, moe_ffn, _route
+        from repro.models.moe import _expert_ffn_dense
+        from repro.sharding.specs import (make_rules,
+                                          use_activation_sharding)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh)
+        cfg = get_arch("granite-moe-1b-a400m").reduced(
+            n_layers=2, d_model=32, n_heads=4, d_ff=16, vocab=128)
+        p = init_moe(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+        want = moe_ffn(p, x, cfg, impl="ragged")
+        with mesh, use_activation_sharding(rules):
+            got = jax.jit(lambda p, x: moe_ffn(p, x, cfg, impl="ep"))(p, x)
+        # EP uses capacity-limited dispatch; allow small dropped-token gap
+        diff = float(jnp.mean(jnp.abs(got - want)))
+        scale = float(jnp.mean(jnp.abs(want))) + 1e-9
+        print("EP_DIFF", diff / scale < 0.25, diff / scale)
+    """, devices=8)
+    assert "EP_DIFF True" in out, out

@@ -1,0 +1,96 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CurrentScope, MantissaTrunc, WholeProgram,
+                        neat_transform, neat_transform_dynamic, pscope)
+
+
+def f_scoped(x):
+    with pscope("heavy"):
+        y = x * 1.23456789
+    with pscope("light"):
+        z = x + 0.98765432
+    return y + z
+
+
+def test_identity_rule_is_exact():
+    x = jnp.linspace(0.0, 3.0, 32)
+    out = neat_transform(f_scoped, WholeProgram(fpi=MantissaTrunc(24)))(x)
+    assert np.allclose(np.asarray(out), np.asarray(f_scoped(x)), atol=0)
+
+
+def test_scope_selective():
+    x = jnp.linspace(1.0, 2.0, 16)
+    rule = CurrentScope(mapping={"heavy": MantissaTrunc(3)})
+    out = neat_transform(f_scoped, rule)(x)
+    exact = f_scoped(x)
+    assert not np.allclose(np.asarray(out), np.asarray(exact))
+    # only-light rule perturbs differently
+    rule2 = CurrentScope(mapping={"light": MantissaTrunc(3)})
+    out2 = neat_transform(f_scoped, rule2)(x)
+    assert not np.allclose(np.asarray(out2), np.asarray(out))
+
+
+def test_control_flow_scan():
+    def f(x):
+        def body(c, t):
+            with pscope("inner"):
+                return c * 1.1 + t, c
+        c, ys = jax.lax.scan(body, x, jnp.arange(4.0))
+        return c + ys.sum()
+
+    x = jnp.float32(1.0)
+    exact = f(x)
+    out = neat_transform(f, WholeProgram(fpi=MantissaTrunc(24)))(x)
+    assert np.allclose(float(out), float(exact))
+    out_q = neat_transform(f, WholeProgram(fpi=MantissaTrunc(4)))(x)
+    assert not np.isnan(float(out_q))
+
+
+def test_control_flow_cond_while():
+    def f(x):
+        y = jax.lax.cond(x.sum() > 0, lambda v: v * 2.0,
+                         lambda v: v - 1.0, x)
+        def cond(c):
+            return c[0] < 10.0
+        def body(c):
+            return (c[0] * 1.5, c[1] + 1)
+        out = jax.lax.while_loop(cond, body, (y.sum(), 0))
+        return out[0]
+
+    x = jnp.ones(4)
+    exact = float(f(x))
+    got = float(neat_transform(f, WholeProgram(fpi=MantissaTrunc(24)))(x))
+    assert np.isclose(got, exact)
+    q = float(neat_transform(f, WholeProgram(fpi=MantissaTrunc(5)))(x))
+    assert np.isfinite(q)
+
+
+def test_census_collected():
+    fn = neat_transform(f_scoped, WholeProgram(fpi=MantissaTrunc(8)))
+    fn(jnp.ones(8))
+    assert fn.last_census
+    scopes = {k[0] for k in fn.last_census}
+    assert any("heavy" in s for s in scopes)
+
+
+def test_dynamic_transform_jit_and_grad():
+    g = jax.jit(neat_transform_dynamic(f_scoped, "cip", ["heavy", "light"]))
+    x = jnp.linspace(1.0, 2.0, 8)
+    full = g(jnp.array([24, 24], jnp.int32), x)
+    assert np.allclose(np.asarray(full), np.asarray(f_scoped(x)), atol=1e-7)
+    qa = g(jnp.array([3, 24], jnp.int32), x)
+    qb = g(jnp.array([24, 3], jnp.int32), x)
+    assert not np.allclose(np.asarray(qa), np.asarray(qb))
+
+
+def test_pytree_inputs_outputs():
+    def f(d):
+        with pscope("s"):
+            return {"out": d["a"] * 2.0 + d["b"]}
+
+    rule = WholeProgram(fpi=MantissaTrunc(24))
+    got = neat_transform(f, rule)({"a": jnp.ones(3), "b": jnp.ones(3)})
+    assert np.allclose(np.asarray(got["out"]), 3.0)

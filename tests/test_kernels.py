@@ -1,0 +1,94 @@
+"""Per-kernel allclose vs the ref.py oracles, shape/dtype sweeps, in
+interpret mode (the kernels' TPU target is exercised structurally)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (300,), (17, 130), (2, 3, 65)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits", [2, 8, 16])
+def test_mantissa_trunc_kernel(shape, dtype, bits):
+    x = jnp.asarray(RNG.standard_normal(shape) * 10, dtype)
+    got = ops.mantissa_trunc(x, bits, backend="interpret")
+    want = ref.mantissa_trunc_ref(x, bits)
+    assert np.array_equal(np.asarray(got, np.float64),
+                          np.asarray(want, np.float64))
+
+
+@pytest.mark.parametrize("mode", ["rne", "trunc"])
+def test_mantissa_trunc_modes(mode):
+    x = jnp.asarray(RNG.standard_normal(512), jnp.float32)
+    got = ops.mantissa_trunc(x, 6, mode, backend="interpret")
+    want = ref.mantissa_trunc_ref(x, 6, mode)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (100, 70, 90),
+                                   (128, 256, 128), (33, 17, 65)])
+def test_quant_matmul_kernel(m, k, n):
+    a = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((k, n)), jnp.float32)
+    got = ops.quant_matmul(a, b, a_bits=8, b_bits=8, out_bits=12,
+                           backend="interpret")
+    want = ref.quant_matmul_ref(a, b, 8, 8, 12)
+    # blocked accumulation order differs from the oracle's single dot
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-2, rtol=5e-3)
+
+
+def test_quant_matmul_full_bits_is_plain_matmul():
+    a = jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((64, 64)), jnp.float32)
+    got = ops.quant_matmul(a, b, backend="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 48])
+@pytest.mark.parametrize("tq,tk", [(64, 64), (64, 128), (33, 77)])
+def test_flash_attention_kernel(causal, window, tq, tk):
+    if tq > tk:
+        pytest.skip("queries longer than keys undefined here")
+    b, hq, hkv, d = 2, 4, 2, 32
+    q = jnp.asarray(RNG.standard_normal((b, hq, tq, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, tk, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, tk, d)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              backend="interpret")
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_flash_attention_fused_truncation():
+    b, hq, hkv, t, d = 1, 2, 1, 64, 16
+    q = jnp.asarray(RNG.standard_normal((b, hq, t, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, t, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, t, d)), jnp.float32)
+    got = ops.flash_attention(q, k, v, qk_bits=8, pv_bits=10,
+                              backend="interpret")
+    want = ref.flash_attention_ref(q, k, v, qk_bits=8, pv_bits=10)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-3, rtol=1e-2)
+    # and truncation visibly changes the result
+    exact = ref.flash_attention_ref(q, k, v)
+    assert not np.allclose(np.asarray(got), np.asarray(exact))
+
+
+def test_bf16_flash():
+    b, h, t, d = 1, 2, 64, 32
+    q = jnp.asarray(RNG.standard_normal((b, h, t, d)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((b, h, t, d)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((b, h, t, d)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, backend="interpret")
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)

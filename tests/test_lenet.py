@@ -1,0 +1,69 @@
+"""LeNet-5 case study (paper §V-H): training on synthetic digits, PLC/PLI
+placement over layers, per-layer bit recommendation path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LayerCategory, LayerInstance, MantissaTrunc,
+                        neat_transform, profile, use_rule)
+from repro.data.synthetic import synthetic_digits
+from repro.models.lenet import (accuracy, init_lenet5, lenet5_forward,
+                                lenet5_loss)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    imgs, labels = synthetic_digits(512, seed=0)
+    params = init_lenet5(jax.random.key(0))
+
+    @jax.jit
+    def step(p, i, l):
+        g = jax.grad(lenet5_loss)(p, i, l)
+        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+
+    for epoch in range(60):
+        params = step(params, imgs, labels)
+    return params, imgs, labels
+
+
+def test_lenet_trains(trained):
+    params, imgs, labels = trained
+    acc = float(accuracy(params, imgs, labels))
+    assert acc > 0.85, acc
+
+
+def test_lenet_flop_breakdown(trained):
+    """Paper Fig. 10: conv layers dominate the FLOPs."""
+    params, imgs, _ = trained
+    prof = profile(lenet5_forward, params, imgs[:64])
+    by_leaf = {}
+    for path, st in prof.scopes.items():
+        leaf = path.split("/")[-1] if path else ""
+        by_leaf[leaf] = by_leaf.get(leaf, 0) + st.flops
+    conv = sum(v for k, v in by_leaf.items() if k.startswith("conv"))
+    assert conv / prof.total_flops > 0.5
+
+
+def test_lenet_plc_rule(trained):
+    params, imgs, labels = trained
+    base = float(accuracy(params, imgs, labels))
+    rule = LayerCategory(mapping={"conv": MantissaTrunc(8),
+                                  "tanh": MantissaTrunc(8),
+                                  "fc": MantissaTrunc(8)})
+    fn = neat_transform(lambda im: lenet5_forward(params, im), rule)
+    logits = fn(imgs[:256])
+    acc = float(jnp.mean((jnp.argmax(logits, -1) == labels[:256])
+                         .astype(jnp.float32)))
+    assert acc > base - 0.1     # 8 mantissa bits barely hurts (paper)
+
+
+def test_lenet_pli_differs_from_plc(trained):
+    params, imgs, _ = trained
+    plc = LayerCategory(mapping={"conv": MantissaTrunc(2)})
+    pli = LayerInstance(mapping={"conv1": MantissaTrunc(2)})
+    f_plc = neat_transform(lambda im: lenet5_forward(params, im), plc)
+    f_pli = neat_transform(lambda im: lenet5_forward(params, im), pli)
+    a = np.asarray(f_plc(imgs[:32]))
+    b = np.asarray(f_pli(imgs[:32]))
+    assert not np.allclose(a, b)   # PLC hits all convs, PLI only conv1

@@ -1,0 +1,91 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.utils.numerics import (bits_for_storage, float_spec,
+                                  manipulated_bits, truncate_mantissa,
+                                  truncate_mantissa_dynamic)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+@pytest.mark.parametrize("bits", [1, 2, 5, 8])
+def test_idempotent(dtype, bits):
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(256), dtype)
+    once = truncate_mantissa(x, bits)
+    twice = truncate_mantissa(once, bits)
+    assert np.array_equal(np.asarray(once, np.float64),
+                          np.asarray(twice, np.float64))
+
+
+def test_identity_at_full_width():
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(64), jnp.float32)
+    assert np.array_equal(np.asarray(truncate_mantissa(x, 24)),
+                          np.asarray(x))
+    # clamping: wider than native is identity too
+    assert np.array_equal(np.asarray(truncate_mantissa(x, 53)),
+                          np.asarray(x))
+
+
+def test_special_values_preserved():
+    x = jnp.array([np.nan, np.inf, -np.inf, 0.0, -0.0], jnp.float32)
+    for bits in (1, 4, 12):
+        y = np.asarray(truncate_mantissa(x, bits))
+        assert np.isnan(y[0]) and np.isinf(y[1]) and np.isinf(y[2])
+        assert y[3] == 0.0 and y[4] == 0.0
+
+
+def test_dynamic_matches_static():
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(512),
+                    jnp.float32)
+    for bits in range(1, 25):
+        a = truncate_mantissa(x, bits, "rne")
+        b = truncate_mantissa_dynamic(x, jnp.int32(bits), "rne")
+        assert np.array_equal(np.asarray(a).view(np.uint32),
+                              np.asarray(b).view(np.uint32)), bits
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(min_value=-1e20, max_value=1e20,
+                 allow_nan=False, allow_infinity=False),
+       st.integers(min_value=1, max_value=24))
+def test_error_bounded_by_ulp(v, bits):
+    """|trunc(x) - x| <= 2^(1-bits) * |x| for RNE at `bits` mantissa."""
+    x = jnp.float32(v)
+    y = float(truncate_mantissa(x, bits))
+    if v == 0.0:
+        assert y == 0.0
+        return
+    rel = abs(y - float(x)) / max(abs(float(x)), 1e-38)
+    assert rel <= 2.0 ** (-bits) * 1.0001
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=23))
+def test_error_monotone_in_bits(bits):
+    """Fewer bits can only increase (or keep) the error."""
+    x = jnp.asarray(np.linspace(0.1, 10.0, 257), jnp.float32)
+    e_low = float(jnp.sum(jnp.abs(truncate_mantissa(x, bits) - x)))
+    e_high = float(jnp.sum(jnp.abs(truncate_mantissa(x, bits + 1) - x)))
+    assert e_high <= e_low * 1.0001
+
+
+def test_manipulated_bits():
+    x = jnp.array([1.0, 1.5, 1.25, np.pi], jnp.float32)
+    got = list(np.asarray(manipulated_bits(x)))
+    assert got[0] == 1 and got[1] == 2 and got[2] == 3 and got[3] == 24
+
+
+def test_manipulated_bits_after_truncation_bounded():
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(1024),
+                    jnp.float32)
+    for bits in (3, 7, 13):
+        t = truncate_mantissa(x, bits)
+        assert int(jnp.max(manipulated_bits(t))) <= bits
+
+
+def test_bits_for_storage():
+    assert bits_for_storage(24, jnp.float32) == 32
+    assert bits_for_storage(1, jnp.float32) == 9
+    assert bits_for_storage(8, jnp.bfloat16) == 16

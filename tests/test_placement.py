@@ -1,0 +1,88 @@
+import jax.numpy as jnp
+import pytest
+
+from repro.core.fpi import (IDENTITY, MantissaTrunc, OperandTrunc, PerOpTrunc,
+                            single_precision_fpis, double_precision_fpis)
+from repro.core.placement import (CallStack, CurrentScope, LayerCategory,
+                                  LayerInstance, WholeProgram,
+                                  register_fp_selector, rule_from_genome,
+                                  selector_registry)
+
+
+def test_fpi_families_sizes():
+    assert len(single_precision_fpis()) == 24      # paper Table I
+    assert len(double_precision_fpis()) == 53
+
+
+def test_wp_selects_everywhere():
+    rule = WholeProgram(fpi=MantissaTrunc(7))
+    for stack in [(), ("a",), ("a", "b", "c")]:
+        assert rule.select(stack, "mul", jnp.float32).mantissa_bits(
+            jnp.float32) == 7
+    # wrong target dtype -> identity
+    assert rule.select(("a",), "mul", jnp.float64) is IDENTITY
+
+
+def test_cip_innermost_only():
+    rule = CurrentScope(mapping={"fft": MantissaTrunc(5)},
+                        default=MantissaTrunc(20))
+    assert rule.select(("lpf", "fft"), "add",
+                       jnp.float32).mantissa_bits(jnp.float32) == 5
+    # fft on the stack but not innermost -> default
+    assert rule.select(("fft", "post"), "add",
+                       jnp.float32).mantissa_bits(jnp.float32) == 20
+
+
+def test_fcs_walks_outward():
+    rule = CallStack(mapping={"lpf": MantissaTrunc(4),
+                              "pc": MantissaTrunc(24)})
+    assert rule.select(("lpf", "fft"), "mul",
+                       jnp.float32).mantissa_bits(jnp.float32) == 4
+    assert rule.select(("pc", "fft"), "mul",
+                       jnp.float32).mantissa_bits(jnp.float32) == 24
+    # innermost match wins over outer
+    rule2 = CallStack(mapping={"a": MantissaTrunc(3),
+                               "b": MantissaTrunc(9)})
+    assert rule2.select(("a", "b", "x"), "mul",
+                        jnp.float32).mantissa_bits(jnp.float32) == 9
+
+
+def test_plc_category_strips_digits():
+    rule = LayerCategory(mapping={"conv": MantissaTrunc(6)})
+    for leaf in ("conv1", "conv2", "conv12"):
+        assert rule.select(("model", leaf), "conv",
+                           jnp.float32).mantissa_bits(jnp.float32) == 6
+
+
+def test_pli_longest_prefix():
+    rule = LayerInstance(mapping={"m/conv1": MantissaTrunc(3),
+                                  "m": MantissaTrunc(11)})
+    assert rule.select(("m", "conv1"), "conv",
+                       jnp.float32).mantissa_bits(jnp.float32) == 3
+    assert rule.select(("m", "conv2"), "conv",
+                       jnp.float32).mantissa_bits(jnp.float32) == 11
+
+
+def test_per_op_fpi():
+    fpi = PerOpTrunc(bits_by_op=(("add", 8), ("mul", 24)))
+    x = jnp.float32(1.2345671)
+    approx_add = fpi.perform_operation("add", (x,), x)
+    exact_mul = fpi.perform_operation("mul", (x,), x)
+    assert float(exact_mul) == float(x)
+    assert float(approx_add) != float(x)
+
+
+def test_operand_trunc_fpi():
+    fpi = OperandTrunc(bits=4)
+    x = jnp.float32(1.23456)
+    (qx,) = fpi.quantize_operands("mul", (x,))
+    assert float(qx) != float(x)
+    assert fpi.perform_operation("mul", (x,), x) is x
+
+
+def test_genome_bridge_and_registry():
+    for family in ("wp", "cip", "fcs", "plc", "pli"):
+        rule = rule_from_genome(family, ["f1", "f2"], [4, 9])
+        assert rule.tunable_sites()
+    r = register_fp_selector("test_sel", WholeProgram(fpi=MantissaTrunc(5)))
+    assert selector_registry.get("test_sel") is r

@@ -1,0 +1,75 @@
+"""Scope-mode quantization (STE gradients, rule contexts) + energy model
+details."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CurrentScope, MantissaTrunc, WholeProgram,
+                        census_energy, dynamic_fpu_energy, neat_quantize,
+                        pscope, quantize_here, use_rule)
+from repro.core.energy import _epi
+from repro.core.quantize import ste_truncate
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(ste_truncate(x, 4) ** 2))(
+        jnp.array([1.234, 2.345]))
+    # d/dx sum(q(x)^2) with STE = 2*q(x)
+    q = ste_truncate(jnp.array([1.234, 2.345]), 4)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(q), rtol=1e-6)
+
+
+def test_quantize_here_requires_context():
+    x = jnp.float32(1.2345678)
+    assert float(quantize_here(x)) == float(x)     # no rule -> identity
+    rule = WholeProgram(fpi=MantissaTrunc(3))
+    with use_rule(rule):
+        assert float(quantize_here(x)) != float(x)
+    assert float(quantize_here(x)) == float(x)     # context restored
+
+
+def test_quantize_here_scope_sensitive():
+    rule = CurrentScope(mapping={"hot": MantissaTrunc(2)})
+    x = jnp.float32(1.2345678)
+    with use_rule(rule):
+        with pscope("hot"):
+            q_hot = float(quantize_here(x))
+        with pscope("cold"):
+            q_cold = float(quantize_here(x))
+    assert q_hot != float(x) and q_cold == float(x)
+
+
+def test_neat_quantize_bf16_mant8_identity():
+    x = jnp.asarray([1.5, 2.25], jnp.bfloat16)
+    out = neat_quantize(x, MantissaTrunc(8))
+    assert np.array_equal(np.asarray(out, np.float32),
+                          np.asarray(x, np.float32))
+
+
+def test_epi_table_orderings():
+    # paper Fig. 1: div > mul > add; 64-bit > 32-bit
+    assert _epi("div", "float64") > _epi("mul", "float64") > \
+        _epi("add", "float64")
+    assert _epi("add", "float64") > _epi("add", "float32")
+
+
+def test_census_energy_scales_with_bits():
+    census = {("f/hot", "mul", "float32"): 1000,
+              ("f/cold", "add", "float32"): 500}
+    base = census_energy(census, None).fpu_pj
+    rule = CurrentScope(mapping={"hot": MantissaTrunc(6)})
+    low = census_energy(census, rule).fpu_pj
+    assert low < base
+    # only the hot scope scaled: delta = 1000*epi_mul*(1 - 6/24)
+    expect = base - 1000 * _epi("mul", "float32") * (1 - 6 / 24)
+    assert abs(low - expect) < 1e-6
+
+
+def test_dynamic_energy_decreases_after_truncation():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(4096),
+                    jnp.float32)
+    from repro.utils.numerics import truncate_mantissa
+    e_full = dynamic_fpu_energy({"s": x})
+    e_trunc = dynamic_fpu_energy({"s": truncate_mantissa(x, 5)})
+    assert e_trunc < 0.5 * e_full

@@ -1,0 +1,71 @@
+"""Roofline math + HLO collective-parsing units."""
+import pytest
+
+from repro.launch.roofline import (Roofline, model_flops_for,
+                                   parse_collective_bytes,
+                                   _split_computations)
+from repro.configs import get_arch
+
+HLO = """\
+HloModule test
+
+%body.1 (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %ag = f32[8,8]{1,0} all-gather(%p), replica_groups=[4,4]<=[16], dims={0}
+  ROOT %t = tuple(%i, %ag)
+}
+
+%cond.1 (arg: (s32[], f32[8,8])) -> pred[] {
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (p0: f32[16,16]) -> f32[16,16] {
+  %ar = f32[16,16]{1,0} all-reduce(%p0), replica_groups=[2,8]<=[16], to_apply=%add
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[16,16]{1,0} copy(%ar)
+}
+"""
+
+
+def test_split_computations():
+    comps, entry = _split_computations(HLO)
+    assert entry == "main"
+    assert "body.1" in comps and "cond.1" in comps
+
+
+def test_collective_parse_with_loop_trips():
+    out = parse_collective_bytes(HLO)
+    # all-reduce: 16*16*4 bytes * 2 * (7/8) ring
+    ar = 16 * 16 * 4 * 2 * (7 / 8)
+    # all-gather inside while: 8*8*4 * (3/4) * 10 trips
+    ag = 8 * 8 * 4 * (3 / 4) * 10
+    assert out["all-reduce"] == pytest.approx(ar)
+    assert out["all-gather"] == pytest.approx(ag)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops_per_chip=197e12, hbm_bytes_per_chip=819e9,
+                 wire_bytes_per_chip=100e9, collectives={},
+                 model_flops=197e12 * 256, chips=256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(2.0)
+    assert r.bottleneck == "collective"
+    assert r.step_s == pytest.approx(2.0)
+    assert r.mfu == pytest.approx(0.5)
+    assert r.useful_flop_ratio == pytest.approx(1.0)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_arch("qwen2-72b")
+    train = model_flops_for(cfg, "train", 4096, 256)
+    decode = model_flops_for(cfg, "decode", 32768, 128)
+    assert train > 1e17
+    assert decode == pytest.approx(2.0 * cfg.active_param_count() * 128)
+
+
+def test_moe_active_flops_used():
+    cfg = get_arch("qwen3-moe-30b-a3b")
+    f = model_flops_for(cfg, "train", 4096, 256)
+    # 6 * N_active * D with N_active ~3B, D=1M tokens
+    assert f == pytest.approx(6.0 * cfg.active_param_count() * 4096 * 256)

@@ -1,0 +1,104 @@
+"""NSGA-II, Pareto analysis, explorer (+ hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nsga2 import (Evaluated, crowding_distance, dominates,
+                              fast_non_dominated_sort, nsga2, pareto_front)
+from repro.core.pareto import (TradeoffPoint, correlation,
+                               energy_at_threshold, harmonic_mean,
+                               lower_convex_hull, pareto_points,
+                               savings_at_threshold)
+
+
+def test_dominates():
+    assert dominates((1, 1), (2, 2))
+    assert dominates((1, 2), (1, 3))
+    assert not dominates((1, 2), (2, 1))
+    assert not dominates((1, 1), (1, 1))
+
+
+def test_fast_non_dominated_sort():
+    objs = np.array([[1, 1], [2, 2], [1, 2], [2, 1], [3, 3]])
+    fronts = fast_non_dominated_sort(objs)
+    assert set(fronts[0].tolist()) == {0}
+    assert set(fronts[1].tolist()) == {2, 3}
+    assert set(fronts[2].tolist()) == {1}
+
+
+def test_crowding_boundaries_infinite():
+    objs = np.array([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+    cd = crowding_distance(objs)
+    assert np.isinf(cd[0]) and np.isinf(cd[3])
+
+
+def test_nsga2_converges_on_known_front():
+    # objectives: (sum(bits)/max, sum((24-bits)^2)) — front = tradeoff
+    def ev(g):
+        b = np.asarray(g)
+        return (b.sum() / (24 * len(b)), float(((24 - b) ** 2).sum()) / 500)
+
+    res = nsga2(ev, n_genes=4, low=1, high=24, pop_size=16, n_gen=8,
+                max_evals=200, seed=1)
+    assert res.n_evals <= 200
+    front = res.front()
+    # front must be mutually non-dominated
+    for p in front:
+        assert not any(dominates(q.objectives, p.objectives)
+                       for q in front if q is not p)
+    # extremes discovered
+    assert any(e.genome == (24, 24, 24, 24) for e in res.evaluated)
+
+
+def test_budget_respected():
+    calls = []
+
+    def ev(g):
+        calls.append(g)
+        return (sum(g), -sum(g))
+
+    nsga2(ev, n_genes=3, low=1, high=24, pop_size=10, n_gen=50,
+          max_evals=37, seed=0)
+    assert len(calls) <= 37
+
+
+def test_pareto_and_hull():
+    pts = [TradeoffPoint(e, en) for e, en in
+           [(0.0, 1.0), (0.01, 0.8), (0.02, 0.9), (0.05, 0.5),
+            (0.05, 0.45), (0.2, 0.44)]]
+    front = pareto_points(pts)
+    assert [(p.error, p.energy) for p in front] == \
+        [(0.0, 1.0), (0.01, 0.8), (0.05, 0.45), (0.2, 0.44)]
+    hull = lower_convex_hull(pts)
+    assert len(hull) <= len(front)
+    assert energy_at_threshold(pts, 0.03) == 0.8
+    assert savings_at_threshold(pts, 0.05) == pytest.approx(0.55)
+    assert savings_at_threshold(pts, -1.0) == 0.0   # nothing qualifies
+
+
+def test_harmonic_mean_and_correlation():
+    assert harmonic_mean([1.0, 1.0]) == pytest.approx(1.0)
+    assert correlation([1, 2, 3], [2, 4, 6]) == pytest.approx(1.0)
+    assert correlation([1, 2, 3], [3, 2, 1]) == pytest.approx(-1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 1), st.floats(0.1, 1)),
+                min_size=1, max_size=40))
+def test_hull_below_all_points(pts_raw):
+    pts = [TradeoffPoint(e, en) for e, en in pts_raw]
+    hull = lower_convex_hull(pts)
+    # hull points are a subset and non-dominated
+    for h in hull:
+        assert not any((p.error <= h.error and p.energy < h.energy)
+                       for p in pts)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_nsga2_deterministic_given_seed(seed):
+    def ev(g):
+        return (sum(g), -min(g))
+    a = nsga2(ev, 3, 1, 8, pop_size=6, n_gen=2, max_evals=30, seed=seed)
+    b = nsga2(ev, 3, 1, 8, pop_size=6, n_gen=2, max_evals=30, seed=seed)
+    assert [e.genome for e in a.evaluated] == [e.genome for e in b.evaluated]

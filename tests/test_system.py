@@ -1,0 +1,57 @@
+"""End-to-end behaviour tests for the NEAT system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import get_app, make_task
+from repro.core import (CallStack, CurrentScope, IDENTITY, MantissaTrunc,
+                        WholeProgram, explore, neat_transform, profile,
+                        static_energy)
+
+
+def test_whole_system_blackscholes_cip_beats_wp():
+    """Paper §V-C: per-function placement finds configs at least as good
+    as whole-program at matched error (CIP's space contains WP)."""
+    task = make_task(get_app("blackscholes"), n_train=2, n_test=1)
+    rep_wp = explore(task, family="wp", n_sites=1, pop_size=10, n_gen=4,
+                     max_evals=30, seed=0, robustness=False)
+    rep_cip = explore(task, family="cip", n_sites=4, pop_size=14, n_gen=5,
+                      max_evals=80, seed=0, robustness=False)
+    for thr in (0.05, 0.10):
+        assert rep_cip.savings(thr) >= rep_wp.savings(thr) - 0.02, thr
+
+
+def test_radar_fcs_distinguishes_callers():
+    """Paper §V-F: FCS can assign different FPIs to the two FFT call
+    sites; CIP cannot."""
+    app = get_app("radar")
+    inp = make_task(app, n_train=1, n_test=0).train_inputs[0]
+    exact = np.asarray(app.fn(*inp))
+    # FCS: aggressive truncation in the LPF path, exact in PC
+    rule_fcs = CallStack(mapping={"lpf": MantissaTrunc(6),
+                                  "pc": MantissaTrunc(24)})
+    rule_cip_like = CurrentScope(mapping={"fft": MantissaTrunc(6)})
+    out_fcs = np.asarray(neat_transform(app.fn, rule_fcs)(*inp))
+    out_cip = np.asarray(neat_transform(app.fn, rule_cip_like)(*inp))
+    err_fcs = np.linalg.norm(out_fcs - exact) / np.linalg.norm(exact)
+    err_cip = np.linalg.norm(out_cip - exact) / np.linalg.norm(exact)
+    # FCS truncates only the LPF call; CIP hits both -> FCS strictly closer
+    assert 0 < err_fcs < err_cip
+
+
+def test_profile_top10_coverage():
+    """Paper §V-C: the top-10 functions cover ~all FLOPs."""
+    for name in ("blackscholes", "kmeans", "radar", "fluidanimate"):
+        task = make_task(get_app(name), n_train=1, n_test=0)
+        prof = profile(get_app(name).fn, *task.train_inputs[0])
+        cov = prof.coverage(prof.top_functions(10))
+        assert cov >= 0.85, (name, cov)
+
+
+def test_energy_monotone_in_bits():
+    task = make_task(get_app("kmeans"), n_train=1, n_test=0)
+    prof = profile(get_app("kmeans").fn, *task.train_inputs[0])
+    energies = [static_energy(prof, WholeProgram(fpi=MantissaTrunc(b))).fpu_pj
+                for b in (4, 8, 16, 24)]
+    assert all(a < b for a, b in zip(energies, energies[1:]))
