@@ -18,10 +18,11 @@ def main() -> None:
                     help="substring filter on benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import lenet_bench, lm_precision, paper_figs
-    from benchmarks import roofline_table
+    from benchmarks import explorer_bench, lenet_bench, lm_precision
+    from benchmarks import paper_figs, roofline_table
 
     benches = [
+        ("explorer_pop", explorer_bench.explorer_population),
         ("fig04", paper_figs.fig04_flop_breakdown),
         ("fig05_06", paper_figs.fig05_06_wp_vs_cip),
         ("fig07", paper_figs.fig07_memory_savings),

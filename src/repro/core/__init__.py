@@ -12,18 +12,21 @@ from repro.core.scope import pscope, current_stack, scope_path
 from repro.core.quantize import (
     neat_quantize, quantize_here, use_rule, active_rule, ste_truncate,
 )
-from repro.core.interpreter import neat_transform, neat_transform_dynamic
+from repro.core.interpreter import (
+    neat_transform, neat_transform_dynamic, neat_transform_population,
+)
 from repro.core.profiler import profile, Profile
 from repro.core.energy import (
     EnergyReport, static_energy, census_energy, dynamic_fpu_energy,
+    EnergyCoeffs, energy_coeffs, population_energy,
     EPI_PJ, MEM_PJ_PER_BYTE,
 )
-from repro.core.nsga2 import nsga2, NSGA2Result, Evaluated, pareto_front
+from repro.core.nsga2 import nsga2, NSGA2, NSGA2Result, Evaluated, pareto_front
 from repro.core.pareto import (
     TradeoffPoint, pareto_points, lower_convex_hull, energy_at_threshold,
     savings_at_threshold, harmonic_mean, correlation,
 )
 from repro.core.explorer import (
     ExplorationTask, ExplorationReport, explore, default_error_fn,
-    sites_for_family,
+    sites_for_family, PopulationEvaluator,
 )

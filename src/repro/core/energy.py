@@ -16,13 +16,14 @@ Two estimators, matching the paper:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fpi import FpImplementation, IDENTITY
-from repro.core.placement import PlacementRule
+from repro.core.placement import (PlacementRule, _is_target_dtype,
+                                  site_index_for_stack)
 from repro.core.profiler import Profile
 from repro.utils.numerics import bits_for_storage, float_spec, manipulated_bits
 
@@ -105,6 +106,113 @@ def static_energy(prof: Profile, rule: Optional[PlacementRule] = None) -> Energy
         scale = scale / wsum if wsum else 1.0
         mem += st.bytes * scale * MEM_PJ_PER_BYTE
     return EnergyReport(fpu_pj=fpu, mem_pj=mem)
+
+
+# ---------------------------------------------------------------------------
+# Tensorized population energy (the batched explorer's estimator).
+#
+# For a genome-indexed MantissaTrunc rule every static_energy term is
+# affine in the *clamped* site width min(b_site, full_dtype):
+#
+#   FPU:  n * EPI(op, dtype) * min(b, full) / full
+#   MEM:  bytes * share * (1 + exp + min(b, full) - 1) / total      (b >= 1)
+#
+# so the whole profile collapses into one constant plus an (n_sites,
+# n_widths) coefficient matrix per estimator, and a population's energy is
+# a single einsum over the genome matrix.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EnergyCoeffs:
+    """Per-(site, full-width) energy coefficients precomputed from a
+    :class:`Profile` for one placement family + site list.
+
+    ``fulls`` enumerates the distinct full mantissa widths among the
+    profiled target dtypes (usually just ``[24]``); the clamp
+    ``min(bits, full)`` reproduces ``MantissaTrunc.mantissa_bits``.
+    Assumes genome bits >= 1 (the explorer's search floor).
+    """
+    sites: Tuple[str, ...]
+    fulls: np.ndarray        # (D,) distinct full mantissa widths
+    fpu_lin: np.ndarray      # (S, D) pJ per clamped mantissa bit
+    fpu_const: float         # pJ from FLOPs no site governs
+    mem_lin: np.ndarray      # (S, D)
+    mem_const: float
+
+    def baseline(self) -> EnergyReport:
+        """Identity-rule energy (== static_energy(prof, None))."""
+        full = np.broadcast_to(self.fulls, self.fpu_lin.shape)
+        return EnergyReport(
+            fpu_pj=self.fpu_const + float(np.sum(self.fpu_lin * full)),
+            mem_pj=self.mem_const + float(np.sum(self.mem_lin * full)))
+
+
+def energy_coeffs(prof: Profile, family: str, sites: Sequence[str], *,
+                  target: str = "single") -> EnergyCoeffs:
+    """Build the coefficient tensor: one pass over the profile census,
+    amortized across every genome the search will ever evaluate."""
+    site_idx = {s: i for i, s in enumerate(sites)}
+    n_sites = len(sites)
+    fulls = sorted({_full_bits(dt) for st in prof.scopes.values()
+                    for dt in st.by_dtype
+                    if _is_target_dtype(jnp.dtype(dt), target)}) or [24]
+    d_idx = {f: i for i, f in enumerate(fulls)}
+    fpu_lin = np.zeros((n_sites, len(fulls)))
+    mem_lin = np.zeros((n_sites, len(fulls)))
+    fpu_const = 0.0
+    mem_const = 0.0
+
+    for path, st in prof.scopes.items():
+        stack = tuple(path.split("/")) if path else ()
+        s_i = site_index_for_stack(family, site_idx, stack)
+        for op_class, flops in st.by_op.items():
+            for dtype in st.by_dtype:
+                share = st.by_dtype[dtype] / max(st.flops, 1)
+                n = flops * share
+                epi = _epi(op_class, dtype)
+                full = _full_bits(dtype)
+                if s_i is not None and _is_target_dtype(jnp.dtype(dtype),
+                                                        target):
+                    fpu_lin[s_i, d_idx[full]] += n * epi / full
+                else:
+                    fpu_const += n * epi
+        wsum = sum(st.by_dtype.values())
+        if not wsum:
+            mem_const += st.bytes * MEM_PJ_PER_BYTE
+            continue
+        for dtype, f in st.by_dtype.items():
+            spec = float_spec(jnp.dtype(dtype))
+            amount = st.bytes * (f / wsum) * MEM_PJ_PER_BYTE
+            if s_i is not None and _is_target_dtype(jnp.dtype(dtype), target):
+                # bits_for_storage(min(b, full)) == exp + min(b, full), b >= 1
+                mem_lin[s_i, d_idx[spec.mantissa_bits]] += \
+                    amount / spec.total_bits
+                mem_const += amount * spec.exp_bits / spec.total_bits
+            else:
+                # identity storage is the full element: factor 1
+                mem_const += amount
+    return EnergyCoeffs(sites=tuple(sites), fulls=np.asarray(fulls, float),
+                        fpu_lin=fpu_lin, fpu_const=fpu_const,
+                        mem_lin=mem_lin, mem_const=mem_const)
+
+
+def population_energy(coeffs: EnergyCoeffs,
+                      bits_matrix) -> Tuple[np.ndarray, np.ndarray]:
+    """(fpu_pj, mem_pj) for a whole population at once.
+
+    ``bits_matrix``: (P, n_sites) integer genome matrix. Equals the scalar
+    path ``static_energy(prof, rule_from_genome(...))`` row by row (to
+    float round-off); validated in tests/test_population.py.
+    """
+    bits = np.atleast_2d(np.asarray(bits_matrix, np.float64))
+    if bits.shape[1] != len(coeffs.sites):
+        raise ValueError(f"bits_matrix has {bits.shape[1]} genes; "
+                         f"coeffs expect {len(coeffs.sites)}")
+    clamped = np.minimum(bits[:, :, None], coeffs.fulls[None, None, :])
+    fpu = coeffs.fpu_const + np.einsum("psd,sd->p", clamped, coeffs.fpu_lin)
+    mem = coeffs.mem_const + np.einsum("psd,sd->p", clamped, coeffs.mem_lin)
+    return fpu, mem
 
 
 def census_energy(census: Mapping[Tuple[str, str, str], int],

@@ -10,6 +10,15 @@ and train/test input sets), the explorer:
    quantized savings, and
 5. re-evaluates frontier configs on unseen test inputs for the paper's
    robustness correlations (Table III).
+
+The search is **population-batched**: NSGA-II is driven through its
+ask/tell API and every generation's genome batch is evaluated in ONE
+compiled call — ``jax.vmap`` over the bits axis (optionally sharded
+across ``jax.devices()`` via ``launch/mesh.make_population_mesh``), with
+the train inputs stacked and vmapped as a second batch axis. Energy comes
+from the precomputed coefficient tensor (``energy.population_energy``),
+one einsum per batch. ``explore(..., batched=False)`` keeps the historical
+one-genome-at-a-time path for benchmarking and parity tests.
 """
 from __future__ import annotations
 
@@ -20,15 +29,17 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import energy as energy_mod
-from repro.core.interpreter import neat_transform_dynamic
-from repro.core.nsga2 import Evaluated, NSGA2Result, nsga2
+from repro.core.interpreter import (neat_transform_dynamic,
+                                    neat_transform_population)
+from repro.core.nsga2 import NSGA2, NSGA2Result
 from repro.core.pareto import (TradeoffPoint, correlation, lower_convex_hull,
                                pareto_points, savings_at_threshold)
 from repro.core.placement import default_categorizer, rule_from_genome
 from repro.core.profiler import Profile, profile
-from repro.utils.numerics import float_spec
+from repro.launch.mesh import make_population_mesh
 
 
 def default_error_fn(approx, exact) -> float:
@@ -70,6 +81,8 @@ class ExplorationReport:
     flop_coverage: float                 # paper: >=98% for top-10
     robustness_error_r: float = 1.0
     robustness_energy_r: float = 1.0
+    n_dispatches: int = 0                # compiled evaluator calls issued
+    batched: bool = True
 
     def savings(self, thr: float) -> float:
         return savings_at_threshold(self.points, thr)
@@ -109,10 +122,125 @@ def sites_for_family(prof: Profile, family: str, n_sites: int) -> List[str]:
     return prof.top_functions(n_sites) + ["__default__"]
 
 
+class PopulationEvaluator:
+    """Batched genome-error evaluation for one (task, family, sites).
+
+    ``errors_matrix(genomes, inputs, exact)`` returns the (P, n_inputs)
+    error matrix. In batched mode all genomes — and, when the inputs
+    stack, all inputs — are evaluated by a single jitted vmapped call;
+    genome batches are padded to a fixed bucket so the whole NSGA-II run
+    reuses one compiled program, and the population axis is (optionally)
+    sharded across ``jax.devices()``. ``n_dispatches`` counts compiled
+    evaluator calls, the metric the batching exists to collapse.
+    """
+
+    def __init__(self, task: ExplorationTask, family: str,
+                 sites: Sequence[str], *, include_transcendental: bool = False,
+                 pop_hint: int = 40, shard: bool | str = "auto"):
+        self.task = task
+        self.error_fn = task.error_fn
+        kw = dict(target=task.target, mode=task.mode,
+                  include_transcendental=include_transcendental)
+        self.g = jax.jit(neat_transform_dynamic(task.fn, family, sites, **kw))
+        pop = neat_transform_population(task.fn, family, sites, **kw)
+        self._pop_call = jax.jit(pop)
+
+        def multi(bits, *stacked):       # extra vmap over the input axis
+            return jax.vmap(lambda *inp: pop(bits, *inp))(*stacked)
+
+        self._multi_call = jax.jit(multi)
+        self.n_dispatches = 0
+        # stacked-input memo: the train/test input lists are constant
+        # across generations, so leaf-wise stacking + upload happens once
+        # per list, not once per ask/tell round. Holding the inputs ref
+        # keeps its id() valid for the lifetime of the entry.
+        self._stack_cache: Dict[int, tuple] = {}
+
+        if shard == "auto":
+            shard = len(jax.devices()) > 1
+        self.mesh = make_population_mesh() if shard else None
+        self._step = self.mesh.devices.size if self.mesh is not None else 1
+        self._bucket = -(-max(pop_hint, 1) // self._step) * self._step
+
+    # -- helpers -------------------------------------------------------------
+    @staticmethod
+    def stack_inputs(inputs: Sequence[tuple]):
+        """Stack a homogeneous input list leaf-wise (axis 0 = input index);
+        None when the inputs don't stack (ragged shapes/structures)."""
+        if len(inputs) < 2:
+            return None
+        try:
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *inputs)
+        except (ValueError, TypeError):
+            return None
+
+    def _padded_bits(self, genomes: Sequence[Sequence[int]]) -> jnp.ndarray:
+        bits = np.asarray([[int(v) for v in g] for g in genomes], np.int32)
+        n = len(bits)
+        size = self._bucket if n <= self._bucket \
+            else -(-n // self._step) * self._step
+        if size > n:       # pad with copies of the first row, sliced off later
+            bits = np.concatenate([bits, np.repeat(bits[:1], size - n, 0)])
+        arr = jnp.asarray(bits)
+        if self.mesh is not None:
+            arr = jax.device_put(
+                arr, NamedSharding(self.mesh, PartitionSpec("pop")))
+        return arr
+
+    def _subtree(self, host, index) -> object:
+        return jax.tree.map(lambda x: x[index], host)
+
+    # -- batched path --------------------------------------------------------
+    def errors_matrix(self, genomes: Sequence[Sequence[int]],
+                      inputs: Sequence[tuple],
+                      exact: Sequence) -> np.ndarray:
+        """(len(genomes), len(inputs)) raw error matrix, one compiled call
+        when the inputs stack, one per input otherwise."""
+        n = len(genomes)
+        if n == 0:
+            return np.zeros((0, len(inputs)))
+        bits = self._padded_bits(genomes)
+        out = np.empty((n, len(inputs)))
+        if id(inputs) not in self._stack_cache:
+            self._stack_cache[id(inputs)] = (inputs,
+                                             self.stack_inputs(inputs))
+        _, stacked = self._stack_cache[id(inputs)]
+        if stacked is not None:
+            outs = self._multi_call(bits, *stacked)   # leaves (I, P, ...)
+            self.n_dispatches += 1
+            host = jax.tree.map(np.asarray, outs)
+            for i in range(len(inputs)):
+                for p in range(n):
+                    out[p, i] = self.error_fn(
+                        self._subtree(host, (i, p)), exact[i])
+        else:
+            for i, inp in enumerate(inputs):
+                outs = self._pop_call(bits, *inp)     # leaves (P, ...)
+                self.n_dispatches += 1
+                host = jax.tree.map(np.asarray, outs)
+                for p in range(n):
+                    out[p, i] = self.error_fn(self._subtree(host, p),
+                                              exact[i])
+        return out
+
+    # -- historical serial path (benchmarks / parity tests) ------------------
+    def errors_serial(self, genome: Sequence[int], inputs: Sequence[tuple],
+                      exact: Sequence) -> List[float]:
+        bits = jnp.asarray([int(v) for v in genome], jnp.int32)
+        errs = []
+        for inp, ex in zip(inputs, exact):
+            out = self.g(bits, *inp)
+            self.n_dispatches += 1
+            errs.append(self.error_fn(jax.tree.map(np.asarray, out), ex))
+        return errs
+
+
 def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
             pop_size: int = 40, n_gen: int = 9, max_evals: int = 400,
             seed: int = 0, robustness: bool = True,
-            include_transcendental: bool = False) -> ExplorationReport:
+            include_transcendental: bool = False,
+            batched: bool = True,
+            shard: bool | str = "auto") -> ExplorationReport:
     # 1. profile (paper step 1) -- census on the first training input
     prof = profile(task.fn, *task.train_inputs[0])
     sites = sites_for_family(prof, family, n_sites)
@@ -121,36 +249,16 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
     full_bits = 53 if task.target == "double" else (
         8 if task.target == "half" else 24)
 
-    # 2. exact baselines + energy baseline
+    # 2. exact baselines + energy baseline + coefficient tensor
     exact = [jax.tree.map(np.asarray, task.fn(*inp))
              for inp in task.train_inputs]
     base = energy_mod.static_energy(prof, None)
+    coeffs = energy_mod.energy_coeffs(prof, family, sites, target=task.target)
 
-    # 3. one compiled dynamic-bits evaluator
-    g = neat_transform_dynamic(task.fn, family, sites, target=task.target,
-                               mode=task.mode,
-                               include_transcendental=include_transcendental)
-    g = jax.jit(g)
-
-    extras: Dict[Tuple[int, ...], Dict] = {}
-
-    def eval_genome(genome: Tuple[int, ...]) -> Tuple[float, float]:
-        bits = jnp.asarray(genome, jnp.int32)
-        errs = []
-        for inp, ex in zip(task.train_inputs, exact):
-            out = g(bits, *inp)
-            errs.append(task.error_fn(jax.tree.map(np.asarray, out), ex))
-        err = float(np.median(errs))
-        rule = rule_from_genome(family, sites, genome, target=task.target,
-                                mode=task.mode)
-        rep = energy_mod.static_energy(prof, rule)
-        e_fpu = rep.fpu_pj / max(base.fpu_pj, 1e-30)
-        e_mem = rep.mem_pj / max(base.mem_pj, 1e-30)
-        extras[tuple(genome)] = {"mem": e_mem, "genome": tuple(genome)}
-        # clamp unusable configs so NSGA-II can still rank them
-        if not math.isfinite(err):
-            err = 1e9
-        return (e_fpu, err)
+    # 3. one compiled population evaluator
+    ev = PopulationEvaluator(
+        task, family, sites, include_transcendental=include_transcendental,
+        pop_hint=pop_size, shard=shard if batched else False)
 
     # Seed the population with the "diagonal" (uniform-bits) genomes: the
     # per-function families then strictly contain the whole-program
@@ -162,10 +270,41 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
     diag_bits = sorted(set(diag_bits))[: max(4, max_evals // 6)]
     seeds = [(b,) * n_sites_eff for b in diag_bits]
 
-    res: NSGA2Result = nsga2(
-        eval_genome, n_genes=len(sites), low=1, high=full_bits,
-        pop_size=pop_size, n_gen=n_gen, max_evals=max_evals, seed=seed,
-        seed_genomes=seeds)
+    # 4. NSGA-II through ask/tell: one evaluator dispatch per generation
+    opt = NSGA2(n_genes=len(sites), low=1, high=full_bits,
+                pop_size=pop_size, n_gen=n_gen, max_evals=max_evals,
+                seed=seed, seed_genomes=seeds)
+    extras: Dict[Tuple[int, ...], Dict] = {}
+    while not opt.done:
+        batch = opt.ask()
+        if batched:
+            err_mat = ev.errors_matrix(batch, task.train_inputs, exact)
+            fpu, mem = energy_mod.population_energy(coeffs, batch)
+            e_fpu = fpu / max(base.fpu_pj, 1e-30)
+            e_mem = mem / max(base.mem_pj, 1e-30)
+        else:                      # historical per-genome path
+            err_mat = np.asarray(
+                [ev.errors_serial(g, task.train_inputs, exact)
+                 for g in batch])
+            reps = [energy_mod.static_energy(
+                        prof, rule_from_genome(family, sites, g,
+                                               target=task.target,
+                                               mode=task.mode))
+                    for g in batch]
+            e_fpu = np.asarray([r.fpu_pj for r in reps]) \
+                / max(base.fpu_pj, 1e-30)
+            e_mem = np.asarray([r.mem_pj for r in reps]) \
+                / max(base.mem_pj, 1e-30)
+        objs = []
+        for i, g in enumerate(batch):
+            err = float(np.median(err_mat[i]))
+            # clamp unusable configs so NSGA-II can still rank them
+            if not math.isfinite(err):
+                err = 1e9
+            extras[tuple(g)] = {"mem": float(e_mem[i]), "genome": tuple(g)}
+            objs.append((float(e_fpu[i]), err))
+        opt.tell(batch, objs)
+    res: NSGA2Result = opt.result()
 
     points = [TradeoffPoint(error=e.objectives[1], energy=e.objectives[0],
                             payload=extras[e.genome])
@@ -176,19 +315,24 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
         task=task.name, family=family, sites=sites, points=points,
         hull=hull, n_evals=res.n_evals,
         baseline_fpu_pj=base.fpu_pj, baseline_mem_pj=base.mem_pj,
-        flop_coverage=coverage)
+        flop_coverage=coverage, batched=batched)
 
-    # 5. robustness on unseen inputs (paper §V-G)
+    # 5. robustness on unseen inputs (paper §V-G) — the frontier re-check
+    #    is itself one batched call over (frontier genomes x test inputs)
     if robustness and task.test_inputs:
         test_exact = [jax.tree.map(np.asarray, task.fn(*inp))
                       for inp in task.test_inputs]
         frontier = pareto_points(points)[:16]
+        genomes = [p.payload["genome"] for p in frontier]
+        if batched:
+            mat = ev.errors_matrix(genomes, task.test_inputs, test_exact)
+        else:
+            mat = np.asarray([ev.errors_serial(g, task.test_inputs,
+                                               test_exact)
+                              for g in genomes])
         tr_err, te_err, tr_e, te_e = [], [], [], []
-        for p in frontier:
-            bits = jnp.asarray(p.payload["genome"], jnp.int32)
-            errs = [task.error_fn(jax.tree.map(np.asarray, g(bits, *inp)), ex)
-                    for inp, ex in zip(task.test_inputs, test_exact)]
-            errs = [e if math.isfinite(e) else 1e9 for e in errs]
+        for p, row in zip(frontier, mat):
+            errs = [e if math.isfinite(e) else 1e9 for e in row]
             tr_err.append(p.error)
             te_err.append(float(np.median(errs)))
             tr_e.append(p.energy)
@@ -196,4 +340,5 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
         report.robustness_error_r = correlation(tr_err, te_err)
         report.robustness_energy_r = correlation(tr_e, te_e)
 
+    report.n_dispatches = ev.n_dispatches
     return report

@@ -242,31 +242,8 @@ class DynamicNeatInterpreter(NeatInterpreter):
         self.bits_vec = None   # set per call by neat_transform_dynamic
 
     def _site_for(self, stack: Tuple[str, ...]) -> int | None:
-        if self.family == "wp":
-            return 0
-        default_idx = self.site_idx.get("__default__")
-        if self.family == "cip":
-            if stack and stack[-1] in self.site_idx:
-                return self.site_idx[stack[-1]]
-            return default_idx
-        if self.family == "fcs":
-            for frame in reversed(stack):
-                if frame in self.site_idx:
-                    return self.site_idx[frame]
-            return default_idx
-        if self.family == "plc":
-            from repro.core.placement import default_categorizer
-            return self.site_idx.get(default_categorizer(stack))
-        if self.family == "pli":
-            path = "/".join(stack)
-            best, best_len = None, -1
-            for key, i in self.site_idx.items():
-                if (path == key or path.startswith(key + "/")
-                        or ("/" not in key and key in stack)):
-                    if len(key) > best_len:
-                        best, best_len = i, len(key)
-            return best
-        raise ValueError(f"unknown family {self.family!r}")
+        from repro.core.placement import site_index_for_stack
+        return site_index_for_stack(self.family, self.site_idx, stack)
 
     def intercept(self, stack, op_class, out_dtype):
         from repro.core.placement import _is_target_dtype
@@ -306,6 +283,32 @@ def neat_transform_dynamic(fn: Callable, family: str, sites: Sequence[str],
         return jax.tree.unflatten(out_tree, outs)
 
     return g
+
+
+def neat_transform_population(fn: Callable, family: str,
+                              sites: Sequence[str], *,
+                              target: str = "single", mode: str = "rne",
+                              include_transcendental: bool = False
+                              ) -> Callable:
+    """Population-batched evaluator: ``G(bits_matrix, *args)`` computes
+    ``fn(*args)`` under every genome row of ``bits_matrix`` (P, n_sites)
+    in ONE compiled call, by vmapping the dynamic-bits evaluator over the
+    population axis. Output leaves gain a leading population axis.
+
+    The bits matrix is the only batched input, so XLA compiles a single
+    device-parallel program per input signature; jit ``G`` once and every
+    NSGA-II generation becomes one dispatch instead of ``P``.
+    """
+    g = neat_transform_dynamic(
+        fn, family, sites, target=target, mode=mode,
+        include_transcendental=include_transcendental)
+
+    def G(bits_matrix, *args):
+        bits_matrix = jnp.asarray(bits_matrix, jnp.int32)
+        in_axes = (0,) + (None,) * len(args)
+        return jax.vmap(g, in_axes=in_axes)(bits_matrix, *args)
+
+    return G
 
 
 def neat_transform(fn: Callable, rule: PlacementRule, *,

@@ -4,18 +4,28 @@ From-scratch implementation specialized to integer genomes (per-site
 mantissa widths). Both objectives are minimized: (energy, error). The
 evaluation budget matches the paper: at most ~400 configurations per
 experiment.
+
+The engine is an **ask/tell** class (``NSGA2``): ``ask()`` returns a
+deduplicated batch of not-yet-evaluated genomes (the whole initial
+population, then each generation's offspring), ``tell()`` ingests their
+objective vectors. This lets callers evaluate a full population in one
+device-parallel call (see ``core/explorer.py``). The module-level
+``nsga2()`` keeps the original serial-callback signature as a thin
+wrapper and is draw-for-draw identical to the historical implementation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+Genome = Tuple[int, ...]
 
 
 @dataclasses.dataclass
 class Evaluated:
-    genome: Tuple[int, ...]
+    genome: Genome
     objectives: Tuple[float, ...]   # (energy, error), minimized
 
 
@@ -94,8 +104,178 @@ def _tournament(rng, ranks, crowd):
     return i if crowd[i] >= crowd[j] else j
 
 
+class NSGA2:
+    """Ask/tell NSGA-II over integer genomes in ``[low, high]^n_genes``.
+
+    Protocol::
+
+        opt = NSGA2(n_genes=4, low=1, high=24, pop_size=16)
+        while not opt.done:
+            batch = opt.ask()                 # deduplicated, within budget
+            opt.tell(batch, [f(g) for g in batch])
+        result = opt.result()
+
+    ``ask()`` returns only genomes that have not been evaluated yet
+    (memoization) and never more than the remaining ``max_evals`` budget,
+    so the budget counts *unique* configurations, as in the paper's "at
+    most 400 configurations ... evaluated". Genomes dropped on the budget
+    floor are ranked with an ``inf`` sentinel, matching the historical
+    serial implementation draw-for-draw: ``nsga2(f, ...)`` and an ask/tell
+    drive with the same seed evaluate the identical genome sequence.
+    """
+
+    def __init__(self, n_genes: int, low: int, high: int, *,
+                 pop_size: int = 40, n_gen: int = 9, max_evals: int = 400,
+                 p_crossover: float = 0.9, p_mutate: float | None = None,
+                 seed: int = 0, seed_genomes: Sequence[Sequence[int]] = ()):
+        self.n_genes = n_genes
+        self.low = low
+        self.high = high
+        self.pop_size = pop_size
+        self.n_gen = n_gen
+        self.max_evals = max_evals
+        self.p_crossover = p_crossover
+        self.p_mut = (p_mutate if p_mutate is not None
+                      else 1.0 / max(n_genes, 1))
+        self.rng = np.random.default_rng(seed)
+        self.seed_genomes = [tuple(int(v) for v in s) for s in seed_genomes]
+        self.cache: Dict[Genome, Tuple[float, ...]] = {}
+        self.order: List[Evaluated] = []
+        self._final_pop: List[Genome] = []
+        self._driver: Iterator[Tuple[Genome, ...]] = self._evolve()
+        self._pending: Optional[Tuple[Genome, ...]] = None
+        self._advance()
+
+    # -- public protocol -----------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self._pending is None
+
+    def ask(self) -> List[Genome]:
+        """The current batch of genomes awaiting evaluation (deduplicated,
+        truncated to the remaining budget). Idempotent until ``tell``."""
+        return list(self._pending) if self._pending is not None else []
+
+    def tell(self, genomes: Sequence[Sequence[int]],
+             objectives: Sequence[Sequence[float]]) -> None:
+        """Ingest objective vectors for the genomes handed out by ``ask``."""
+        if self._pending is None:
+            raise RuntimeError("tell() called on a finished NSGA2 run")
+        if len(genomes) != len(objectives):
+            raise ValueError(
+                f"{len(genomes)} genomes but {len(objectives)} objectives")
+        got: Dict[Genome, Tuple[float, ...]] = {}
+        for g, obj in zip(genomes, objectives):
+            got[tuple(int(v) for v in g)] = tuple(float(v) for v in obj)
+        missing = [g for g in self._pending if g not in got]
+        unknown = [g for g in got if g not in self._pending]
+        if missing or unknown:
+            raise ValueError(
+                f"tell() batch mismatch: missing {missing[:3]}, "
+                f"unknown {unknown[:3]}")
+        # record in ask-order so `evaluated` stays deterministic
+        for g in self._pending:
+            self.cache[g] = got[g]
+            self.order.append(Evaluated(g, got[g]))
+        self._advance()
+
+    def result(self) -> NSGA2Result:
+        if not self.done:
+            raise RuntimeError("result() before the run finished; "
+                               "drive ask()/tell() until .done")
+        final = [Evaluated(g, self.cache[g])
+                 for g in self._final_pop if g in self.cache]
+        return NSGA2Result(population=final, evaluated=list(self.order),
+                           n_evals=len(self.cache))
+
+    # -- internals -----------------------------------------------------------
+    def _advance(self) -> None:
+        try:
+            self._pending = next(self._driver)
+        except StopIteration:
+            self._pending = None
+
+    def _request(self, genomes: Sequence[Genome]):
+        """Yield (once) the deduplicated uncached slice of `genomes` that
+        fits the remaining budget."""
+        seen: set = set()
+        batch: List[Genome] = []
+        budget = self.max_evals - len(self.cache)
+        for g in genomes:
+            if g not in self.cache and g not in seen:
+                seen.add(g)
+                if len(batch) < budget:
+                    batch.append(g)
+        if batch:
+            yield tuple(batch)
+
+    def _obj(self, g: Genome) -> Tuple[float, ...]:
+        if g in self.cache:
+            return self.cache[g]
+        # over-budget sentinel: dominated by everything
+        if self.order:
+            return tuple(float("inf") for _ in self.order[0].objectives)
+        return (float("inf"), float("inf"))
+
+    def _evolve(self) -> Iterator[Tuple[Genome, ...]]:
+        rng = self.rng
+        # init population: seeds + full-precision + random
+        pop: List[Genome] = list(self.seed_genomes)
+        pop.append(tuple([self.high] * self.n_genes))    # exact baseline
+        while len(pop) < self.pop_size:
+            pop.append(tuple(int(v) for v in
+                             rng.integers(self.low, self.high + 1,
+                                          self.n_genes)))
+        pop = pop[:self.pop_size]
+        yield from self._request(pop)
+        objs = np.array([self._obj(g) for g in pop])
+
+        for _ in range(self.n_gen):
+            if len(self.cache) >= self.max_evals:
+                break
+            fronts = fast_non_dominated_sort(objs)
+            ranks = np.zeros(len(pop), dtype=np.int64)
+            crowd = np.zeros(len(pop))
+            for r, f in enumerate(fronts):
+                ranks[f] = r
+                crowd[f] = crowding_distance(objs[f])
+            children: List[Genome] = []
+            while len(children) < self.pop_size:
+                a = pop[_tournament(rng, ranks, crowd)]
+                b = pop[_tournament(rng, ranks, crowd)]
+                if rng.random() < self.p_crossover:
+                    mask = rng.random(self.n_genes) < 0.5
+                    child = tuple(int(x if m else y)
+                                  for x, y, m in zip(a, b, mask))
+                else:
+                    child = a
+                child = tuple(
+                    int(rng.integers(self.low, self.high + 1))
+                    if rng.random() < self.p_mut else v
+                    for v in child)
+                children.append(child)
+            yield from self._request(children)
+            union = pop + children
+            union_objs = np.array([self._obj(g) for g in union])
+            # environmental selection
+            fronts = fast_non_dominated_sort(union_objs)
+            new_idx: List[int] = []
+            for f in fronts:
+                if len(new_idx) + len(f) <= self.pop_size:
+                    new_idx.extend(f.tolist())
+                else:
+                    cd = crowding_distance(union_objs[f])
+                    keep = f[np.argsort(-cd)][: self.pop_size - len(new_idx)]
+                    new_idx.extend(keep.tolist())
+                    break
+            pop = [union[i] for i in new_idx]
+            objs = union_objs[new_idx]
+
+        self._final_pop = pop
+
+
 def nsga2(
-    eval_fn: Callable[[Tuple[int, ...]], Tuple[float, ...]],
+    eval_fn: Callable[[Genome], Tuple[float, ...]],
     n_genes: int,
     low: int,
     high: int,
@@ -110,71 +290,15 @@ def nsga2(
 ) -> NSGA2Result:
     """Run NSGA-II over integer genomes in [low, high]^n_genes.
 
-    ``eval_fn`` maps a genome to the objective tuple (minimized). Results
-    are memoized so the ``max_evals`` budget counts unique configurations,
-    as in the paper's "at most 400 configurations ... evaluated".
+    Thin serial wrapper over the ask/tell :class:`NSGA2` engine.
+    ``eval_fn`` maps a genome to the objective tuple (minimized); it is
+    called exactly once per unique configuration, in the same order as the
+    historical serial implementation.
     """
-    rng = np.random.default_rng(seed)
-    p_mut = p_mutate if p_mutate is not None else 1.0 / max(n_genes, 1)
-    cache: Dict[Tuple[int, ...], Tuple[float, ...]] = {}
-    order: List[Evaluated] = []
-
-    def evaluate(g: Tuple[int, ...]) -> Tuple[float, ...]:
-        if g not in cache:
-            if len(cache) >= max_evals:
-                # budget exhausted: return a dominated sentinel
-                return tuple(float("inf") for _ in order[0].objectives) \
-                    if order else (float("inf"), float("inf"))
-            cache[g] = tuple(float(v) for v in eval_fn(g))
-            order.append(Evaluated(g, cache[g]))
-        return cache[g]
-
-    # init population: seeds + full-precision + random
-    pop: List[Tuple[int, ...]] = [tuple(int(v) for v in s) for s in seed_genomes]
-    pop.append(tuple([high] * n_genes))                 # exact baseline
-    while len(pop) < pop_size:
-        pop.append(tuple(int(v) for v in rng.integers(low, high + 1, n_genes)))
-    pop = pop[:pop_size]
-    objs = np.array([evaluate(g) for g in pop])
-
-    for _ in range(n_gen):
-        if len(cache) >= max_evals:
-            break
-        fronts = fast_non_dominated_sort(objs)
-        ranks = np.zeros(len(pop), dtype=np.int64)
-        crowd = np.zeros(len(pop))
-        for r, f in enumerate(fronts):
-            ranks[f] = r
-            crowd[f] = crowding_distance(objs[f])
-        children: List[Tuple[int, ...]] = []
-        while len(children) < pop_size:
-            a = pop[_tournament(rng, ranks, crowd)]
-            b = pop[_tournament(rng, ranks, crowd)]
-            if rng.random() < p_crossover:
-                mask = rng.random(n_genes) < 0.5
-                child = tuple(int(x if m else y)
-                              for x, y, m in zip(a, b, mask))
-            else:
-                child = a
-            child = tuple(
-                int(rng.integers(low, high + 1)) if rng.random() < p_mut else v
-                for v in child)
-            children.append(child)
-        union = pop + children
-        union_objs = np.array([evaluate(g) for g in union])
-        # environmental selection
-        fronts = fast_non_dominated_sort(union_objs)
-        new_idx: List[int] = []
-        for f in fronts:
-            if len(new_idx) + len(f) <= pop_size:
-                new_idx.extend(f.tolist())
-            else:
-                cd = crowding_distance(union_objs[f])
-                keep = f[np.argsort(-cd)][: pop_size - len(new_idx)]
-                new_idx.extend(keep.tolist())
-                break
-        pop = [union[i] for i in new_idx]
-        objs = union_objs[new_idx]
-
-    final = [Evaluated(g, cache[g]) for g in pop if g in cache]
-    return NSGA2Result(population=final, evaluated=order, n_evals=len(cache))
+    opt = NSGA2(n_genes, low, high, pop_size=pop_size, n_gen=n_gen,
+                max_evals=max_evals, p_crossover=p_crossover,
+                p_mutate=p_mutate, seed=seed, seed_genomes=seed_genomes)
+    while not opt.done:
+        batch = opt.ask()
+        opt.tell(batch, [eval_fn(g) for g in batch])
+    return opt.result()

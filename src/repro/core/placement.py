@@ -153,6 +153,46 @@ class LayerInstance(PlacementRule):
 RULE_FAMILIES = ("wp", "cip", "fcs", "plc", "pli")
 
 
+def site_index_for_stack(family: str, site_idx: Dict[str, int],
+                         stack: Tuple[str, ...]) -> Optional[int]:
+    """Resolve a scope stack to its genome site index under `family`.
+
+    This is the single source of truth for genome-indexed placement: the
+    dynamic-bits interpreter uses it to pick which entry of the traced
+    bits vector governs a FLOP, and the tensorized energy model uses it
+    to assign each profiled scope its coefficient column — keeping the
+    two views of "which site owns this FLOP" identical by construction.
+    Mirrors the per-family ``PlacementRule`` matching (CIP innermost
+    frame, FCS outward stack walk, PLC category, PLI longest prefix);
+    ``"__default__"`` (CIP/FCS) catches unmatched stacks. Returns None
+    when no site applies (identity / full precision).
+    """
+    if family == "wp":
+        return 0
+    default_idx = site_idx.get("__default__")
+    if family == "cip":
+        if stack and stack[-1] in site_idx:
+            return site_idx[stack[-1]]
+        return default_idx
+    if family == "fcs":
+        for frame in reversed(stack):
+            if frame in site_idx:
+                return site_idx[frame]
+        return default_idx
+    if family == "plc":
+        return site_idx.get(default_categorizer(stack))
+    if family == "pli":
+        path = "/".join(stack)
+        best, best_len = None, -1
+        for key, i in site_idx.items():
+            if (path == key or path.startswith(key + "/")
+                    or ("/" not in key and key in stack)):
+                if len(key) > best_len:
+                    best, best_len = i, len(key)
+        return best
+    raise ValueError(f"unknown rule family {family!r}")
+
+
 def rule_from_genome(family: str, sites: Sequence[str], bits: Sequence[int],
                      *, target: str = "single", mode: str = "rne",
                      default: FpImplementation = IDENTITY) -> PlacementRule:

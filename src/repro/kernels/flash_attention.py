@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.mantissa_trunc import _trunc_block
+from repro.utils.jax_compat import CompilerParams as _CompilerParams
 
 NEG_INF = -1e30
 
@@ -129,7 +130,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             pltpu.VMEM((block_q, 128), jnp.float32),   # denominator
             pltpu.VMEM((block_q, d), jnp.float32),     # accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q3, k3, v3)

@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.mantissa_trunc import _trunc_block
+from repro.utils.jax_compat import CompilerParams as _CompilerParams
 
 
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, a_bits, b_bits, out_bits,
@@ -80,7 +81,7 @@ def quant_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(ap, bp)

@@ -22,3 +22,16 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     model = min(model, n)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_population_mesh(n_devices: int | None = None):
+    """1-D mesh over local devices for population-axis data parallelism.
+
+    The NEAT explorer shards NSGA-II genome batches across it: each
+    device evaluates a slice of the population through the same compiled
+    program. On CPU, ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    exposes N virtual devices, so the sharded path is testable without
+    accelerators.
+    """
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return jax.make_mesh((n,), ("pop",))

@@ -1,7 +1,18 @@
 """Batched decode engine: prefill + greedy/temperature decode against the
-model's KV cache, with fixed-slot continuous batching (finished sequences
-are replaced from a request queue without recompiling) and NEAT placement
-support for reduced-precision serving."""
+model's KV cache, with fixed-slot wave batching (requests are packed into
+slots and a finished wave pulls the next requests from the queue without
+recompiling) and NEAT placement support for reduced-precision serving.
+
+Prefill is real: every prompt token is stepped through the compiled
+decode step, so the KV cache holds the whole prompt and completions
+condition on all of it. Prompts in a wave are left-aligned — shorter
+prompts finish prefill and start sampling while longer prompts are still
+streaming theirs — which keeps a single compiled (batch, 1)-token step
+function for both phases. Because the cache carries one global position
+scalar shared by all slots, slots are refilled between waves (each wave
+starts from a fresh cache) rather than mid-wave, which would leak the
+previous request's KV entries into the new request's attention window.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -43,61 +54,64 @@ class DecodeEngine:
         return jax.random.categorical(
             key, logits / self.cfg.temperature).astype(jnp.int32)
 
+    def _run_wave(self, wave, outputs, max_new_tokens, key):
+        """Serve one wave of requests (<= batch_slots) from a fresh cache.
+
+        Streams each slot's prompt through the compiled step token by
+        token (prefill), then keeps stepping to decode; a slot flips from
+        prefill to decode independently once its prompt is exhausted.
+        """
+        cfg = self.cfg
+        n_slots = cfg.batch_slots
+        # keep only the prompt tail that leaves cache room for the full
+        # completion — otherwise a near-max_len prompt would exhaust the
+        # cache mid-prefill and silently return a short/empty completion
+        keep = max(1, cfg.max_len - 1 - max_new_tokens)
+        prompts = [list(p)[-keep:] if p else [0] for _, p in wave]
+        rids = [rid for rid, _ in wave]
+        left = [max_new_tokens] * len(wave)
+        done = [False] * len(wave)
+        cache = self.model.init_cache(n_slots, cfg.max_len)
+        cur = np.zeros((n_slots, 1), np.int32)
+        for s, p in enumerate(prompts):
+            cur[s, 0] = p[0]
+
+        pos = 0                        # global cache position == step index
+        while not all(done):
+            key, sub = jax.random.split(key)
+            logits, cache = self._step(self.params, cache, jnp.asarray(cur))
+            nxt = np.asarray(self._sample(logits, sub))
+            for s in range(len(wave)):
+                if done[s]:
+                    continue
+                if pos + 1 < len(prompts[s]):
+                    cur[s, 0] = prompts[s][pos + 1]   # still prefilling
+                    continue
+                tok = int(nxt[s])                     # prompt fully in cache
+                outputs[rids[s]].append(tok)
+                left[s] -= 1
+                if left[s] <= 0 or (cfg.eos_token is not None
+                                    and tok == cfg.eos_token):
+                    done[s] = True
+                else:
+                    cur[s, 0] = tok
+            pos += 1
+            if pos >= cfg.max_len - 1:
+                break
+        return key
+
     def generate(self, prompts: List[List[int]],
                  max_new_tokens: int = 32) -> List[List[int]]:
         """Serve a list of token prompts; returns completions per prompt.
-        Requests are packed into fixed slots; finished slots pull the next
-        queued request (continuous batching)."""
-        cfg = self.cfg
-        n_slots = cfg.batch_slots
+        Requests are packed into fixed slots wave by wave; each wave runs
+        prefill + decode through one compiled step function."""
         queue = list(enumerate(prompts))
         outputs: dict[int, List[int]] = {i: [] for i in range(len(prompts))}
-        key = jax.random.key(cfg.seed)
-
-        cache = self.model.init_cache(n_slots, cfg.max_len)
-        slot_req = [-1] * n_slots            # request id per slot
-        slot_left = [0] * n_slots            # tokens remaining
-        cur = np.zeros((n_slots, 1), np.int32)
-
-        def assign(slot):
-            if not queue:
-                slot_req[slot] = -1
-                slot_left[slot] = 0
-                return
-            rid, prompt = queue.pop(0)
-            slot_req[slot] = rid
-            slot_left[slot] = max_new_tokens
-            # prefill by stepping the prompt through the cache slot-wise:
-            # simple (token-by-token) prefill keeps one compiled step fn.
-            for t in prompt:
-                cur[slot, 0] = t
-            cur[slot, 0] = prompt[-1] if prompt else 0
+        key = jax.random.key(self.cfg.seed)
 
         with use_rule(self.rule):
-            for s in range(n_slots):
-                assign(s)
-            active = any(r >= 0 for r in slot_req)
-            while active:
-                key, sub = jax.random.split(key)
-                logits, cache = self._step(self.params, cache,
-                                           jnp.asarray(cur))
-                nxt = np.asarray(self._sample(logits, sub))
-                for s in range(n_slots):
-                    rid = slot_req[s]
-                    if rid < 0:
-                        continue
-                    tok = int(nxt[s])
-                    outputs[rid].append(tok)
-                    slot_left[s] -= 1
-                    done = (slot_left[s] <= 0
-                            or (cfg.eos_token is not None
-                                and tok == cfg.eos_token))
-                    if done:
-                        assign(s)
-                    else:
-                        cur[s, 0] = tok
-                active = any(r >= 0 for r in slot_req)
-                pos = int(np.asarray(cache["pos"])) if "pos" in cache else 0
-                if pos >= cfg.max_len - 1:
-                    break
+            while queue:
+                wave = [queue.pop(0) for _ in
+                        range(min(self.cfg.batch_slots, len(queue)))]
+                key = self._run_wave(wave, outputs, max_new_tokens, key)
         return [outputs[i] for i in range(len(prompts))]

@@ -226,7 +226,8 @@ def _param_spec(rules: ShardingRules, path: str, shape) -> P:
 
 
 def _tree_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    from repro.utils.jax_compat import tree_flatten_with_path
+    flat, treedef = tree_flatten_with_path(tree)
     keys = []
     for path, leaf in flat:
         keys.append(("/".join(str(getattr(p, "key", getattr(p, "idx", p)))

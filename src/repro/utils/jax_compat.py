@@ -1,0 +1,17 @@
+"""Small shims over JAX API renames, so version drift is absorbed in one
+place instead of at every call site."""
+from __future__ import annotations
+
+import jax
+
+try:  # pallas TPU params: TPUCompilerParams was renamed CompilerParams
+    from jax.experimental.pallas import tpu as _pltpu
+    CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+        or getattr(_pltpu, "TPUCompilerParams")
+except ImportError:  # pragma: no cover - pallas not available
+    CompilerParams = None
+
+# jax.tree.flatten_with_path only exists in newer JAX; the jax.tree_util
+# spelling is long-stable.
+tree_flatten_with_path = getattr(jax.tree, "flatten_with_path", None) \
+    or jax.tree_util.tree_flatten_with_path

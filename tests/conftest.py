@@ -1,0 +1,28 @@
+"""Shared test helpers."""
+import pytest
+
+
+def optional_hypothesis():
+    """(given, settings, st) — real hypothesis when installed, otherwise
+    stubs that turn each property test into a clean skip (the rest of the
+    module still runs)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        def given(*_a, **_k):
+            def deco(f):
+                def stub():
+                    pytest.skip("hypothesis not installed")
+                stub.__name__ = f.__name__
+                return stub
+            return deco
+
+        def settings(*_a, **_k):
+            return lambda f: f
+
+        class _NoStrategies:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        return given, settings, _NoStrategies()

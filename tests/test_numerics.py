@@ -2,7 +2,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.utils.numerics import (bits_for_storage, float_spec,
                                   manipulated_bits, truncate_mantissa,

@@ -1,7 +1,10 @@
 """NSGA-II, Pareto analysis, explorer (+ hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core.nsga2 import (Evaluated, crowding_distance, dominates,
                               fast_non_dominated_sort, nsga2, pareto_front)

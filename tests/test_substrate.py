@@ -100,6 +100,22 @@ def test_serving_engine_continuous_batching():
     assert len(outs) == 4 and all(len(o) == 4 for o in outs)
 
 
+def test_serving_engine_prefill_conditions_on_full_prompt():
+    """Regression: completions must depend on EARLY prompt tokens — the
+    old engine only fed the last prompt token into the KV cache."""
+    cfg = get_arch("codeqwen1.5-7b").reduced(n_layers=2, d_model=32,
+                                             d_ff=64, vocab=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = DecodeEngine(model, params, ServeConfig(max_len=48, batch_slots=2))
+    a = eng.generate([[5, 9, 2, 7]], max_new_tokens=6)[0]
+    b = eng.generate([[11, 3, 2, 7]], max_new_tokens=6)[0]  # same suffix
+    assert a != b
+    # greedy decode of a slot must not depend on its wave companions
+    c = eng.generate([[5, 9, 2, 7], [1, 2]], max_new_tokens=6)
+    assert c[0] == a
+
+
 def test_grad_compression_error_feedback():
     g = jnp.asarray(np.random.default_rng(0).standard_normal(1000),
                     jnp.float32)
