@@ -1,0 +1,99 @@
+"""CI gate over the bench-smoke artifacts.
+
+Reads the ``BENCH_*.json`` files emitted by ``benchmarks.run`` and fails
+(exit 1) when a regression lands:
+
+* explorer: batched dispatch counts must stay well under the serial
+  path's (the population batching exists to collapse them), and the
+  batched/serial Pareto fronts must stay identical;
+* serve: the continuous engine must take <= 1/1.5 the compiled decode
+  steps of the wave engine on the skewed workload, with identical greedy
+  completions. Step time is constant at fixed batch shape, so the steps
+  ratio is the deterministic form of the tokens/sec speedup.
+
+Wall-clock numbers (us, tokens/sec) are reported but not gated — CI
+runners are noisy; dispatch counts, step counts and parity bits are
+exact for a fixed seed/workload.
+
+  python -m benchmarks.check_smoke [--json-dir .]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+MIN_SERVE_SPEEDUP = 1.5
+MAX_DISPATCH_RATIO = 0.25          # batched <= serial / 4
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        return {name: derived for name, _, derived in json.load(f)["rows"]}
+
+
+def _field(derived: str, key: str) -> str:
+    for part in derived.split(";"):
+        if part.startswith(key + "="):
+            return part.split("=", 1)[1]
+    raise KeyError(f"{key!r} not in {derived!r}")
+
+
+def check_explorer(path: str) -> list:
+    rows = _rows(path)
+    errs = []
+    disp = rows["explorer_dispatches"]
+    batched = int(_field(disp, "batched"))
+    serial = int(_field(disp, "serial"))
+    if batched > serial * MAX_DISPATCH_RATIO:
+        errs.append(f"explorer dispatch regression: batched={batched} "
+                    f"vs serial={serial}")
+    if not rows["explorer_front_identical"].startswith("True"):
+        errs.append("explorer Pareto parity regression: batched front != "
+                    f"serial front ({rows['explorer_front_identical']})")
+    return errs
+
+
+def check_serve(path: str) -> list:
+    rows = _rows(path)
+    errs = []
+    cont_steps = int(_field(rows["serve_continuous"], "steps"))
+    wave_steps = int(_field(rows["serve_wave"], "steps"))
+    step_speedup = wave_steps / max(cont_steps, 1)
+    if step_speedup < MIN_SERVE_SPEEDUP:
+        errs.append(f"serve speedup regression: wave/continuous step "
+                    f"ratio {step_speedup:.2f}x < {MIN_SERVE_SPEEDUP}x "
+                    f"(wave={wave_steps}, continuous={cont_steps})")
+    if _field(rows["serve_speedup"], "parity") != "True":
+        errs.append("serve parity regression: continuous != wave "
+                    "completions under greedy decoding")
+    return errs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=".")
+    args = ap.parse_args()
+
+    checks = [("BENCH_explorer_pop.json", check_explorer),
+              ("BENCH_serve.json", check_serve)]
+    errs = []
+    for fname, fn in checks:
+        path = os.path.join(args.json_dir, fname)
+        if not os.path.exists(path):
+            errs.append(f"missing artifact {fname} — did benchmarks.run "
+                        "--only explorer,serve succeed?")
+            continue
+        errs.extend(fn(path))
+
+    if errs:
+        for e in errs:
+            print(f"[check_smoke] FAIL: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    print("[check_smoke] OK: dispatch counts, Pareto parity and serve "
+          "speedup within bounds")
+
+
+if __name__ == "__main__":
+    main()

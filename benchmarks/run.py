@@ -1,11 +1,15 @@
 """Benchmark harness: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV and writes one machine-readable
+``BENCH_<name>.json`` per benchmark (CI uploads these as artifacts and
+gates on them via ``benchmarks.check_smoke``).
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig05]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only explorer,serve]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -15,14 +19,18 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale budgets (400 evals per experiment)")
     ap.add_argument("--only", default=None,
-                    help="substring filter on benchmark names")
+                    help="comma-separated substring filters on bench names")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the BENCH_<name>.json artifacts")
     args = ap.parse_args()
+    filters = [f for f in (args.only or "").split(",") if f]
 
-    from benchmarks import explorer_bench, lenet_bench, lm_precision
-    from benchmarks import paper_figs, roofline_table
+    from benchmarks import (explorer_bench, lenet_bench, lm_precision,
+                            paper_figs, roofline_table, serve_bench)
 
     benches = [
         ("explorer_pop", explorer_bench.explorer_population),
+        ("serve", serve_bench.serve_throughput),
         ("fig04", paper_figs.fig04_flop_breakdown),
         ("fig05_06", paper_figs.fig05_06_wp_vs_cip),
         ("fig07", paper_figs.fig07_memory_savings),
@@ -37,7 +45,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in benches:
-        if args.only and args.only not in name:
+        if filters and not any(f in name for f in filters):
             continue
         try:
             rows = fn(full=args.full)
@@ -48,6 +56,11 @@ def main() -> None:
             continue
         for (rname, us, derived) in rows:
             print(f"{rname},{us:.0f},{derived}")
+        path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump({"name": name, "full": args.full,
+                       "rows": [[r, us, d] for r, us, d in rows]},
+                      f, indent=2)
     if failed:
         raise SystemExit(f"{failed} benchmarks failed")
 

@@ -29,6 +29,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import energy as energy_mod
@@ -55,6 +56,39 @@ def default_error_fn(approx, exact) -> float:
         num += float(np.sum((a - e) ** 2))
         den += float(np.sum(e ** 2))
     return math.sqrt(num / max(den, 1e-300))
+
+
+def _rel_l2_multi(outs, exact):
+    """On-device batched default_error_fn: output leaves (I, P, ...) vs
+    exact leaves (I, ...) -> (I, P) float64 errors. Reduced in f64 (the
+    call site traces under ``enable_x64``) so the result matches the host
+    path's numpy-f64 reduction."""
+    num, den, finite = 0.0, 0.0, True
+    for a, e in zip(jax.tree.leaves(outs), jax.tree.leaves(exact)):
+        a64 = a.astype(jnp.float64)
+        e64 = e.astype(jnp.float64)
+        red = tuple(range(2, a64.ndim))
+        num = num + jnp.sum((a64 - jnp.expand_dims(e64, 1)) ** 2, axis=red)
+        den = den + jnp.sum(e64 ** 2,
+                            axis=tuple(range(1, e64.ndim)))[:, None]
+        finite = finite & jnp.all(jnp.isfinite(a64), axis=red)
+    err = jnp.sqrt(num / jnp.maximum(den, 1e-300))
+    return jnp.where(finite, err, jnp.inf)
+
+
+def _rel_l2_single(outs, exact):
+    """Single-input variant: output leaves (P, ...) vs unbatched exact
+    leaves -> (P,) float64 errors."""
+    num, den, finite = 0.0, 0.0, True
+    for a, e in zip(jax.tree.leaves(outs), jax.tree.leaves(exact)):
+        a64 = a.astype(jnp.float64)
+        e64 = e.astype(jnp.float64)
+        red = tuple(range(1, a64.ndim))
+        num = num + jnp.sum((a64 - e64[None]) ** 2, axis=red)
+        den = den + jnp.sum(e64 ** 2)
+        finite = finite & jnp.all(jnp.isfinite(a64), axis=red)
+    err = jnp.sqrt(num / jnp.maximum(den, 1e-300))
+    return jnp.where(finite, err, jnp.inf)
 
 
 @dataclasses.dataclass
@@ -150,11 +184,19 @@ class PopulationEvaluator:
 
         self._multi_call = jax.jit(multi)
         self.n_dispatches = 0
+        # the default relative-L2 reduction runs on-device (jit'd,
+        # population-batched, f64 under enable_x64) so only the (P, I)
+        # scalar error matrix leaves the device; custom error callables
+        # keep the host path (full outputs transferred, then reduced).
+        self._on_device_err = task.error_fn is default_error_fn
+        self._err_multi = jax.jit(_rel_l2_multi)
+        self._err_single = jax.jit(_rel_l2_single)
         # stacked-input memo: the train/test input lists are constant
         # across generations, so leaf-wise stacking + upload happens once
         # per list, not once per ask/tell round. Holding the inputs ref
         # keeps its id() valid for the lifetime of the entry.
         self._stack_cache: Dict[int, tuple] = {}
+        self._exact_cache: Dict[tuple, tuple] = {}
 
         if shard == "auto":
             shard = len(jax.devices()) > 1
@@ -190,12 +232,35 @@ class PopulationEvaluator:
     def _subtree(self, host, index) -> object:
         return jax.tree.map(lambda x: x[index], host)
 
+    def _stacked_exact(self, exact: Sequence):
+        """Device-resident leaf-wise stack of the exact baselines (axis 0
+        = input index), memoized per exact list like the input stack."""
+        key = ("stacked", id(exact))
+        if key not in self._exact_cache:
+            with enable_x64():   # don't downcast f64 baselines on upload
+                dev = jax.tree.map(lambda *xs: jnp.stack(
+                    [jnp.asarray(x) for x in xs]), *exact)
+            self._exact_cache[key] = (exact, dev)
+        return self._exact_cache[key][1]
+
+    def _device_exact(self, exact: Sequence, i: int):
+        """Device-resident copy of one exact baseline (the unstackable-
+        inputs path), memoized so generations don't re-upload it."""
+        key = ("single", id(exact))
+        if key not in self._exact_cache:
+            with enable_x64():
+                dev = [jax.tree.map(jnp.asarray, e) for e in exact]
+            self._exact_cache[key] = (exact, dev)
+        return self._exact_cache[key][1][i]
+
     # -- batched path --------------------------------------------------------
     def errors_matrix(self, genomes: Sequence[Sequence[int]],
                       inputs: Sequence[tuple],
                       exact: Sequence) -> np.ndarray:
         """(len(genomes), len(inputs)) raw error matrix, one compiled call
-        when the inputs stack, one per input otherwise."""
+        when the inputs stack, one per input otherwise. With the default
+        error_fn the relative-L2 reduction also runs on-device, so only
+        the scalar matrix crosses the host boundary."""
         n = len(genomes)
         if n == 0:
             return np.zeros((0, len(inputs)))
@@ -208,19 +273,30 @@ class PopulationEvaluator:
         if stacked is not None:
             outs = self._multi_call(bits, *stacked)   # leaves (I, P, ...)
             self.n_dispatches += 1
-            host = jax.tree.map(np.asarray, outs)
-            for i in range(len(inputs)):
-                for p in range(n):
-                    out[p, i] = self.error_fn(
-                        self._subtree(host, (i, p)), exact[i])
+            if self._on_device_err:
+                with enable_x64():
+                    mat = self._err_multi(outs, self._stacked_exact(exact))
+                out[:] = np.asarray(mat).T[:n]
+            else:
+                host = jax.tree.map(np.asarray, outs)
+                for i in range(len(inputs)):
+                    for p in range(n):
+                        out[p, i] = self.error_fn(
+                            self._subtree(host, (i, p)), exact[i])
         else:
             for i, inp in enumerate(inputs):
                 outs = self._pop_call(bits, *inp)     # leaves (P, ...)
                 self.n_dispatches += 1
-                host = jax.tree.map(np.asarray, outs)
-                for p in range(n):
-                    out[p, i] = self.error_fn(self._subtree(host, p),
-                                              exact[i])
+                if self._on_device_err:
+                    with enable_x64():
+                        col = self._err_single(outs,
+                                               self._device_exact(exact, i))
+                    out[:, i] = np.asarray(col)[:n]
+                else:
+                    host = jax.tree.map(np.asarray, outs)
+                    for p in range(n):
+                        out[p, i] = self.error_fn(self._subtree(host, p),
+                                                  exact[i])
         return out
 
     # -- historical serial path (benchmarks / parity tests) ------------------

@@ -26,9 +26,9 @@ from repro.utils.jax_compat import CompilerParams as _CompilerParams
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale, causal, window, kv_steps, block_q, block_k, tq, tk,
-            qk_bits, pv_bits, mode):
+def _kernel(q_ref, k_ref, v_ref, kvl_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, kv_steps, block_q, block_k, q_offset,
+            pad_k, qk_bits, pv_bits, mode):
     kv_i = pl.program_id(2)
 
     @pl.when(kv_i == 0)
@@ -46,16 +46,21 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     if qk_bits < 24:
         s = _trunc_block(s, qk_bits, mode)      # NEAT: truncated logits
 
-    # causal / sliding-window mask; queries right-aligned against keys
+    # causal / sliding-window mask; queries right-aligned against keys.
+    # q_offset maps query row i to its position in padded key coords
+    # ((tk - tq) + pad_k, both unpadded), so causal alignment survives
+    # query padding; key positions < pad_k are the zero left-pad keys.
     q_pos = (pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 0)) + (tk - tq)
+        jnp.int32, (block_q, block_k), 0)) + q_offset
     k_pos = kv_i * block_k + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 1)
-    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    mask = k_pos >= pad_k
     if causal:
         mask &= k_pos <= q_pos
     if window is not None:
         mask &= k_pos > q_pos - window
+    # per-row valid-KV prefix (continuous batching: ragged slot lengths)
+    mask &= k_pos < kvl_ref[0, 0]
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[:, :1]                       # (bq, 1)
@@ -83,11 +88,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     jax.jit, static_argnames=("causal", "window", "qk_bits", "pv_bits",
                               "mode", "block_q", "block_k", "interpret"))
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
-                           window: int | None = None, qk_bits: int = 24,
+                           window: int | None = None,
+                           kv_len=None, qk_bits: int = 24,
                            pv_bits: int = 24, mode: str = "rne",
                            block_q: int = 128, block_k: int = 128,
                            interpret: bool = True):
-    """q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D). Returns (B, Hq, Tq, D)."""
+    """q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D). Returns (B, Hq, Tq, D).
+    ``kv_len`` ((B,) int32) optionally limits row b's attention to its
+    first ``kv_len[b]`` keys (ragged-slot prefix mask)."""
     b, hq, tq, d = q.shape
     _, hkv, tk, _ = k.shape
     assert hq % hkv == 0
@@ -110,11 +118,18 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     kv_steps = tkp // block_k
     grid = (b * hq, tqp // block_q, kv_steps)
 
+    # per-row valid-KV prefix, shifted by the left key padding and spread
+    # to one row per (batch, head) program; full length == no-op mask
+    kvl = (jnp.full((b,), tk, jnp.int32) if kv_len is None
+           else kv_len.astype(jnp.int32))
+    kvl3 = jnp.repeat(kvl + pk, hq).reshape(b * hq, 1)
+
     out = pl.pallas_call(
         functools.partial(
             _kernel, scale=scale, causal=causal, window=window,
             kv_steps=kv_steps, block_q=block_q, block_k=block_k,
-            tq=tqp, tk=tkp, qk_bits=qk_bits, pv_bits=pv_bits, mode=mode),
+            q_offset=(tk - tq) + pk, pad_k=pk,
+            qk_bits=qk_bits, pv_bits=pv_bits, mode=mode),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
@@ -122,6 +137,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
                          lambda h, qi, ki, g=group: (h // g, ki, 0)),
             pl.BlockSpec((1, block_k, d),
                          lambda h, qi, ki, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((1, 1), lambda h, qi, ki: (h, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((b * hq, tqp, d), q.dtype),
@@ -133,6 +149,6 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(q3, k3, v3)
+    )(q3, k3, v3, kvl3)
     out = out.reshape(b, hq, tqp, d)[:, :, :tq]
     return out

@@ -47,14 +47,20 @@ def quant_matmul(a: jnp.ndarray, b: jnp.ndarray, *, a_bits: int = 24,
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
-                    window: int | None = None, qk_bits: int = 24,
+                    window: int | None = None,
+                    kv_len: jnp.ndarray | None = None, qk_bits: int = 24,
                     pv_bits: int = 24, mode: str = "rne",
                     backend: str = "auto"):
+    """``kv_len`` ((B,) int32, optional) masks each batch row to its first
+    ``kv_len[b]`` keys — the ragged-slot prefix mask for continuous
+    batching (rows must not query beyond their own valid prefix)."""
     be = _resolve(backend)
     if be == "ref":
         return _ref.flash_attention_ref(q, k, v, causal=causal,
-                                        window=window, qk_bits=qk_bits,
+                                        window=window, kv_len=kv_len,
+                                        qk_bits=qk_bits,
                                         pv_bits=pv_bits, mode=mode)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  kv_len=kv_len,
                                   qk_bits=qk_bits, pv_bits=pv_bits,
                                   mode=mode, interpret=(be == "interpret"))

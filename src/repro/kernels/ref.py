@@ -32,12 +32,16 @@ def _mant(x) -> int:
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         *, causal: bool = True, window: int | None = None,
+                        kv_len: jnp.ndarray | None = None,
                         qk_bits: int = 24, pv_bits: int = 24,
                         mode: str = "rne") -> jnp.ndarray:
     """Oracle for kernels.flash_attention.
 
     q: (B, Hq, Tq, D), k/v: (B, Hkv, Tk, D) with Hq % Hkv == 0 (GQA).
-    Optional NEAT truncation of the QK^T logits and the PV product.
+    ``kv_len`` ((B,) int32) optionally limits row b to its first
+    ``kv_len[b]`` keys (ragged-slot prefix mask; undefined for query rows
+    entirely beyond their prefix). Optional NEAT truncation of the QK^T
+    logits and the PV product.
     """
     b, hq, tq, d = q.shape
     hkv = k.shape[1]
@@ -57,7 +61,11 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         mask &= kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
-    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    if kv_len is not None:
+        bmask = mask[None] & (kpos[None] < kv_len[:, None, None])
+        logits = jnp.where(bmask[:, None], logits, -jnp.inf)
+    else:
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
     if pv_bits < 24:

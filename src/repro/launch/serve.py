@@ -2,7 +2,11 @@
 placement (the paper's tradeoff, applied to LM inference).
 
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b --reduced \
-      --prompts 6 --max-new 16 --rule mant8
+      --prompts 6 --max-new 16 --rule mant8 --continuous
+
+``--continuous`` (default) refills slots mid-flight from the queue;
+``--wave`` keeps the historical wave scheduler (slots refill only
+between waves).
 """
 from __future__ import annotations
 
@@ -25,6 +29,11 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--rule", default=None)
+    ap.add_argument("--continuous", dest="engine", action="store_const",
+                    const="continuous", default="continuous",
+                    help="continuous batching: refill slots mid-flight")
+    ap.add_argument("--wave", dest="engine", action="store_const",
+                    const="wave", help="historical wave scheduler")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -40,13 +49,17 @@ def main() -> None:
         print(f"[serve] NEAT rule: WP mant{bits}")
 
     engine = DecodeEngine(model, params,
-                          ServeConfig(max_len=128, batch_slots=args.slots),
+                          ServeConfig(max_len=128, batch_slots=args.slots,
+                                      engine=args.engine),
                           rule=rule)
     prompts = [[(7 * i + 3) % cfg.vocab_size for _ in range(4)]
                for i in range(args.prompts)]
     outs = engine.generate(prompts, max_new_tokens=args.max_new)
     for i, o in enumerate(outs):
         print(f"[serve] prompt {i}: {len(o)} tokens -> {o[:8]}...")
+    st = engine.stats
+    print(f"[serve] engine={args.engine} steps={st.steps} "
+          f"occupancy={st.occupancy:.2f} tokens={st.tokens_out}")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ from repro.models.layers import init_linear, init_norm, linear, norm, rotary
 NEG_INF = -1e30
 
 
-def _sdpa_scan(q, k, v, *, causal: bool, window, block_q: int):
+def _sdpa_scan(q, k, v, *, causal: bool, window, block_q: int, kv_len=None):
     """Memory-efficient attention: lax.scan over q blocks with an
     in-scan remat body — peak temp is one (B, H, bq, Tk) logits block and
     the backward recomputes it per block (flash semantics in pure jnp;
@@ -51,7 +51,11 @@ def _sdpa_scan(q, k, v, *, causal: bool, window, block_q: int):
             mask &= kpos <= qpos
         if window is not None:
             mask &= kpos > qpos - window
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        if kv_len is not None:      # per-row valid-KV prefix (ragged slots)
+            bmask = mask[None] & (kpos[None] < kv_len[:, None, None])
+            s = jnp.where(bmask[:, None, None], s, NEG_INF)
+        else:
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhgqk,bhukd->bhgqd", p, vg.astype(jnp.float32))
         return carry, o.reshape(b, hq, bq, d).astype(q.dtype)
@@ -61,19 +65,19 @@ def _sdpa_scan(q, k, v, *, causal: bool, window, block_q: int):
     return out[:, :, :tq]
 
 
-def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool):
+def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool, kv_len=None):
     backend = cfg.kernel_backend
     if backend in ("pallas", "interpret"):
         return kops.flash_attention(q, k, v, causal=causal,
                                     window=cfg.sliding_window,
-                                    backend=backend)
+                                    kv_len=kv_len, backend=backend)
     tq, tk = q.shape[2], k.shape[2]
     if max(tq, tk) <= 2 * cfg.attn_block_q:
         return kops.flash_attention(q, k, v, causal=causal,
                                     window=cfg.sliding_window,
-                                    backend="ref")
+                                    kv_len=kv_len, backend="ref")
     return _sdpa_scan(q, k, v, causal=causal, window=cfg.sliding_window,
-                      block_q=cfg.attn_block_q)
+                      block_q=cfg.attn_block_q, kv_len=kv_len)
 
 
 def init_attention(key, cfg: ModelConfig):
@@ -109,8 +113,15 @@ def _project_qkv(p, x, cfg: ModelConfig, positions):
 
 
 def attention(p, x, cfg: ModelConfig, *, causal: bool = True,
-              positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Full-sequence attention (training / prefill). x: (B, T, D)."""
+              positions: Optional[jnp.ndarray] = None,
+              kv_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill). x: (B, T, D).
+
+    ``kv_len`` ((B,) int32) optionally limits each row's attention to its
+    first ``kv_len[b]`` keys — the ragged-slot mask used when prompts of
+    different lengths are prefilled left-aligned in one batch. Rows must
+    not query beyond their own valid prefix.
+    """
     b, t, _ = x.shape
     if positions is None:
         positions = jnp.arange(t)
@@ -120,7 +131,7 @@ def attention(p, x, cfg: ModelConfig, *, causal: bool = True,
         kh = k.transpose(0, 2, 1, 3)
         vh = v.transpose(0, 2, 1, 3)
         with pscope("sdpa"):
-            out = _sdpa(qh, kh, vh, cfg, causal=causal)
+            out = _sdpa(qh, kh, vh, cfg, causal=causal, kv_len=kv_len)
             out = quantize_here(out, "dot")
         out = out.transpose(0, 2, 1, 3).reshape(b, t, -1)
         with pscope("out_proj"):
@@ -129,7 +140,9 @@ def attention(p, x, cfg: ModelConfig, *, causal: bool = True,
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   n_layers: Optional[int] = None, dtype=None):
-    """Preallocated cache: one (B, S, KV, Dh) K/V pair per layer."""
+    """Preallocated cache: one (B, S, KV, Dh) K/V pair per layer, plus a
+    per-slot position vector (B,) — each slot advances at its own pace so
+    a finished slot can be reset and refilled mid-flight."""
     kv, dh = cfg.n_kv_heads, cfg.head_dim
     dt = dtype or cfg.compute_dtype
     n = n_layers if n_layers is not None else cfg.n_layers
@@ -138,27 +151,60 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
         "v": jnp.zeros((batch, max_len, kv, dh), dt),
     }
     return {"layers": [layer() for _ in range(n)],
-            "pos": jnp.zeros((), jnp.int32)}
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def slot_mask(mask: jnp.ndarray, ndim: int, axis: int = 0) -> jnp.ndarray:
+    """Reshape a (B,) bool mask for broadcasting against a leaf whose
+    batch axis sits at ``axis`` of an ``ndim``-rank array."""
+    shape = [1] * ndim
+    shape[axis] = mask.shape[0]
+    return mask.reshape(shape)
+
+
+def reset_kv_cache(cache, mask: jnp.ndarray):
+    """Zero the KV entries and position of the slots selected by the (B,)
+    bool ``mask``; other slots are untouched. Per-slot masking already
+    hides entries beyond ``pos``, so this is defense in depth — a recycled
+    slot can never attend to its predecessor's keys even if the zeroing
+    were skipped."""
+    layers = [{"k": jnp.where(slot_mask(mask, lc["k"].ndim), 0, lc["k"]),
+               "v": jnp.where(slot_mask(mask, lc["v"].ndim), 0, lc["v"])}
+              for lc in cache["layers"]]
+    return {"layers": layers, "pos": jnp.where(mask, 0, cache["pos"])}
+
+
+def _broadcast_pos(pos, batch: int) -> jnp.ndarray:
+    """Accept scalar (lockstep) or (B,) per-slot positions."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(jnp.atleast_1d(pos), (batch,))
 
 
 def decode_attention(p, x, cfg: ModelConfig, layer_cache, pos
                      ) -> Tuple[jnp.ndarray, dict]:
     """Single-token decode. x: (B, 1, D); cache k/v: (B, S, KV, Dh);
-    pos: scalar int32 — the index being written.
+    pos: (B,) int32 per-slot write positions (a scalar broadcasts, which
+    advances every slot in lockstep — the legacy wave behavior).
 
-    The score/value contractions reduce over the cache's S axis, so under a
+    Each slot writes its K/V at its own position and is masked causally
+    against its own length, so slots at different phases (prefill vs.
+    decode vs. freshly reset) coexist in one compiled step. The
+    score/value contractions reduce over the cache's S axis, so under a
     sequence-sharded cache GSPMD emits the flash-decoding partial-softmax
     all-reduce automatically.
     """
     b, t, _ = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     with pscope("attn"):
-        positions = jnp.full((t,), pos, jnp.int32)
+        pos = _broadcast_pos(pos, b)
+        positions = pos[:, None]                      # (B, 1) RoPE phases
         q, k, v = _project_qkv(p, x, cfg, positions)
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            layer_cache["k"], k.astype(layer_cache["k"].dtype), pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            layer_cache["v"], v.astype(layer_cache["v"].dtype), pos, axis=1)
+        upd = lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+            c, u, i, axis=0)
+        ck = jax.vmap(upd)(layer_cache["k"],
+                           k.astype(layer_cache["k"].dtype), pos)
+        cv = jax.vmap(upd)(layer_cache["v"],
+                           v.astype(layer_cache["v"].dtype), pos)
         group = h // kv
         qh = q.reshape(b, kv, group, dh)              # t == 1
         with pscope("sdpa"):
@@ -167,10 +213,10 @@ def decode_attention(p, x, cfg: ModelConfig, layer_cache, pos
                                     jnp.float32(dh))
             scores = quantize_here(scores, "dot")
             s_idx = jnp.arange(ck.shape[1])
-            valid = s_idx <= pos
+            valid = s_idx[None, :] <= pos[:, None]    # (B, S) per-slot causal
             if cfg.sliding_window is not None:
-                valid &= s_idx > pos - cfg.sliding_window
-            scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+                valid &= s_idx[None, :] > pos[:, None] - cfg.sliding_window
+            scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
             w = jax.nn.softmax(scores, axis=-1)
             out = jnp.einsum("bkgs,bskd->bkgd", w, cv.astype(jnp.float32))
             out = quantize_here(out, "dot").astype(x.dtype)

@@ -122,6 +122,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return cache
 
 
+def reset_slots(cfg: ModelConfig, cache, mask):
+    """Zero the (B,) bool-masked slots' self-attn KV, position and cached
+    encoder memory so a retired slot can serve a fresh request."""
+    new = attn_mod.reset_kv_cache({"layers": cache["layers"],
+                                   "pos": cache["pos"]}, mask)
+    new["memory"] = jnp.where(
+        attn_mod.slot_mask(mask, cache["memory"].ndim), 0, cache["memory"])
+    return new
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig,
                 memory: jnp.ndarray | None = None):
     """Single-token decode against cached self-attn KV + encoder memory."""

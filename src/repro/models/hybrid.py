@@ -146,8 +146,22 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
         "mamba": [mamba2_init_cache(cfg, batch) for _ in range(cfg.n_layers)],
         "attn": attn_mod.init_kv_cache(cfg, batch, max_len,
                                        n_layers=n_attn),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
         "x0": jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype),
+    }
+
+
+def reset_slots(cfg: ModelConfig, cache, mask):
+    """Zero the (B,) bool-masked slots' Mamba states, attention KV and
+    positions so a retired slot can serve a fresh request mid-flight."""
+    batch = mask.shape[0]
+    zero = lambda x: jnp.where(
+        mask.reshape((batch,) + (1,) * (x.ndim - 1)), 0, x)
+    return {
+        "mamba": [jax.tree.map(zero, mc) for mc in cache["mamba"]],
+        "attn": attn_mod.reset_kv_cache(cache["attn"], mask),
+        "pos": jnp.where(mask, 0, cache["pos"]),
+        "x0": zero(cache["x0"]),
     }
 
 

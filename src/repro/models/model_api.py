@@ -19,22 +19,14 @@ class Model:
     loss: Callable                 # (params, batch) -> (loss, metrics)
     init_cache: Callable           # (batch, max_len) -> cache
     decode_step: Callable          # (params, cache, tokens) -> (logits, cache)
+    reset_slots: Callable          # (cache, (B,) bool mask) -> cache
 
 
 def build_model(cfg: ModelConfig) -> Model:
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
         mod = transformer
-        moe_impl = "ragged" if fam == "moe" else "ragged"
-        return Model(
-            cfg=cfg,
-            init=lambda rng: mod.init_params(rng, cfg),
-            forward=lambda p, tok: mod.forward(p, tok, cfg),
-            loss=lambda p, batch: mod.loss_fn(p, batch, cfg),
-            init_cache=lambda b, s: mod.init_cache(cfg, b, s),
-            decode_step=lambda p, c, tok: mod.decode_step(p, c, tok, cfg),
-        )
-    if fam == "ssm":
+    elif fam == "ssm":
         mod = xlstm
     elif fam == "hybrid":
         mod = hybrid
@@ -49,6 +41,7 @@ def build_model(cfg: ModelConfig) -> Model:
         loss=lambda p, batch: mod.loss_fn(p, batch, cfg),
         init_cache=lambda b, s: mod.init_cache(cfg, b, s),
         decode_step=lambda p, c, tok: mod.decode_step(p, c, tok, cfg),
+        reset_slots=lambda c, m: mod.reset_slots(cfg, c, m),
     )
 
 

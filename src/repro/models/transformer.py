@@ -119,8 +119,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
                                    dt),
                     "v": jnp.zeros((cfg.n_layers, batch, max_len, kv, dh),
                                    dt)},
-                "pos": jnp.zeros((), jnp.int32)}
+                "pos": jnp.zeros((batch,), jnp.int32)}
     return attn_mod.init_kv_cache(cfg, batch, max_len)
+
+
+def reset_slots(cfg: ModelConfig, cache, mask):
+    """Zero the KV entries + position of the (B,) bool-masked slots so a
+    retired slot can be refilled with a new request mid-flight."""
+    if cfg.scan_layers:   # stacked leaves (L, B, S, KV, Dh): batch axis 1
+        layers = {n: jnp.where(attn_mod.slot_mask(mask, x.ndim, axis=1),
+                               0, x)
+                  for n, x in cache["layers"].items()}
+        return {"layers": layers, "pos": jnp.where(mask, 0, cache["pos"])}
+    return attn_mod.reset_kv_cache(cache, mask)
 
 
 def _decode_block(layer, lc, x, pos, cfg: ModelConfig, i: int,
@@ -140,7 +151,9 @@ def _decode_block(layer, lc, x, pos, cfg: ModelConfig, i: int,
 
 def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
                 *, moe_impl: str | None = None) -> Tuple[jnp.ndarray, dict]:
-    """One decode step. tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+    """One decode step. tokens: (B, 1) -> (logits (B, 1, V), new cache).
+    ``cache["pos"]`` is the (B,) per-slot position vector; every slot
+    advances by one each step."""
     moe_impl = moe_impl or cfg.moe_impl
     pos = cache["pos"]
     with pscope("model"):

@@ -317,7 +317,24 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     for kind in kinds:
         caches.append(mlstm_init_cache(cfg, batch) if kind == "mlstm"
                       else slstm_init_cache(cfg, batch))
-    return {"blocks": caches, "pos": jnp.zeros((), jnp.int32)}
+    return {"blocks": caches, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def reset_slots(cfg: ModelConfig, cache, mask):
+    """Restore the (B,) bool-masked slots' recurrent state to its initial
+    value (sLSTM's stabilizer ``m`` starts at -1e30, not 0) so a retired
+    slot can serve a fresh request mid-flight."""
+    kinds = block_kinds(cfg)
+    batch = mask.shape[0]
+    blocks = []
+    for kind, blk in zip(kinds, cache["blocks"]):
+        init = (mlstm_init_cache(cfg, batch) if kind == "mlstm"
+                else slstm_init_cache(cfg, batch))
+        blocks.append(jax.tree.map(
+            lambda cur, iv: jnp.where(
+                mask.reshape((batch,) + (1,) * (cur.ndim - 1)), iv, cur),
+            blk, init))
+    return {"blocks": blocks, "pos": jnp.where(mask, 0, cache["pos"])}
 
 
 def decode_step(params, cache, tokens, cfg: ModelConfig):

@@ -1,1 +1,3 @@
-from repro.serve.engine import DecodeEngine, ServeConfig
+from repro.serve.engine import DecodeEngine, ServeConfig, ServeStats
+
+__all__ = ["DecodeEngine", "ServeConfig", "ServeStats"]

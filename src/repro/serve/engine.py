@@ -1,22 +1,31 @@
-"""Batched decode engine: prefill + greedy/temperature decode against the
-model's KV cache, with fixed-slot wave batching (requests are packed into
-slots and a finished wave pulls the next requests from the queue without
-recompiling) and NEAT placement support for reduced-precision serving.
+"""Decode engine: prefill + greedy/temperature decode against the model's
+KV cache, with NEAT placement support for reduced-precision serving.
 
-Prefill is real: every prompt token is stepped through the compiled
-decode step, so the KV cache holds the whole prompt and completions
-condition on all of it. Prompts in a wave are left-aligned — shorter
-prompts finish prefill and start sampling while longer prompts are still
-streaming theirs — which keeps a single compiled (batch, 1)-token step
-function for both phases. Because the cache carries one global position
-scalar shared by all slots, slots are refilled between waves (each wave
-starts from a fresh cache) rather than mid-wave, which would leak the
-previous request's KV entries into the new request's attention window.
+Two schedulers share one compiled (batch, 1)-token step function:
+
+* **continuous** (default): the KV cache carries a per-slot position
+  vector, so the engine is a scheduler loop — admit queued requests into
+  free slots *mid-flight*, stream each slot's prompt left-aligned at its
+  own position (prefill), retire on EOS/budget, and immediately refill.
+  A retired slot is reset (its KV entries and position zeroed) before
+  reuse, and per-slot causal masking keys every slot on its own length,
+  so a recycled slot can never attend to the previous request's KV
+  entries. No wave barrier, no fresh-cache restarts.
+
+* **wave**: the historical scheduler — requests are packed into fixed
+  slots wave by wave and a finished wave pulls the next requests from the
+  queue; slots idle once their request finishes until the whole wave
+  drains. Kept as the parity reference: under greedy decoding both
+  schedulers produce identical per-request completions.
+
+Prefill is real in both: every prompt token is stepped through the
+compiled decode step, so the KV cache holds the whole prompt and
+completions condition on all of it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,18 +43,41 @@ class ServeConfig:
     temperature: float = 0.0          # 0 = greedy
     eos_token: Optional[int] = None
     seed: int = 0
+    engine: str = "continuous"        # "continuous" | "wave"
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Occupancy accounting for the last ``generate`` call."""
+    steps: int = 0                    # compiled decode-step dispatches
+    active_slot_steps: int = 0        # slot-steps spent on a live request
+    slot_steps: int = 0               # steps * batch_slots
+    tokens_out: int = 0               # completion tokens emitted
+    n_requests: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        return self.active_slot_steps / max(self.slot_steps, 1)
 
 
 class DecodeEngine:
     def __init__(self, model: Model, params, cfg: ServeConfig,
                  rule: Optional[PlacementRule] = None):
+        if cfg.engine not in ("continuous", "wave"):
+            raise ValueError(f"unknown engine {cfg.engine!r}")
         self.model = model
         self.params = params
         self.cfg = cfg
         self.rule = rule
+        self.stats = ServeStats()
         with use_rule(rule):
             self._step = jax.jit(
                 lambda p, c, t: model.decode_step(p, c, t))
+            # donate the cache: the reset runs on the admit hot path and
+            # the caller always rebinds, so XLA may update it in place
+            # instead of copying every layer's (B, S, KV, Dh) buffers
+            self._reset = jax.jit(lambda c, m: model.reset_slots(c, m),
+                                  donate_argnums=0)
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         logits = logits[:, -1, :]
@@ -54,6 +86,90 @@ class DecodeEngine:
         return jax.random.categorical(
             key, logits / self.cfg.temperature).astype(jnp.int32)
 
+    def _prompt_tail(self, prompt, max_new_tokens: int) -> List[int]:
+        # keep only the prompt tail that leaves cache room for the full
+        # completion — otherwise a near-max_len prompt would exhaust the
+        # cache mid-prefill and silently return a short/empty completion
+        keep = max(1, self.cfg.max_len - 1 - max_new_tokens)
+        return list(prompt)[-keep:] if prompt else [0]
+
+    def generate(self, prompts: List[List[int]],
+                 max_new_tokens: int = 32) -> List[List[int]]:
+        """Serve a list of token prompts; returns completions per prompt.
+        ``self.stats`` holds step/occupancy accounting for the call."""
+        self.stats = ServeStats(n_requests=len(prompts))
+        outputs: dict[int, List[int]] = {i: [] for i in range(len(prompts))}
+        key = jax.random.key(self.cfg.seed)
+        with use_rule(self.rule):
+            if self.cfg.engine == "continuous":
+                self._run_continuous(prompts, outputs, max_new_tokens, key)
+            else:
+                queue = list(enumerate(prompts))
+                while queue:
+                    wave = [queue.pop(0) for _ in
+                            range(min(self.cfg.batch_slots, len(queue)))]
+                    key = self._run_wave(wave, outputs, max_new_tokens, key)
+        self.stats.slot_steps = self.stats.steps * self.cfg.batch_slots
+        self.stats.tokens_out = sum(len(o) for o in outputs.values())
+        return [outputs[i] for i in range(len(prompts))]
+
+    # -- continuous scheduler ------------------------------------------------
+    def _run_continuous(self, prompts, outputs, max_new_tokens, key):
+        """One scheduler loop over the compiled step: admit from the queue
+        into free slots, prefill each slot at its own position, retire on
+        EOS/budget and refill mid-flight while other slots keep decoding."""
+        cfg = self.cfg
+        n_slots = cfg.batch_slots
+        queue = [(rid, self._prompt_tail(p, max_new_tokens))
+                 for rid, p in enumerate(prompts)]
+        cache = self.model.init_cache(n_slots, cfg.max_len)
+        cur = np.zeros((n_slots, 1), np.int32)
+        rid = [-1] * n_slots              # -1 = free slot
+        prompt = [[0]] * n_slots
+        ppos = [0] * n_slots              # index of the token in `cur`
+        left = [0] * n_slots              # completion tokens still owed
+        spos = [0] * n_slots              # slot's own cache position
+
+        while queue or any(r >= 0 for r in rid):
+            # admit: reset + refill every free slot from the queue (one
+            # compiled reset call per step regardless of how many admit)
+            admit = np.zeros((n_slots,), bool)
+            for s in range(n_slots):
+                if rid[s] < 0 and queue:
+                    rid[s], prompt[s] = queue.pop(0)
+                    ppos[s], spos[s] = 0, 0
+                    left[s] = max_new_tokens
+                    cur[s, 0] = prompt[s][0]
+                    admit[s] = True
+            if admit.any():
+                cache = self._reset(cache, jnp.asarray(admit))
+
+            key, sub = jax.random.split(key)
+            logits, cache = self._step(self.params, cache, jnp.asarray(cur))
+            nxt = np.asarray(self._sample(logits, sub))
+            self.stats.steps += 1
+
+            for s in range(n_slots):
+                if rid[s] < 0:
+                    continue
+                self.stats.active_slot_steps += 1
+                spos[s] += 1
+                if ppos[s] + 1 < len(prompt[s]):
+                    ppos[s] += 1                      # still prefilling
+                    cur[s, 0] = prompt[s][ppos[s]]
+                    continue
+                tok = int(nxt[s])                     # prompt fully in cache
+                outputs[rid[s]].append(tok)
+                left[s] -= 1
+                if (left[s] <= 0
+                        or (cfg.eos_token is not None
+                            and tok == cfg.eos_token)
+                        or spos[s] >= cfg.max_len - 1):
+                    rid[s] = -1                       # retire; refill next step
+                else:
+                    cur[s, 0] = tok
+
+    # -- wave scheduler (parity reference) -----------------------------------
     def _run_wave(self, wave, outputs, max_new_tokens, key):
         """Serve one wave of requests (<= batch_slots) from a fresh cache.
 
@@ -63,12 +179,8 @@ class DecodeEngine:
         """
         cfg = self.cfg
         n_slots = cfg.batch_slots
-        # keep only the prompt tail that leaves cache room for the full
-        # completion — otherwise a near-max_len prompt would exhaust the
-        # cache mid-prefill and silently return a short/empty completion
-        keep = max(1, cfg.max_len - 1 - max_new_tokens)
-        prompts = [list(p)[-keep:] if p else [0] for _, p in wave]
-        rids = [rid for rid, _ in wave]
+        prompts = [self._prompt_tail(p, max_new_tokens) for _, p in wave]
+        rids = [r for r, _ in wave]
         left = [max_new_tokens] * len(wave)
         done = [False] * len(wave)
         cache = self.model.init_cache(n_slots, cfg.max_len)
@@ -76,11 +188,13 @@ class DecodeEngine:
         for s, p in enumerate(prompts):
             cur[s, 0] = p[0]
 
-        pos = 0                        # global cache position == step index
+        pos = 0                        # step index (slots move in lockstep)
         while not all(done):
             key, sub = jax.random.split(key)
             logits, cache = self._step(self.params, cache, jnp.asarray(cur))
             nxt = np.asarray(self._sample(logits, sub))
+            self.stats.steps += 1
+            self.stats.active_slot_steps += sum(not d for d in done)
             for s in range(len(wave)):
                 if done[s]:
                     continue
@@ -99,19 +213,3 @@ class DecodeEngine:
             if pos >= cfg.max_len - 1:
                 break
         return key
-
-    def generate(self, prompts: List[List[int]],
-                 max_new_tokens: int = 32) -> List[List[int]]:
-        """Serve a list of token prompts; returns completions per prompt.
-        Requests are packed into fixed slots wave by wave; each wave runs
-        prefill + decode through one compiled step function."""
-        queue = list(enumerate(prompts))
-        outputs: dict[int, List[int]] = {i: [] for i in range(len(prompts))}
-        key = jax.random.key(self.cfg.seed)
-
-        with use_rule(self.rule):
-            while queue:
-                wave = [queue.pop(0) for _ in
-                        range(min(self.cfg.batch_slots, len(queue)))]
-                key = self._run_wave(wave, outputs, max_new_tokens, key)
-        return [outputs[i] for i in range(len(prompts))]

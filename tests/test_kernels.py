@@ -52,7 +52,8 @@ def test_quant_matmul_full_bits_is_plain_matmul():
 
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("window", [None, 48])
-@pytest.mark.parametrize("tq,tk", [(64, 64), (64, 128), (33, 77)])
+@pytest.mark.parametrize("tq,tk", [(64, 64), (64, 128), (33, 77),
+                                   (64, 200), (200, 200)])
 def test_flash_attention_kernel(causal, window, tq, tk):
     if tq > tk:
         pytest.skip("queries longer than keys undefined here")
@@ -65,6 +66,34 @@ def test_flash_attention_kernel(causal, window, tq, tk):
     want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("t", [64, 200])
+def test_flash_attention_ragged_kv_len(causal, t):
+    """Per-row valid-KV prefix mask (continuous batching's ragged slots):
+    kernel == oracle, and each row == dense attention over only its own
+    prefix."""
+    b, hq, hkv, d = 3, 4, 2, 32
+    q = jnp.asarray(RNG.standard_normal((b, hq, t, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, t, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, t, d)), jnp.float32)
+    kv_len = jnp.asarray([64, 40, 17], jnp.int32)
+    if t == 200:   # non-multiple of block_k: exercises the left-pad mask
+        kv_len = jnp.asarray([200, 150, 90], jnp.int32)
+    got = ops.flash_attention(q, k, v, causal=causal, kv_len=kv_len,
+                              backend="interpret")
+    want = ref.flash_attention_ref(q, k, v, causal=causal, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+    # row b attending over its kv_len[b]-prefix == unmasked attention on
+    # the sliced prefix (queries restricted to the same prefix)
+    for row, n in enumerate(np.asarray(kv_len)):
+        sl = ref.flash_attention_ref(q[row:row + 1, :, :n],
+                                     k[row:row + 1, :, :n],
+                                     v[row:row + 1, :, :n], causal=causal)
+        np.testing.assert_allclose(np.asarray(got[row:row + 1, :, :n]),
+                                   np.asarray(sl), atol=3e-5, rtol=1e-4)
 
 
 def test_flash_attention_fused_truncation():
