@@ -6,6 +6,13 @@ Reads the ``BENCH_*.json`` files emitted by ``benchmarks.run`` and fails
 * explorer: batched dispatch counts must stay well under the serial
   path's (the population batching exists to collapse them), and the
   batched/serial Pareto fronts must stay identical;
+* explorer-dynamic: a dynamic-objective exploration must issue at most
+  ``MAX_DYNAMIC_EXTRA_DISPATCHES`` more compiled dispatches than the
+  static objective at identical budget (the bit-census accumulators ride
+  the existing vmapped dispatch), the device-folded dynamic energies
+  must match the host-side ``dynamic_fpu_energy`` reference to
+  ``DYNAMIC_HOST_DEVICE_RTOL``, and dynamic energy must never exceed
+  static for identical genomes;
 * serve: the continuous engine must take <= 1/1.5 the compiled decode
   steps of the wave engine on the skewed workload, with identical greedy
   completions. Step time is constant at fixed batch shape, so the steps
@@ -26,6 +33,8 @@ import sys
 
 MIN_SERVE_SPEEDUP = 1.5
 MAX_DISPATCH_RATIO = 0.25          # batched <= serial / 4
+MAX_DYNAMIC_EXTRA_DISPATCHES = 2   # dynamic objective <= static + 2
+DYNAMIC_HOST_DEVICE_RTOL = 1e-6
 
 
 def _rows(path: str) -> dict:
@@ -55,6 +64,27 @@ def check_explorer(path: str) -> list:
     return errs
 
 
+def check_explorer_dynamic(path: str) -> list:
+    rows = _rows(path)
+    errs = []
+    disp = rows["explorer_dynamic_dispatches"]
+    dyn = int(_field(disp, "dynamic"))
+    stat = int(_field(disp, "static"))
+    if dyn > stat + MAX_DYNAMIC_EXTRA_DISPATCHES:
+        errs.append(f"dynamic-objective dispatch regression: dynamic={dyn} "
+                    f"vs static={stat} (allowed +"
+                    f"{MAX_DYNAMIC_EXTRA_DISPATCHES})")
+    rel = float(_field(rows["explorer_dynamic_host_device"],
+                       "max_rel_diff"))
+    if not rel <= DYNAMIC_HOST_DEVICE_RTOL:
+        errs.append(f"dynamic energy host/device divergence: max rel diff "
+                    f"{rel:.3e} > {DYNAMIC_HOST_DEVICE_RTOL}")
+    if _field(rows["explorer_dynamic_sanity"], "dyn_le_static") != "True":
+        errs.append("dynamic energy exceeded static for an identical "
+                    "genome — the census upper bound is broken")
+    return errs
+
+
 def check_serve(path: str) -> list:
     rows = _rows(path)
     errs = []
@@ -77,6 +107,7 @@ def main() -> None:
     args = ap.parse_args()
 
     checks = [("BENCH_explorer_pop.json", check_explorer),
+              ("BENCH_explorer-dynamic.json", check_explorer_dynamic),
               ("BENCH_serve.json", check_serve)]
     errs = []
     for fname, fn in checks:
@@ -91,8 +122,8 @@ def main() -> None:
         for e in errs:
             print(f"[check_smoke] FAIL: {e}", file=sys.stderr)
         raise SystemExit(1)
-    print("[check_smoke] OK: dispatch counts, Pareto parity and serve "
-          "speedup within bounds")
+    print("[check_smoke] OK: dispatch counts, Pareto parity, dynamic-"
+          "energy host/device agreement and serve speedup within bounds")
 
 
 if __name__ == "__main__":

@@ -76,6 +76,74 @@ def explorer_population(full: bool = False) -> List[Tuple[str, float, str]]:
     ]
 
 
+def explorer_dynamic(full: bool = False) -> List[Tuple[str, float, str]]:
+    """Dynamic (trailing-zero) energy objective vs the static path.
+
+    Gated properties (benchmarks.check_smoke):
+
+    * a dynamic-objective exploration issues at most 2 more compiled
+      dispatches than the static objective at identical budget — the
+      bit-census accumulators ride the existing vmapped dispatch;
+    * per-(genome, input) device-folded dynamic FPU energy matches the
+      host-side ``capture_bit_census`` + ``dynamic_fpu_energy`` reference
+      to 1e-6 relative;
+    * dynamic energy never exceeds static for identical genomes.
+    """
+    from repro.apps import get_app, make_task
+    from repro.core import explore
+    from repro.core.estimators import host_device_parity, make_estimator
+    from repro.core.explorer import PopulationEvaluator, sites_for_family
+    from repro.core.profiler import profile
+
+    pop_size = 40
+    n_gen = 9 if full else 3
+    max_evals = 400 if full else 80
+
+    task = make_task(get_app("blackscholes"), n_train=3, n_test=2)
+    prof = profile(task.fn, *task.train_inputs[0])
+    sites = sites_for_family(prof, "cip", 4)
+    exact = [jax.tree.map(np.asarray, task.fn(*inp))
+             for inp in task.train_inputs]
+
+    # host/device dynamic-energy agreement on a probe batch (the same
+    # shared contract tests/test_energy_dynamic.py asserts)
+    ev = PopulationEvaluator(task, "cip", sites, pop_hint=8,
+                             collect_bits=True)
+    rng = np.random.default_rng(0)
+    genomes = [tuple(int(v) for v in rng.integers(1, 25, len(sites)))
+               for _ in range(8)]
+    ev.errors_matrix(genomes, task.train_inputs, exact)
+    est = make_estimator("dynamic", prof, "cip", sites, target=task.target)
+    worst = host_device_parity(task, "cip", sites, est, ev, genomes,
+                               task.train_inputs)
+
+    stat = make_estimator("static", prof, "cip", sites, target=task.target)
+    sf, _ = stat.population(genomes)
+    df, _ = est.population(genomes, evaluator=ev)
+    dyn_le_static = bool(np.all(df <= sf * (1 + 1e-9)))
+
+    # full explorations at equal budget: the dispatch-count delta
+    t0 = time.perf_counter()
+    rep_d = explore(task, family="cip", n_sites=4, pop_size=pop_size,
+                    n_gen=n_gen, max_evals=max_evals, seed=0,
+                    energy="dynamic", robustness=False)
+    us_dyn = (time.perf_counter() - t0) * 1e6
+    rep_s = explore(task, family="cip", n_sites=4, pop_size=pop_size,
+                    n_gen=n_gen, max_evals=max_evals, seed=0,
+                    energy="static", robustness=False)
+
+    return [
+        ("explorer_dynamic_run", us_dyn,
+         f"n_evals={rep_d.n_evals};estimator={rep_d.energy_estimator}"),
+        ("explorer_dynamic_dispatches", 0.0,
+         f"dynamic={rep_d.n_dispatches};static={rep_s.n_dispatches}"),
+        ("explorer_dynamic_host_device", 0.0,
+         f"max_rel_diff={worst:.3e}"),
+        ("explorer_dynamic_sanity", 0.0,
+         f"dyn_le_static={dyn_le_static}"),
+    ]
+
+
 if __name__ == "__main__":
-    for name, us, derived in explorer_population():
+    for name, us, derived in explorer_population() + explorer_dynamic():
         print(f"{name},{us:.0f},{derived}")

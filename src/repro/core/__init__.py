@@ -14,12 +14,18 @@ from repro.core.quantize import (
 )
 from repro.core.interpreter import (
     neat_transform, neat_transform_dynamic, neat_transform_population,
+    capture_bit_census, BitChannel, BitsRecord, BitCensusCapture,
 )
 from repro.core.profiler import profile, Profile
 from repro.core.energy import (
     EnergyReport, static_energy, census_energy, dynamic_fpu_energy,
     EnergyCoeffs, energy_coeffs, population_energy,
     EPI_PJ, MEM_PJ_PER_BYTE,
+)
+from repro.core.estimators import (
+    EnergyEstimator, StaticEnergyEstimator, DynamicEnergyEstimator,
+    make_estimator, register_estimator, channel_scales, fold_bit_counts,
+    host_device_parity,
 )
 from repro.core.nsga2 import nsga2, NSGA2, NSGA2Result, Evaluated, pareto_front
 from repro.core.pareto import (

@@ -149,9 +149,16 @@ class EnergyCoeffs:
 
 
 def energy_coeffs(prof: Profile, family: str, sites: Sequence[str], *,
-                  target: str = "single") -> EnergyCoeffs:
+                  target: str = "single",
+                  op_classes: Optional[frozenset] = None) -> EnergyCoeffs:
     """Build the coefficient tensor: one pass over the profile census,
-    amortized across every genome the search will ever evaluate."""
+    amortized across every genome the search will ever evaluate.
+
+    ``op_classes`` restricts the FPU terms to the given op classes (an
+    FPU-only residual view — memory terms stay zero); the dynamic
+    estimator uses it to keep the static genome-scaled charge for
+    governed FLOPs the interpreter does not intercept (transcendentals
+    unless ``include_transcendental``)."""
     site_idx = {s: i for i, s in enumerate(sites)}
     n_sites = len(sites)
     fulls = sorted({_full_bits(dt) for st in prof.scopes.values()
@@ -167,6 +174,8 @@ def energy_coeffs(prof: Profile, family: str, sites: Sequence[str], *,
         stack = tuple(path.split("/")) if path else ()
         s_i = site_index_for_stack(family, site_idx, stack)
         for op_class, flops in st.by_op.items():
+            if op_classes is not None and op_class not in op_classes:
+                continue
             for dtype in st.by_dtype:
                 share = st.by_dtype[dtype] / max(st.flops, 1)
                 n = flops * share
@@ -177,6 +186,8 @@ def energy_coeffs(prof: Profile, family: str, sites: Sequence[str], *,
                     fpu_lin[s_i, d_idx[full]] += n * epi / full
                 else:
                     fpu_const += n * epi
+        if op_classes is not None:   # FPU-only residual view
+            continue
         wsum = sum(st.by_dtype.values())
         if not wsum:
             mem_const += st.bytes * MEM_PJ_PER_BYTE
@@ -228,17 +239,34 @@ def census_energy(census: Mapping[Tuple[str, str, str], int],
     return EnergyReport(fpu_pj=fpu, mem_pj=0.0)
 
 
-def dynamic_fpu_energy(values: Mapping[str, jnp.ndarray],
-                       op_class: str = "mul") -> float:
+def dynamic_fpu_energy(values, op_class: str = "mul") -> float:
     """Paper-faithful dynamic estimator: count manipulated mantissa bits of
-    concrete tensor values (trailing-zero counting, §III-C) and charge
-    EPI x bits/full per element. `values` maps scope path -> tensor."""
+    concrete values (trailing-zero counting, §III-C) and charge
+    EPI x bits/full per scalar FLOP.
+
+    Two input forms:
+
+    * ``Mapping[str, tensor]`` (scope path -> tensor): the historical
+      per-tensor form — every element counts as one FLOP of ``op_class``.
+    * an iterable of census records (``interpreter.BitsRecord`` /
+      ``capture_bit_census`` output): each record carries its own op
+      class, dtype, pre-summed bit count and scalar-FLOPs-per-element
+      weight. This is the host-side reference the device-resident
+      dynamic estimator is validated against (f64 reduction of exact
+      integer counts).
+    """
+    if isinstance(values, Mapping):
+        total = 0.0
+        for path, x in values.items():
+            if not jnp.issubdtype(x.dtype, jnp.floating):
+                continue
+            bits = manipulated_bits(x)
+            full = float_spec(x.dtype).mantissa_bits
+            dtype = str(jnp.dtype(x.dtype))
+            total += float(jnp.sum(bits) / full) * _epi(op_class, dtype)
+        return total
     total = 0.0
-    for path, x in values.items():
-        if not jnp.issubdtype(x.dtype, jnp.floating):
-            continue
-        bits = manipulated_bits(x)
-        full = float_spec(x.dtype).mantissa_bits
-        dtype = str(jnp.dtype(x.dtype))
-        total += float(jnp.sum(bits) / full) * _epi(op_class, dtype)
+    for rec in values:
+        total += (_epi(rec.op_class, rec.dtype) * rec.weight
+                  * float(rec.count) / _full_bits(rec.dtype))
     return total

@@ -1,0 +1,247 @@
+"""Pluggable energy estimators — the explorer's energy objective.
+
+The explorer no longer hardcodes the coefficient-tensor static model:
+an :class:`EnergyEstimator` turns a generation's genome batch into the
+``(P,)`` FPU/memory energy vectors NSGA-II ranks on. Two built-ins,
+matching the paper's §III-C estimators:
+
+* ``"static"`` — the PR-1 coefficient tensor: energy is affine in the
+  clamped per-site mantissa widths, so a population is one einsum.
+  Input-independent.
+* ``"dynamic"`` — the paper's trailing-zero estimator, device-resident:
+  the dynamic-bits interpreter threads one exact int32 bit-census
+  counter per governed op through the evaluator's existing vmapped
+  dispatch (``kernels.bit_census`` — the fused Pallas reduction on TPU),
+  and this estimator folds the counts into pJ on the host in float64.
+  Per-FLOP charge: ``EPI(op, dtype) * manipulated_bits / full`` of the
+  *quantized result*, with a dot's 2·M·N·K scalar madds sharing its
+  M·N-element census (``BitChannel.weight``) — so dynamic energy is
+  bounded above by the static model term by term, and the gap is the
+  input-dependent savings the paper's data-dominated apps exhibit.
+  FLOPs no genome site governs keep their static charge
+  (``coeffs.fpu_const``); memory energy stays the static storage model.
+
+Custom estimators register via :func:`register_estimator`; anything
+honouring the :class:`EnergyEstimator` protocol plugs into
+``explore(..., energy=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.energy import (EnergyCoeffs, EnergyReport, _epi, _full_bits,
+                               energy_coeffs, population_energy)
+from repro.core.interpreter import BitChannel
+from repro.core.profiler import Profile
+
+
+@runtime_checkable
+class EnergyEstimator(Protocol):
+    """What the explorer needs from an energy objective."""
+
+    #: registry / report name
+    name: str
+    #: True when the evaluator must thread bit-census accumulators
+    #: through its dispatches (``PopulationEvaluator(collect_bits=True)``)
+    needs_bit_census: bool
+
+    def baseline(self) -> EnergyReport:
+        """Identity-rule energy used to normalize the objectives."""
+        ...
+
+    def population(self, bits_matrix, *, evaluator=None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """(fpu_pj, mem_pj), each ``(P,)``, for one genome batch.
+
+        ``evaluator`` is the :class:`~repro.core.explorer.PopulationEvaluator`
+        whose most recent dispatch evaluated exactly this batch — dynamic
+        estimators read its bit-census accumulators from it.
+        """
+        ...
+
+
+def channel_scales(channels: Sequence[BitChannel]) -> np.ndarray:
+    """pJ per counted bit for each census channel, float64:
+    ``EPI(op, dtype) * weight / full_mantissa_bits``."""
+    return np.asarray([_epi(ch.op_class, ch.dtype) * ch.weight
+                       / _full_bits(ch.dtype) for ch in channels], float)
+
+
+def fold_bit_counts(channels: Sequence[BitChannel], counts,
+                    n_sites: int) -> np.ndarray:
+    """Fold ``(..., n_channels)`` exact counts into ``(..., n_sites)``
+    per-site dynamic FPU pJ (float64 host reduction)."""
+    counts = np.asarray(counts, np.float64)
+    out = np.zeros(counts.shape[:-1] + (n_sites,))
+    scales = channel_scales(channels)
+    for c, ch in enumerate(channels):
+        out[..., ch.site] += counts[..., c] * scales[c]
+    return out
+
+
+@dataclasses.dataclass
+class StaticEnergyEstimator:
+    """PR-1 coefficient-tensor estimator: one einsum per generation."""
+    coeffs: EnergyCoeffs
+    name: str = "static"
+    needs_bit_census: bool = False
+
+    def baseline(self) -> EnergyReport:
+        return self.coeffs.baseline()
+
+    def population(self, bits_matrix, *, evaluator=None):
+        return population_energy(self.coeffs, bits_matrix)
+
+
+@dataclasses.dataclass
+class DynamicEnergyEstimator:
+    """Trailing-zero-census estimator, population-batched on device.
+
+    FPU energy is the mean over the evaluated inputs (energy is additive
+    per run, so the mean is the per-run expectation; the error objective
+    keeps the paper's median). Memory energy and ungoverned FLOPs reuse
+    the static coefficients, and governed FLOPs of op classes the
+    interpreter does not intercept (transcendentals unless
+    ``include_transcendental``) keep their static genome-scaled charge
+    via the FPU-only ``resid`` coefficient view — they run and are
+    modeled at the genome's width, they just have no census channel.
+    """
+    coeffs: EnergyCoeffs
+    resid: Optional[EnergyCoeffs] = None
+    name: str = "dynamic"
+    needs_bit_census: bool = True
+
+    def baseline(self) -> EnergyReport:
+        # normalize against the static identity baseline so static and
+        # dynamic fronts share one energy axis (dynamic <= static)
+        return self.coeffs.baseline()
+
+    def governed_residual(self, bits_matrix) -> np.ndarray:
+        """(P,) static genome-scaled FPU pJ of governed-but-uncensused op
+        classes (the einsum part only — their ungoverned share is already
+        in ``coeffs.fpu_const``)."""
+        if self.resid is None:
+            return np.zeros(len(bits_matrix))
+        fpu, _ = population_energy(self.resid, bits_matrix)
+        return fpu - self.resid.fpu_const
+
+    def fpu_matrix(self, evaluator, bits_matrix) -> np.ndarray:
+        """Per-(genome, input) dynamic FPU pJ (P, I) from the evaluator's
+        most recent dispatch: folded census + ungoverned static constant
+        + the genome-scaled uncensused residual. Each input folds with
+        its own signature's channel scales — heterogeneous-shape input
+        lists carry distinct channels per input."""
+        counts_list = evaluator.last_bit_counts_list
+        if counts_list is None:
+            raise ValueError(
+                "dynamic energy estimator needs the bit-census accumulators "
+                "of the evaluator's most recent dispatch — construct the "
+                "PopulationEvaluator with collect_bits=True and call "
+                "errors_matrix first")
+        cols = []
+        for i, (counts, channels) in enumerate(
+                zip(counts_list, evaluator.bit_channels_list)):
+            scales = channel_scales(channels)
+            if counts.shape[-1] != len(scales):
+                raise ValueError(f"input {i}: accumulator width "
+                                 f"{counts.shape[-1]} != {len(scales)} "
+                                 f"census channels")
+            if counts.shape[0] != len(bits_matrix):
+                raise ValueError(f"stale accumulators: {counts.shape[0]} "
+                                 f"genomes in last dispatch vs "
+                                 f"{len(bits_matrix)} asked")
+            cols.append(counts.astype(np.float64) @ scales)
+        census = np.stack(cols, axis=1)
+        return (self.coeffs.fpu_const + census
+                + self.governed_residual(bits_matrix)[:, None])
+
+    def population(self, bits_matrix, *, evaluator=None):
+        if len(bits_matrix) == 0:
+            return np.zeros(0), np.zeros(0)
+        if evaluator is None:
+            raise ValueError("dynamic energy estimator requires the "
+                             "evaluator that ran this batch")
+        fpu = self.fpu_matrix(evaluator, bits_matrix)
+        _, mem = population_energy(self.coeffs, bits_matrix)
+        return fpu.mean(axis=1), mem
+
+
+_ESTIMATORS: Dict[str, Callable[[EnergyCoeffs], EnergyEstimator]] = {
+    "static": StaticEnergyEstimator,
+    "dynamic": DynamicEnergyEstimator,
+}
+
+
+def register_estimator(name: str,
+                       factory: Callable[[EnergyCoeffs], EnergyEstimator]):
+    """Register a custom estimator factory (``coeffs -> estimator``) under
+    ``name`` for ``explore(..., energy=name)``."""
+    _ESTIMATORS[name] = factory
+    return factory
+
+
+def make_estimator(kind, prof: Optional[Profile] = None,
+                   family: str = "cip", sites: Sequence[str] = (), *,
+                   target: str = "single",
+                   include_transcendental: bool = False) -> EnergyEstimator:
+    """Resolve ``explore``'s ``energy=`` argument: a registered name gets
+    its coefficient tensor built from the profile; a ready-made estimator
+    instance passes through. Census-based estimators (``needs_bit_census``
+    with a ``resid`` attribute) additionally receive the FPU-only
+    residual view of the op classes the interpreter will not intercept
+    under ``include_transcendental``."""
+    if not isinstance(kind, str):
+        return kind
+    try:
+        factory = _ESTIMATORS[kind]
+    except KeyError:
+        raise ValueError(f"unknown energy estimator {kind!r}; registered: "
+                         f"{sorted(_ESTIMATORS)}") from None
+    if prof is None:
+        raise ValueError("building a named estimator requires a Profile")
+    est = factory(energy_coeffs(prof, family, sites, target=target))
+    if (getattr(est, "needs_bit_census", False)
+            and hasattr(est, "resid") and est.resid is None
+            and not include_transcendental):
+        est.resid = energy_coeffs(prof, family, sites, target=target,
+                                  op_classes=frozenset({"transcendental"}))
+    if getattr(est, "name", None) != kind:
+        try:
+            est.name = kind   # reports carry the registry name
+        except AttributeError:   # frozen custom estimator keeps its own
+            pass
+    return est
+
+
+def host_device_parity(task, family: str, sites: Sequence[str],
+                       estimator, evaluator, genomes, inputs, *,
+                       include_transcendental: bool = False) -> float:
+    """Worst relative difference between the device-folded dynamic FPU
+    energies of the evaluator's most recent dispatch and the independent
+    eager host reference (``capture_bit_census`` + ``dynamic_fpu_energy``
+    + the estimator's static terms), across (genomes × inputs). Shared by
+    tests/test_energy_dynamic.py and the CI smoke gate so both check one
+    contract."""
+    from repro.core.energy import dynamic_fpu_energy
+    from repro.core.interpreter import capture_bit_census
+    from repro.core.placement import rule_from_genome
+
+    dev = estimator.fpu_matrix(evaluator, genomes)
+    resid = estimator.governed_residual(genomes)
+    worst = 0.0
+    for p, g in enumerate(genomes):
+        rule = rule_from_genome(family, sites, g, target=task.target,
+                                mode=task.mode)
+        h = capture_bit_census(
+            task.fn, rule, family, sites, target=task.target,
+            include_transcendental=include_transcendental)
+        for i, inp in enumerate(inputs):
+            _, records = h(*inp)
+            host = (dynamic_fpu_energy(records)
+                    + estimator.coeffs.fpu_const + resid[p])
+            worst = max(worst,
+                        abs(host - dev[p, i]) / max(abs(host), 1e-30))
+    return worst

@@ -15,9 +15,13 @@ The search is **population-batched**: NSGA-II is driven through its
 ask/tell API and every generation's genome batch is evaluated in ONE
 compiled call — ``jax.vmap`` over the bits axis (optionally sharded
 across ``jax.devices()`` via ``launch/mesh.make_population_mesh``), with
-the train inputs stacked and vmapped as a second batch axis. Energy comes
-from the precomputed coefficient tensor (``energy.population_energy``),
-one einsum per batch. ``explore(..., batched=False)`` keeps the historical
+the train inputs stacked and vmapped as a second batch axis. The energy
+objective is a pluggable :class:`~repro.core.estimators.EnergyEstimator`
+(``energy="static" | "dynamic"``): static energy is the precomputed
+coefficient tensor (one einsum per batch); dynamic energy rides the same
+dispatch as exact per-genome bit-census accumulators threaded through
+the interpreter, so the trailing-zero estimator costs zero extra
+dispatches. ``explore(..., batched=False)`` keeps the historical
 one-genome-at-a-time path for benchmarking and parity tests.
 """
 from __future__ import annotations
@@ -30,9 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
-from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import energy as energy_mod
+from repro.core.estimators import StaticEnergyEstimator, make_estimator
 from repro.core.interpreter import (neat_transform_dynamic,
                                     neat_transform_population)
 from repro.core.nsga2 import NSGA2, NSGA2Result
@@ -40,7 +44,7 @@ from repro.core.pareto import (TradeoffPoint, correlation, lower_convex_hull,
                                pareto_points, savings_at_threshold)
 from repro.core.placement import default_categorizer, rule_from_genome
 from repro.core.profiler import Profile, profile
-from repro.launch.mesh import make_population_mesh
+from repro.launch.mesh import make_population_mesh, population_sharding
 
 
 def default_error_fn(approx, exact) -> float:
@@ -117,6 +121,7 @@ class ExplorationReport:
     robustness_energy_r: float = 1.0
     n_dispatches: int = 0                # compiled evaluator calls issued
     batched: bool = True
+    energy_estimator: str = "static"     # objective the search ranked on
 
     def savings(self, thr: float) -> float:
         return savings_at_threshold(self.points, thr)
@@ -170,14 +175,29 @@ class PopulationEvaluator:
 
     def __init__(self, task: ExplorationTask, family: str,
                  sites: Sequence[str], *, include_transcendental: bool = False,
-                 pop_hint: int = 40, shard: bool | str = "auto"):
+                 pop_hint: int = 40, shard: bool | str = "auto",
+                 collect_bits: bool = False):
         self.task = task
         self.error_fn = task.error_fn
+        # collect_bits: thread exact per-genome bit-census accumulators
+        # (the dynamic energy estimator's input) through every dispatch
+        self.collect_bits = collect_bits
         kw = dict(target=task.target, mode=task.mode,
-                  include_transcendental=include_transcendental)
-        self.g = jax.jit(neat_transform_dynamic(task.fn, family, sites, **kw))
+                  include_transcendental=include_transcendental,
+                  collect_bits=collect_bits)
+        self._g_raw = neat_transform_dynamic(task.fn, family, sites, **kw)
+        self.g = jax.jit(self._g_raw)
         pop = neat_transform_population(task.fn, family, sites, **kw)
+        self._pop_raw = pop
         self._pop_call = jax.jit(pop)
+        # census stash of the most recent dispatch, one entry per input:
+        # channel metadata is per input *signature* (shapes enter the
+        # weight = flops/numel scales), so heterogeneous-shape input
+        # lists carry distinct channels per input
+        self.last_bit_counts_list = None       # per input: (P, C_i) int64
+        self.last_serial_bit_counts = None     # per input: (C_i,) int64
+        self.last_serial_bit_channels = None   # per input: channel tuple
+        self.bit_channels_list = None          # per input: channel tuple
 
         def multi(bits, *stacked):       # extra vmap over the input axis
             return jax.vmap(lambda *inp: pop(bits, *inp))(*stacked)
@@ -225,12 +245,26 @@ class PopulationEvaluator:
             bits = np.concatenate([bits, np.repeat(bits[:1], size - n, 0)])
         arr = jnp.asarray(bits)
         if self.mesh is not None:
-            arr = jax.device_put(
-                arr, NamedSharding(self.mesh, PartitionSpec("pop")))
+            arr = jax.device_put(arr, population_sharding(self.mesh))
         return arr
 
     def _subtree(self, host, index) -> object:
         return jax.tree.map(lambda x: x[index], host)
+
+    @property
+    def bit_channels(self) -> tuple:
+        """Channels of the last dispatch's first input — a convenience
+        for homogeneous input lists, where every input shares them."""
+        return self.bit_channels_list[0] if self.bit_channels_list else ()
+
+    @property
+    def last_bit_counts(self):
+        """(P, I, C) stacked counts of the last dispatch — valid when the
+        inputs share one census signature (homogeneous shapes, the common
+        case); None before any collecting dispatch."""
+        if self.last_bit_counts_list is None:
+            return None
+        return np.stack(self.last_bit_counts_list, axis=1)
 
     def _stacked_exact(self, exact: Sequence):
         """Device-resident leaf-wise stack of the exact baselines (axis 0
@@ -263,6 +297,10 @@ class PopulationEvaluator:
         the scalar matrix crosses the host boundary."""
         n = len(genomes)
         if n == 0:
+            if self.collect_bits:
+                self.last_bit_counts_list = [np.zeros((0, 0), np.int64)
+                                             for _ in inputs]
+                self.bit_channels_list = [() for _ in inputs]
             return np.zeros((0, len(inputs)))
         bits = self._padded_bits(genomes)
         out = np.empty((n, len(inputs)))
@@ -273,6 +311,14 @@ class PopulationEvaluator:
         if stacked is not None:
             outs = self._multi_call(bits, *stacked)   # leaves (I, P, ...)
             self.n_dispatches += 1
+            if self.collect_bits:                     # counts (I, Ppad, C)
+                outs, counts = outs
+                # stacked inputs share one signature: inputs[0]'s
+                chans = self._pop_raw.inner.bit_channels_for(*inputs[0])
+                cc = np.asarray(counts, np.int64)[:, :n]
+                self.bit_channels_list = [chans] * len(inputs)
+                self.last_bit_counts_list = [cc[i]
+                                             for i in range(len(inputs))]
             if self._on_device_err:
                 with enable_x64():
                     mat = self._err_multi(outs, self._stacked_exact(exact))
@@ -284,9 +330,16 @@ class PopulationEvaluator:
                         out[p, i] = self.error_fn(
                             self._subtree(host, (i, p)), exact[i])
         else:
+            count_cols, chan_cols = [], []
             for i, inp in enumerate(inputs):
                 outs = self._pop_call(bits, *inp)     # leaves (P, ...)
                 self.n_dispatches += 1
+                if self.collect_bits:                 # counts (Ppad, C_i)
+                    outs, counts = outs
+                    count_cols.append(np.asarray(counts, np.int64)[:n])
+                    # per-input signature: channels can differ per input
+                    chan_cols.append(
+                        self._pop_raw.inner.bit_channels_for(*inp))
                 if self._on_device_err:
                     with enable_x64():
                         col = self._err_single(outs,
@@ -297,6 +350,9 @@ class PopulationEvaluator:
                     for p in range(n):
                         out[p, i] = self.error_fn(self._subtree(host, p),
                                                   exact[i])
+            if self.collect_bits:
+                self.bit_channels_list = chan_cols
+                self.last_bit_counts_list = count_cols
         return out
 
     # -- historical serial path (benchmarks / parity tests) ------------------
@@ -304,11 +360,42 @@ class PopulationEvaluator:
                       exact: Sequence) -> List[float]:
         bits = jnp.asarray([int(v) for v in genome], jnp.int32)
         errs = []
+        count_rows, chan_rows = [], []
         for inp, ex in zip(inputs, exact):
             out = self.g(bits, *inp)
             self.n_dispatches += 1
+            if self.collect_bits:
+                out, counts = out
+                count_rows.append(np.asarray(counts, np.int64))
+                chan_rows.append(self._g_raw.bit_channels_for(*inp))
             errs.append(self.error_fn(jax.tree.map(np.asarray, out), ex))
+        if self.collect_bits:
+            self.last_serial_bit_counts = count_rows
+            self.last_serial_bit_channels = chan_rows
         return errs
+
+
+def _serial_eval(ev: PopulationEvaluator, genomes, inputs, exact,
+                 collect_census: bool) -> np.ndarray:
+    """Per-genome serial error evaluation; when the estimator needs the
+    bit census, stack each genome's per-input counts into the evaluator's
+    ``last_bit_counts`` (the same layout the batched dispatch produces)."""
+    rows, pcounts = [], []
+    for g in genomes:
+        rows.append(ev.errors_serial(g, inputs, exact))
+        if collect_census:
+            pcounts.append(ev.last_serial_bit_counts)
+    if collect_census:
+        if pcounts:
+            ev.last_bit_counts_list = [
+                np.stack([pc[i] for pc in pcounts])      # (P, C_i)
+                for i in range(len(inputs))]
+            ev.bit_channels_list = list(ev.last_serial_bit_channels)
+        else:
+            ev.last_bit_counts_list = [np.zeros((0, 0), np.int64)
+                                       for _ in inputs]
+            ev.bit_channels_list = [() for _ in inputs]
+    return np.asarray(rows) if rows else np.zeros((0, len(inputs)))
 
 
 def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
@@ -316,7 +403,13 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
             seed: int = 0, robustness: bool = True,
             include_transcendental: bool = False,
             batched: bool = True,
-            shard: bool | str = "auto") -> ExplorationReport:
+            shard: bool | str = "auto",
+            energy="static") -> ExplorationReport:
+    """``energy`` selects the energy objective: ``"static"`` (coefficient
+    tensor, input-independent), ``"dynamic"`` (trailing-zero bit census of
+    the actual values, threaded through the same vmapped dispatch — zero
+    extra dispatches per generation), a registered estimator name, or a
+    ready-made :class:`~repro.core.estimators.EnergyEstimator`."""
     # 1. profile (paper step 1) -- census on the first training input
     prof = profile(task.fn, *task.train_inputs[0])
     sites = sites_for_family(prof, family, n_sites)
@@ -325,16 +418,20 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
     full_bits = 53 if task.target == "double" else (
         8 if task.target == "half" else 24)
 
-    # 2. exact baselines + energy baseline + coefficient tensor
+    # 2. exact baselines + pluggable energy estimator (shared static
+    #    identity baseline, so static/dynamic fronts share one axis)
     exact = [jax.tree.map(np.asarray, task.fn(*inp))
              for inp in task.train_inputs]
-    base = energy_mod.static_energy(prof, None)
-    coeffs = energy_mod.energy_coeffs(prof, family, sites, target=task.target)
+    estimator = make_estimator(energy, prof, family, sites,
+                               target=task.target,
+                               include_transcendental=include_transcendental)
+    base = estimator.baseline()
 
     # 3. one compiled population evaluator
     ev = PopulationEvaluator(
         task, family, sites, include_transcendental=include_transcendental,
-        pop_hint=pop_size, shard=shard if batched else False)
+        pop_hint=pop_size, shard=shard if batched else False,
+        collect_bits=estimator.needs_bit_census)
 
     # Seed the population with the "diagonal" (uniform-bits) genomes: the
     # per-function families then strictly contain the whole-program
@@ -355,13 +452,16 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
         batch = opt.ask()
         if batched:
             err_mat = ev.errors_matrix(batch, task.train_inputs, exact)
-            fpu, mem = energy_mod.population_energy(coeffs, batch)
+            fpu, mem = estimator.population(batch, evaluator=ev)
             e_fpu = fpu / max(base.fpu_pj, 1e-30)
             e_mem = mem / max(base.mem_pj, 1e-30)
-        else:                      # historical per-genome path
-            err_mat = np.asarray(
-                [ev.errors_serial(g, task.train_inputs, exact)
-                 for g in batch])
+        elif type(estimator) is StaticEnergyEstimator:
+            # historical per-genome path for the canonical static
+            # estimator only (subclasses take the protocol branch):
+            # scalar static_energy is the parity reference the batched
+            # coefficient tensor is gated on
+            err_mat = _serial_eval(ev, batch, task.train_inputs, exact,
+                                   False)
             reps = [energy_mod.static_energy(
                         prof, rule_from_genome(family, sites, g,
                                                target=task.target,
@@ -371,6 +471,12 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
                 / max(base.fpu_pj, 1e-30)
             e_mem = np.asarray([r.mem_pj for r in reps]) \
                 / max(base.mem_pj, 1e-30)
+        else:                      # serial dynamic / custom estimators
+            err_mat = _serial_eval(ev, batch, task.train_inputs, exact,
+                                   estimator.needs_bit_census)
+            fpu, mem = estimator.population(batch, evaluator=ev)
+            e_fpu = fpu / max(base.fpu_pj, 1e-30)
+            e_mem = mem / max(base.mem_pj, 1e-30)
         objs = []
         for i, g in enumerate(batch):
             err = float(np.median(err_mat[i]))
@@ -391,7 +497,8 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
         task=task.name, family=family, sites=sites, points=points,
         hull=hull, n_evals=res.n_evals,
         baseline_fpu_pj=base.fpu_pj, baseline_mem_pj=base.mem_pj,
-        flop_coverage=coverage, batched=batched)
+        flop_coverage=coverage, batched=batched,
+        energy_estimator=estimator.name)
 
     # 5. robustness on unseen inputs (paper §V-G) — the frontier re-check
     #    is itself one batched call over (frontier genomes x test inputs)
@@ -403,16 +510,22 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
         if batched:
             mat = ev.errors_matrix(genomes, task.test_inputs, test_exact)
         else:
-            mat = np.asarray([ev.errors_serial(g, task.test_inputs,
-                                               test_exact)
-                              for g in genomes])
+            mat = _serial_eval(ev, genomes, task.test_inputs, test_exact,
+                               estimator.needs_bit_census)
+        # dynamic energy is input-dependent: re-estimate the frontier's
+        # energy on the unseen inputs from the same dispatch's census
+        te_energy = None
+        if estimator.needs_bit_census and genomes:
+            te_fpu = estimator.fpu_matrix(ev, genomes).mean(axis=1)
+            te_energy = te_fpu / max(base.fpu_pj, 1e-30)
         tr_err, te_err, tr_e, te_e = [], [], [], []
-        for p, row in zip(frontier, mat):
+        for j, (p, row) in enumerate(zip(frontier, mat)):
             errs = [e if math.isfinite(e) else 1e9 for e in row]
             tr_err.append(p.error)
             te_err.append(float(np.median(errs)))
             tr_e.append(p.energy)
-            te_e.append(p.energy)   # static energy is input-independent
+            te_e.append(float(te_energy[j]) if te_energy is not None
+                        else p.energy)   # static: input-independent
         report.robustness_error_r = correlation(tr_err, te_err)
         report.robustness_energy_r = correlation(tr_e, te_e)
 

@@ -10,13 +10,32 @@ replacement: CIP consults the innermost frame, FCS walks the stack outward
 Higher-order primitives (scan/while/cond/pjit/custom_jvp/...) are handled
 by re-emitting them with interpreted bodies, so the transform composes with
 ``jax.jit`` and control flow.
+
+**Bit-census accumulators** (the dynamic energy estimator's input): with
+``collect_bits=True`` the interpreter also emits, per intercepted
+genome-governed op, one exact int32 counter — the manipulated-mantissa-bit
+census of the quantized result (``kernels.bit_census``, the fused Pallas
+reduction on TPU). Each counter's static metadata (site index, op class,
+dtype, scalar-FLOPs-per-element weight) is a :class:`BitChannel`; the
+traced counters ride the evaluator's existing dispatch as one extra
+``(n_channels,)`` output, vmapped per genome like everything else. Scan
+bodies thread their per-iteration counts out through the scan's stacked
+outputs and fold them (sum over iterations == the profiler's
+``length``-multiplied census); while/cond bodies cannot thread a value
+census out (data-dependent trip counts), so their governed FLOPs are
+charged the static genome-scaled bound ``numel * min(b, full)`` instead,
+at the profiler's trip estimate (one while iteration / largest branch) —
+keeping ``dyn <= static`` an equality for those FLOPs.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Sequence, Tuple
+import contextlib
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.extend import core as jcore
 
@@ -64,6 +83,35 @@ def _read(env, var):
     return env[var]
 
 
+@dataclasses.dataclass(frozen=True)
+class BitChannel:
+    """Static metadata of one bit-census counter: which genome site owns
+    the intercepted op, and how its exact bit count converts to energy.
+    ``weight`` is scalar FLOPs charged per counted output element
+    (``eqn_flops / numel`` — a dot's 2·M·N·K madds share the census of its
+    M·N outputs), keeping the dynamic estimator on the static model's FLOP
+    accounting."""
+    site: int
+    op_class: str
+    dtype: str
+    weight: float
+    #: static upper bound on the counter's value per evaluation
+    #: (numel × mantissa bits × control-flow trip multiplier) — scan
+    #: folds consult it to pick an accumulator that stays exact
+    max_count: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class BitsRecord:
+    """One host-side census record (a :class:`BitChannel` plus its
+    concrete count) — the input of ``energy.dynamic_fpu_energy``."""
+    site: int
+    op_class: str
+    dtype: str
+    weight: float
+    count: int
+
+
 def _float_out(outvars) -> bool:
     for v in outvars:
         aval = v.aval
@@ -80,11 +128,48 @@ class NeatInterpreter:
         # census of intercepted flops per (scope-path, op_class, dtype) —
         # filled during interpretation, used by the dynamic energy model
         self.census: Dict[Tuple[str, str, str], int] = {}
+        # bit-census accumulators (dynamic energy): parallel lists of
+        # static channel metadata and traced int32 counters
+        self.collect_bits: bool = False
+        self.bit_channels: List[BitChannel] = []
+        self.bit_counts: List = []
 
     # -- interception hook (overridden by the dynamic-bits interpreter) ------
     def intercept(self, stack: Tuple[str, ...], op_class: str,
                   out_dtype) -> FpImplementation | None:
         return self.rule.select(stack, op_class, out_dtype)
+
+    # -- bit-census hooks -----------------------------------------------------
+    def _census_site(self, stack: Tuple[str, ...], op_class: str,
+                     out_dtype) -> int | None:
+        """Genome site owning this op for census purposes (None = skip)."""
+        return None
+
+    def _count_bits(self, x):
+        """Scalar int32 manipulated-bit count of one tensor."""
+        from repro.kernels.ops import bit_census
+        return bit_census(x)
+
+    def _post_intercept(self, stack, op_class, eqn, outvals) -> None:
+        """Record one census channel per float output of an intercepted
+        (already quantized) op. Only called when ``collect_bits``."""
+        site = self._census_site(stack, op_class, eqn.outvars[0].aval.dtype)
+        if site is None:
+            return
+        from repro.core.profiler import eqn_flops
+        flops = eqn_flops(eqn)
+        for v, o in zip(eqn.outvars, outvals):
+            aval = v.aval
+            if not (hasattr(aval, "dtype")
+                    and jnp.issubdtype(aval.dtype, jnp.floating)):
+                continue
+            numel = max(int(np.prod(aval.shape)) if aval.shape else 1, 1)
+            from repro.utils.numerics import float_spec
+            self.bit_channels.append(BitChannel(
+                site=site, op_class=op_class,
+                dtype=str(jnp.dtype(aval.dtype)), weight=flops / numel,
+                max_count=numel * float_spec(aval.dtype).mantissa_bits))
+            self.bit_counts.append(self._count_bits(o))
 
     # -- sub-jaxpr helpers ---------------------------------------------------
     def _closed_runner(self, closed: jcore.ClosedJaxpr,
@@ -152,6 +237,8 @@ class NeatInterpreter:
                         if jnp.issubdtype(jnp.result_type(o), jnp.floating) else o
                         for o in outvals
                     ]
+                    if self.collect_bits:
+                        self._post_intercept(stack, op_class, eqn, outvals)
 
             if not prim.multiple_results and not isinstance(outvals, (list, tuple)):
                 outvals = [outvals]
@@ -170,14 +257,136 @@ class NeatInterpreter:
         init = invals[num_consts:num_consts + num_carry]
         xs = invals[num_consts + num_carry:]
         body = self._closed_runner(closed, stack)
+        # census counters minted inside the body belong to the scan trace:
+        # route them out through the scan's stacked outputs and fold each
+        # channel over the iteration axis (the dynamic analogue of the
+        # profiler's `flops * length`). The marks also make body re-traces
+        # idempotent — each trace rebuilds the same channel suffix.
+        cmark = len(self.bit_channels)
+        vmark = len(self.bit_counts)
 
         def f(carry, x):
+            del self.bit_channels[cmark:]
+            del self.bit_counts[vmark:]
             outs = body(*consts, *carry, *x)
-            return tuple(outs[:num_carry]), tuple(outs[num_carry:])
+            step_counts = tuple(self.bit_counts[vmark:])
+            del self.bit_counts[vmark:]
+            return (tuple(outs[:num_carry]),
+                    (tuple(outs[num_carry:]), step_counts))
 
-        carry, ys = lax.scan(f, tuple(init), tuple(xs), length=p["length"],
-                             reverse=p["reverse"], unroll=p.get("unroll", 1))
+        carry, (ys, counts) = lax.scan(
+            f, tuple(init), tuple(xs), length=p["length"],
+            reverse=p["reverse"], unroll=p.get("unroll", 1))
+        # fold each channel over the iteration axis with an accumulator
+        # its static bound (channel max_count x length) keeps exact:
+        # int32 when provably safe, int64 when the runtime has it, else
+        # an f32 fold (approximate but identical on the host-reference
+        # path, which shares this code). max_count is bumped so nested
+        # scans compound the bound correctly.
+        length = max(int(p["length"]), 1)
+        for k, c in enumerate(counts):
+            ch = self.bit_channels[cmark + k]
+            bound = length * max(ch.max_count, 1)
+            if bound <= np.iinfo(np.int32).max:
+                s = jnp.sum(c, dtype=jnp.int32)
+            elif jax.config.jax_enable_x64:
+                s = jnp.sum(c, dtype=jnp.int64)
+            else:
+                s = jnp.sum(c.astype(jnp.float32))
+            self.bit_counts.append(s)
+            self.bit_channels[cmark + k] = dataclasses.replace(
+                ch, max_count=bound)
         return list(carry) + list(ys)
+
+    @contextlib.contextmanager
+    def _suspend_census(self):
+        prev = self.collect_bits
+        self.collect_bits = False
+        try:
+            yield
+        finally:
+            self.collect_bits = prev
+
+    def _census_bits_bound(self, stack, op_class, out_dtype,
+                           site: int):
+        """Static manipulated-bit bound per element, ``min(b_site, full)``
+        (traced or concrete), for the while/cond fallback. None = no
+        fallback (the base interpreter collects nothing)."""
+        return None
+
+    def _static_census_jaxpr(self, jaxpr: jcore.Jaxpr,
+                             stack: Tuple[str, ...], mult: int = 1) -> None:
+        """Static census fallback for control-flow bodies the value
+        census cannot thread counts out of (while/cond): charge each
+        governed float eqn its static bound ``numel * min(b, full)``
+        manipulated bits — exactly its static-model term, so
+        ``dyn <= static`` holds with equality for these FLOPs. Keep
+        primitive coverage and trip counts in sync with
+        ``profiler._walk`` (one while iteration, the largest cond
+        branch, ``length`` for nested scans) — the invariant assumes
+        both walkers count the same FLOPs."""
+        from repro.core.profiler import eqn_flops
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            estack = self._merge_stack(
+                stack, parse_name_stack(eqn.source_info.name_stack))
+            if name == "pjit":
+                self._static_census_jaxpr(eqn.params["jaxpr"].jaxpr,
+                                          estack, mult)
+                continue
+            if name in ("custom_jvp_call", "custom_vjp_call",
+                        "custom_vjp_call_jaxpr"):
+                closed = (eqn.params.get("call_jaxpr")
+                          or eqn.params.get("fun_jaxpr"))
+                self._static_census_jaxpr(closed.jaxpr, estack, mult)
+                continue
+            if name in ("remat2", "checkpoint"):
+                self._static_census_jaxpr(eqn.params["jaxpr"], estack, mult)
+                continue
+            if name == "scan":
+                self._static_census_jaxpr(
+                    eqn.params["jaxpr"].jaxpr, estack,
+                    mult * int(eqn.params["length"]))
+                continue
+            if name == "while":
+                self._static_census_jaxpr(eqn.params["cond_jaxpr"].jaxpr,
+                                          estack, mult)
+                self._static_census_jaxpr(eqn.params["body_jaxpr"].jaxpr,
+                                          estack, mult)
+                continue
+            if name == "cond":
+                br = max(eqn.params["branches"],
+                         key=lambda b: len(b.jaxpr.eqns))
+                self._static_census_jaxpr(br.jaxpr, estack, mult)
+                continue
+            op_class = _op_class(name, self.include_transcendental)
+            if op_class is None or not _float_out(eqn.outvars):
+                continue
+            out_dtype = eqn.outvars[0].aval.dtype
+            site = self._census_site(estack, op_class, out_dtype)
+            if site is None:
+                continue
+            bits = self._census_bits_bound(estack, op_class, out_dtype,
+                                           site)
+            if bits is None:
+                continue
+            flops = eqn_flops(eqn)
+            for v in eqn.outvars:
+                aval = v.aval
+                if not (hasattr(aval, "dtype")
+                        and jnp.issubdtype(aval.dtype, jnp.floating)):
+                    continue
+                numel = max(int(np.prod(aval.shape)) if aval.shape else 1,
+                            1)
+                from repro.utils.numerics import float_spec
+                full = float_spec(aval.dtype).mantissa_bits
+                self.bit_channels.append(BitChannel(
+                    site=site, op_class=op_class,
+                    dtype=str(jnp.dtype(aval.dtype)),
+                    weight=flops / numel,
+                    max_count=numel * mult * full))
+                self.bit_counts.append(
+                    jnp.int32(numel * mult) * jnp.asarray(bits, jnp.int32))
 
     def _eval_while(self, eqn, invals, stack):
         p = eqn.params
@@ -185,19 +394,31 @@ class NeatInterpreter:
         cond_consts = invals[:cn]
         body_consts = invals[cn:cn + bn]
         init = tuple(invals[cn + bn:])
+        if self.collect_bits:
+            # data-dependent trip count: no value census; charge the
+            # static genome-scaled bound instead
+            self._static_census_jaxpr(p["cond_jaxpr"].jaxpr, stack)
+            self._static_census_jaxpr(p["body_jaxpr"].jaxpr, stack)
         cond_run = self._closed_runner(p["cond_jaxpr"], stack)
         body_run = self._closed_runner(p["body_jaxpr"], stack)
-        out = lax.while_loop(
-            lambda c: cond_run(*cond_consts, *c)[0],
-            lambda c: tuple(body_run(*body_consts, *c)),
-            init)
+        with self._suspend_census():
+            out = lax.while_loop(
+                lambda c: cond_run(*cond_consts, *c)[0],
+                lambda c: tuple(body_run(*body_consts, *c)),
+                init)
         return list(out)
 
     def _eval_cond(self, eqn, invals, stack):
         branches = eqn.params["branches"]
         index, *ops = invals
+        if self.collect_bits:
+            br = max(branches, key=lambda b: len(b.jaxpr.eqns))
+            self._static_census_jaxpr(br.jaxpr, stack)
         fns = [self._closed_runner(br, stack) for br in branches]
-        out = lax.switch(index, [lambda *a, f=f: tuple(f(*a)) for f in fns], *ops)
+        with self._suspend_census():   # branch censuses would differ
+            out = lax.switch(index,
+                             [lambda *a, f=f: tuple(f(*a)) for f in fns],
+                             *ops)
         return list(out)
 
     # -- census ----------------------------------------------------------------
@@ -230,7 +451,8 @@ class DynamicNeatInterpreter(NeatInterpreter):
 
     def __init__(self, family: str, sites: Sequence[str], *,
                  target: str = "single", mode: str = "rne",
-                 include_transcendental: bool = False):
+                 include_transcendental: bool = False,
+                 collect_bits: bool = False):
         from repro.core.placement import PlacementRule
         super().__init__(PlacementRule(target=target),
                          include_transcendental=include_transcendental)
@@ -239,6 +461,7 @@ class DynamicNeatInterpreter(NeatInterpreter):
         self.site_idx = {s: i for i, s in enumerate(self.sites)}
         self.mode = mode
         self.target = target
+        self.collect_bits = collect_bits
         self.bits_vec = None   # set per call by neat_transform_dynamic
 
     def _site_for(self, stack: Tuple[str, ...]) -> int | None:
@@ -254,25 +477,104 @@ class DynamicNeatInterpreter(NeatInterpreter):
             return None
         return _DynFPI(self.bits_vec[idx], self.mode)
 
+    def _census_site(self, stack, op_class, out_dtype):
+        # also reached directly by the while/cond static fallback, so the
+        # target-dtype filter cannot be left to intercept() alone
+        from repro.core.placement import _is_target_dtype
+        if not _is_target_dtype(out_dtype, self.target):
+            return None
+        return self._site_for(stack)
+
+    def _census_bits_bound(self, stack, op_class, out_dtype, site):
+        from repro.utils.numerics import float_spec
+        full = float_spec(out_dtype).mantissa_bits
+        return jnp.clip(self.bits_vec[site], 1, full)
+
+    def stacked_counts(self) -> jnp.ndarray:
+        """The traced ``(n_channels,)`` accumulator output — int32 in the
+        common case; scan folds whose static bound exceeds int32 widen to
+        int64 under x64 or degrade to an f32 fold (the whole vector
+        promotes with them; the host reference shares the arithmetic)."""
+        if not self.bit_counts:
+            return jnp.zeros((0,), jnp.int32)
+        return jnp.stack(self.bit_counts)
+
+
+class BitCensusCapture(NeatInterpreter):
+    """Host-side reference interpreter for the dynamic energy estimator.
+
+    Runs a *concrete* placement rule (``rule_from_genome``) eagerly and
+    records a :class:`BitsRecord` per governed FLOP using the independent
+    jnp census (``utils.numerics.manipulated_bits``), mirroring the
+    device path's site resolution exactly — the parity target for
+    ``tests/test_energy_dynamic.py`` and the CI smoke gate.
+    """
+
+    def __init__(self, rule, family: str, sites: Sequence[str], *,
+                 target: str = "single",
+                 include_transcendental: bool = False):
+        super().__init__(rule, include_transcendental=include_transcendental)
+        self.family = family
+        self.site_idx = {s: i for i, s in enumerate(sites)}
+        self.target = target
+        self.collect_bits = True
+
+    def _census_site(self, stack, op_class, out_dtype):
+        from repro.core.placement import _is_target_dtype, site_index_for_stack
+        if not _is_target_dtype(out_dtype, self.target):
+            return None
+        return site_index_for_stack(self.family, self.site_idx, stack)
+
+    def _count_bits(self, x):
+        from repro.utils.numerics import manipulated_bits
+        return jnp.sum(manipulated_bits(x)).astype(jnp.int32)
+
+    def _census_bits_bound(self, stack, op_class, out_dtype, site):
+        fpi = self.rule.select(stack, op_class, out_dtype)
+        return jnp.int32(fpi.mantissa_bits(out_dtype))
+
+    def records(self) -> List[BitsRecord]:
+        return [BitsRecord(ch.site, ch.op_class, ch.dtype, ch.weight,
+                           int(np.asarray(c)))
+                for ch, c in zip(self.bit_channels, self.bit_counts)]
+
+
+def _input_signature(args, kwargs) -> tuple:
+    """Hashable (structure, shapes, dtypes) key of one input set —
+    identical for a concrete input and its unbatched vmap tracers, so
+    census-channel metadata recorded at trace time can be looked up from
+    the host with the raw inputs."""
+    return (jax.tree.structure((args, kwargs)), tuple(
+        (getattr(x, "shape", None), str(getattr(x, "dtype", type(x))))
+        for x in jax.tree.leaves((args, kwargs))))
+
 
 def neat_transform_dynamic(fn: Callable, family: str, sites: Sequence[str],
                            *, target: str = "single", mode: str = "rne",
-                           include_transcendental: bool = False) -> Callable:
+                           include_transcendental: bool = False,
+                           collect_bits: bool = False) -> Callable:
     """Return ``g(bits, *args)`` == `fn(*args)` under `family` placement
     with per-site mantissa widths from the traced int vector ``bits``.
 
     Jit ``g`` once; every genome evaluation is then a compiled call.
+
+    With ``collect_bits=True``, ``g`` returns ``(fn(*args), counts)``
+    where ``counts`` is the ``(n_channels,)`` int32 bit-census
+    accumulator vector. Channel metadata is per input signature (shapes
+    enter the ``weight = flops/numel`` folding scales): fetch it with
+    ``g.bit_channels_for(*args)`` — valid once that signature has been
+    traced; ``g.bit_channels`` holds the most recent trace's channels.
     """
     cache: Dict = {}
+    channels_by_sig: Dict = {}
 
     def g(bits, *args, **kwargs):
         interp = DynamicNeatInterpreter(
             family, sites, target=target, mode=mode,
-            include_transcendental=include_transcendental)
+            include_transcendental=include_transcendental,
+            collect_bits=collect_bits)
         interp.bits_vec = jnp.asarray(bits, jnp.int32)
-        key = (jax.tree.structure((args, kwargs)), tuple(
-            (getattr(x, "shape", None), str(getattr(x, "dtype", type(x))))
-            for x in jax.tree.leaves((args, kwargs))))
+        key = _input_signature(args, kwargs)
         if key not in cache:
             closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
                 *args, **kwargs)
@@ -280,16 +582,28 @@ def neat_transform_dynamic(fn: Callable, family: str, sites: Sequence[str],
         closed, out_tree = cache[key]
         flat = jax.tree.leaves((args, kwargs))
         outs = interp.eval_jaxpr(closed.jaxpr, closed.consts, flat)
-        return jax.tree.unflatten(out_tree, outs)
+        result = jax.tree.unflatten(out_tree, outs)
+        if collect_bits:
+            g.bit_channels = tuple(interp.bit_channels)
+            channels_by_sig[key] = g.bit_channels
+            return result, interp.stacked_counts()
+        return result
 
+    def bit_channels_for(*args, **kwargs):
+        """Census channels recorded at this input signature's trace
+        (KeyError before the signature has been dispatched)."""
+        return channels_by_sig[_input_signature(args, kwargs)]
+
+    g.bit_channels = ()
+    g.bit_channels_for = bit_channels_for
     return g
 
 
 def neat_transform_population(fn: Callable, family: str,
                               sites: Sequence[str], *,
                               target: str = "single", mode: str = "rne",
-                              include_transcendental: bool = False
-                              ) -> Callable:
+                              include_transcendental: bool = False,
+                              collect_bits: bool = False) -> Callable:
     """Population-batched evaluator: ``G(bits_matrix, *args)`` computes
     ``fn(*args)`` under every genome row of ``bits_matrix`` (P, n_sites)
     in ONE compiled call, by vmapping the dynamic-bits evaluator over the
@@ -298,17 +612,43 @@ def neat_transform_population(fn: Callable, family: str,
     The bits matrix is the only batched input, so XLA compiles a single
     device-parallel program per input signature; jit ``G`` once and every
     NSGA-II generation becomes one dispatch instead of ``P``.
+
+    With ``collect_bits=True`` the per-genome census accumulators come
+    back as a second ``(P, n_channels)`` output in the same dispatch;
+    channel metadata is on ``G.inner.bit_channels`` after the first call.
     """
     g = neat_transform_dynamic(
         fn, family, sites, target=target, mode=mode,
-        include_transcendental=include_transcendental)
+        include_transcendental=include_transcendental,
+        collect_bits=collect_bits)
 
     def G(bits_matrix, *args):
         bits_matrix = jnp.asarray(bits_matrix, jnp.int32)
         in_axes = (0,) + (None,) * len(args)
         return jax.vmap(g, in_axes=in_axes)(bits_matrix, *args)
 
+    G.inner = g
     return G
+
+
+def capture_bit_census(fn: Callable, rule, family: str,
+                       sites: Sequence[str], *, target: str = "single",
+                       include_transcendental: bool = False) -> Callable:
+    """Host-side dynamic-energy reference: return ``h(*args)`` ->
+    ``(fn(*args), records)`` where ``records`` are the
+    :class:`BitsRecord` census of every governed FLOP under the concrete
+    ``rule`` — feed them to ``energy.dynamic_fpu_energy``."""
+    def h(*args, **kwargs):
+        interp = BitCensusCapture(
+            rule, family, sites, target=target,
+            include_transcendental=include_transcendental)
+        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
+            *args, **kwargs)
+        flat = jax.tree.leaves((args, kwargs))
+        outs = interp.eval_jaxpr(closed.jaxpr, closed.consts, flat)
+        return (jax.tree.unflatten(jax.tree.structure(out_shape), outs),
+                interp.records())
+    return h
 
 
 def neat_transform(fn: Callable, rule: PlacementRule, *,

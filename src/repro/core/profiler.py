@@ -129,6 +129,9 @@ class Profile:
 def _walk(jaxpr: jcore.Jaxpr, scopes: Dict[str, ScopeStats],
           prefix: Tuple[str, ...], mult: int,
           include_transcendental: bool) -> None:
+    # keep primitive coverage and trip-count heuristics in sync with
+    # interpreter._static_census_jaxpr — the dynamic estimator's
+    # dyn <= static invariant assumes both walkers count the same FLOPs
     for eqn in jaxpr.eqns:
         name = eqn.primitive.name
         raw = parse_name_stack(eqn.source_info.name_stack)
@@ -137,7 +140,8 @@ def _walk(jaxpr: jcore.Jaxpr, scopes: Dict[str, ScopeStats],
         sub = None
         if name == "pjit":
             sub = [eqn.params["jaxpr"]]
-        elif name in ("custom_jvp_call", "custom_vjp_call"):
+        elif name in ("custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr"):
             sub = [eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")]
         elif name in ("remat2", "checkpoint"):
             inner = eqn.params["jaxpr"]

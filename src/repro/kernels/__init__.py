@@ -9,4 +9,5 @@ from repro.kernels.ops import (
     mantissa_trunc,
     quant_matmul,
     flash_attention,
+    bit_census,
 )

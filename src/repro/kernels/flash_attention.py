@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.mantissa_trunc import _trunc_block
+from repro.kernels.runtime import default_interpret
 from repro.utils.jax_compat import CompilerParams as _CompilerParams
 
 NEG_INF = -1e30
@@ -92,10 +93,12 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            kv_len=None, qk_bits: int = 24,
                            pv_bits: int = 24, mode: str = "rne",
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     """q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D). Returns (B, Hq, Tq, D).
     ``kv_len`` ((B,) int32) optionally limits row b's attention to its
-    first ``kv_len[b]`` keys (ragged-slot prefix mask)."""
+    first ``kv_len[b]`` keys (ragged-slot prefix mask). ``interpret=None``
+    resolves from the backend (compiled on TPU)."""
+    interpret = default_interpret(interpret)
     b, hq, tq, d = q.shape
     _, hkv, tk, _ = k.shape
     assert hq % hkv == 0

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import default_interpret
 from repro.utils.numerics import float_spec
 
 
@@ -47,13 +48,15 @@ def _kernel(x_ref, o_ref, *, bits: int, mode: str):
                                     "interpret"))
 def mantissa_trunc_pallas(x: jnp.ndarray, bits: int, mode: str = "rne",
                           *, block_m: int = 256, block_n: int = 512,
-                          interpret: bool = True) -> jnp.ndarray:
+                          interpret: bool | None = None) -> jnp.ndarray:
     """Truncate `x` to `bits` effective mantissa bits via the Pallas kernel.
 
     `x` may be any shape; it is viewed as (M, N) with N the trailing dim.
     Pure elementwise — bandwidth-bound — so blocks are sized to stream
     ~1 MB VMEM tiles (256x512 fp32 = 512 KB in + 512 KB out).
+    ``interpret=None`` resolves from the backend (compiled on TPU).
     """
+    interpret = default_interpret(interpret)
     spec = float_spec(x.dtype)
     if bits >= spec.mantissa_bits:
         return x

@@ -2,23 +2,24 @@
 
 ``backend`` selects the implementation:
   "auto"    — Pallas on TPU, jnp reference elsewhere (this container: jnp)
-  "pallas"  — pl.pallas_call compiled for TPU
-  "interpret" — Pallas with interpret=True (CPU emulation; tests use this)
+  "pallas"  — pl.pallas_call (compiled on TPU, interpreter emulation off-TPU)
+  "interpret" — Pallas with interpret=True forced (CPU emulation; tests)
   "ref"     — the pure-jnp oracle
+
+The Pallas paths leave ``interpret`` unset (None) so the kernels resolve
+it from ``jax.default_backend()`` themselves (``kernels.runtime``);
+callers never hardcode emulation.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.bit_census import bit_census_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.mantissa_trunc import mantissa_trunc_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.runtime import on_tpu as _on_tpu
 
 
 def _resolve(backend: str) -> str:
@@ -27,12 +28,17 @@ def _resolve(backend: str) -> str:
     return backend
 
 
+def _interp(resolved: str) -> bool | None:
+    # "interpret" forces emulation; "pallas" defers to the backend default
+    return True if resolved == "interpret" else None
+
+
 def mantissa_trunc(x: jnp.ndarray, bits: int, mode: str = "rne",
                    *, backend: str = "auto") -> jnp.ndarray:
     b = _resolve(backend)
     if b == "ref":
         return _ref.mantissa_trunc_ref(x, bits, mode)
-    return mantissa_trunc_pallas(x, bits, mode, interpret=(b == "interpret"))
+    return mantissa_trunc_pallas(x, bits, mode, interpret=_interp(b))
 
 
 def quant_matmul(a: jnp.ndarray, b: jnp.ndarray, *, a_bits: int = 24,
@@ -43,7 +49,7 @@ def quant_matmul(a: jnp.ndarray, b: jnp.ndarray, *, a_bits: int = 24,
         return _ref.quant_matmul_ref(a, b, a_bits, b_bits, out_bits, mode)
     return quant_matmul_pallas(a, b, a_bits=a_bits, b_bits=b_bits,
                                out_bits=out_bits, mode=mode,
-                               interpret=(be == "interpret"))
+                               interpret=_interp(be))
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
@@ -63,4 +69,14 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   kv_len=kv_len,
                                   qk_bits=qk_bits, pv_bits=pv_bits,
-                                  mode=mode, interpret=(be == "interpret"))
+                                  mode=mode, interpret=_interp(be))
+
+
+def bit_census(x: jnp.ndarray, *, backend: str = "auto") -> jnp.ndarray:
+    """Total manipulated mantissa bits of `x` (scalar int32) — the fused
+    trailing-zero census the dynamic energy estimator accumulates per
+    placement site. Exact; bit-identical across backends."""
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.bit_census_ref(x)
+    return bit_census_pallas(x, interpret=_interp(b))

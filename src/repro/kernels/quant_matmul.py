@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.mantissa_trunc import _trunc_block
+from repro.kernels.runtime import default_interpret
 from repro.utils.jax_compat import CompilerParams as _CompilerParams
 
 
@@ -50,8 +51,10 @@ def quant_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
                         out_bits: int = 24, mode: str = "rne",
                         block_m: int = 128, block_n: int = 128,
                         block_k: int = 128,
-                        interpret: bool = True) -> jnp.ndarray:
-    """(M, K) @ (K, N) with NEAT truncation fused into the MXU pipeline."""
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """(M, K) @ (K, N) with NEAT truncation fused into the MXU pipeline.
+    ``interpret=None`` resolves from the backend (compiled on TPU)."""
+    interpret = default_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

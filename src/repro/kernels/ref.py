@@ -4,13 +4,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.utils.numerics import truncate_mantissa
+from repro.utils.numerics import manipulated_bits, truncate_mantissa
 
 
 def mantissa_trunc_ref(x: jnp.ndarray, bits: int,
                        mode: str = "rne") -> jnp.ndarray:
     """Oracle for kernels.mantissa_trunc."""
     return truncate_mantissa(x, bits, mode)
+
+
+def bit_census_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.bit_census: total manipulated mantissa bits
+    (trailing-zero counting, paper §III-C) as a scalar int32."""
+    if x.size == 0:
+        return jnp.zeros((), jnp.int32)
+    return jnp.sum(manipulated_bits(x)).astype(jnp.int32)
 
 
 def quant_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, a_bits: int,

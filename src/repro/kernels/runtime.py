@@ -1,0 +1,22 @@
+"""Shared runtime policy for the Pallas kernels.
+
+Every kernel wrapper takes ``interpret: bool | None``. ``None`` (the
+default) resolves from the active JAX backend: compiled Mosaic on TPU,
+interpreter emulation everywhere else — so callers never hardcode
+``interpret=True`` and the same call site runs compiled on real
+hardware and emulated in CPU CI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel's ``interpret`` argument (None = auto off-TPU)."""
+    if interpret is None:
+        return not on_tpu()
+    return interpret

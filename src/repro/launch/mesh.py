@@ -35,3 +35,13 @@ def make_population_mesh(n_devices: int | None = None):
     """
     n = len(jax.devices()) if n_devices is None else n_devices
     return jax.make_mesh((n,), ("pop",))
+
+
+def population_sharding(mesh):
+    """Axis-0 ("pop") sharding for everything the explorer batches per
+    genome: the NSGA-II bits matrix going in, and — since outputs follow
+    their batched operand — the per-genome error leaves and the dynamic
+    estimator's ``(P, n_channels)`` bit-census accumulators coming out.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec("pop"))

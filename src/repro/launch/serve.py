@@ -34,6 +34,9 @@ def main() -> None:
                     help="continuous batching: refill slots mid-flight")
     ap.add_argument("--wave", dest="engine", action="store_const",
                     const="wave", help="historical wave scheduler")
+    ap.add_argument("--admission", default="fifo", choices=("fifo", "sjf"),
+                    help="queue admission order: arrival (fifo) or "
+                         "shortest-prompt-first (sjf)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -50,7 +53,8 @@ def main() -> None:
 
     engine = DecodeEngine(model, params,
                           ServeConfig(max_len=128, batch_slots=args.slots,
-                                      engine=args.engine),
+                                      engine=args.engine,
+                                      admission=args.admission),
                           rule=rule)
     prompts = [[(7 * i + 3) % cfg.vocab_size for _ in range(4)]
                for i in range(args.prompts)]

@@ -21,11 +21,16 @@ Two schedulers share one compiled (batch, 1)-token step function:
 Prefill is real in both: every prompt token is stepped through the
 compiled decode step, so the KV cache holds the whole prompt and
 completions condition on all of it.
+
+Both schedulers admit from one queue whose order is the configured
+admission policy — ``"fifo"`` (arrival) or ``"sjf"`` (shortest prompt
+first) — and every request carries its own ``max_new`` budget
+(``generate(prompts, max_new_tokens=[...])``; an int broadcasts).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +49,12 @@ class ServeConfig:
     eos_token: Optional[int] = None
     seed: int = 0
     engine: str = "continuous"        # "continuous" | "wave"
+    #: queue admission order: "fifo" (arrival) or "sjf" (shortest prompt
+    #: first — short requests stop convoying behind long prefills; a
+    #: stable sort keeps arrival order among equal lengths). Completions
+    #: are returned in request order either way, and greedy outputs are
+    #: admission-order independent.
+    admission: str = "fifo"
 
 
 @dataclasses.dataclass
@@ -65,6 +76,8 @@ class DecodeEngine:
                  rule: Optional[PlacementRule] = None):
         if cfg.engine not in ("continuous", "wave"):
             raise ValueError(f"unknown engine {cfg.engine!r}")
+        if cfg.admission not in ("fifo", "sjf"):
+            raise ValueError(f"unknown admission policy {cfg.admission!r}")
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -93,35 +106,63 @@ class DecodeEngine:
         keep = max(1, self.cfg.max_len - 1 - max_new_tokens)
         return list(prompt)[-keep:] if prompt else [0]
 
+    def _budgets(self, prompts,
+                 max_new_tokens: Union[int, Sequence[int]]) -> List[int]:
+        """Per-request completion budgets: one int broadcasts; a sequence
+        gives each request its own ``max_new`` ceiling."""
+        if isinstance(max_new_tokens, (int, np.integer)):
+            budgets = [int(max_new_tokens)] * len(prompts)
+        else:
+            budgets = [int(b) for b in max_new_tokens]
+        if len(budgets) != len(prompts):
+            raise ValueError(f"{len(budgets)} max_new budgets for "
+                             f"{len(prompts)} prompts")
+        if any(b < 1 for b in budgets):
+            raise ValueError("per-request max_new budgets must be >= 1")
+        return budgets
+
+    def _admission_order(self, queue: List[tuple]) -> List[tuple]:
+        """Apply the configured admission policy to a (rid, prompt, budget)
+        queue. ``sjf`` sorts by prompt length, stably."""
+        if self.cfg.admission == "sjf":
+            return sorted(queue, key=lambda e: len(e[1]))
+        return list(queue)
+
     def generate(self, prompts: List[List[int]],
-                 max_new_tokens: int = 32) -> List[List[int]]:
+                 max_new_tokens: Union[int, Sequence[int]] = 32
+                 ) -> List[List[int]]:
         """Serve a list of token prompts; returns completions per prompt.
-        ``self.stats`` holds step/occupancy accounting for the call."""
+        ``max_new_tokens`` is a global ceiling (int) or one budget per
+        request. ``self.stats`` holds step/occupancy accounting."""
         self.stats = ServeStats(n_requests=len(prompts))
         outputs: dict[int, List[int]] = {i: [] for i in range(len(prompts))}
+        budgets = self._budgets(prompts, max_new_tokens)
         key = jax.random.key(self.cfg.seed)
         with use_rule(self.rule):
+            # both schedulers admit the cache-truncated prompt tails, so
+            # the sjf sort key is the length actually prefilled
+            queue = self._admission_order(
+                [(rid, self._prompt_tail(p, budgets[rid]), budgets[rid])
+                 for rid, p in enumerate(prompts)])
             if self.cfg.engine == "continuous":
-                self._run_continuous(prompts, outputs, max_new_tokens, key)
+                self._run_continuous(queue, outputs, key)
             else:
-                queue = list(enumerate(prompts))
                 while queue:
                     wave = [queue.pop(0) for _ in
                             range(min(self.cfg.batch_slots, len(queue)))]
-                    key = self._run_wave(wave, outputs, max_new_tokens, key)
+                    key = self._run_wave(wave, outputs, key)
         self.stats.slot_steps = self.stats.steps * self.cfg.batch_slots
         self.stats.tokens_out = sum(len(o) for o in outputs.values())
         return [outputs[i] for i in range(len(prompts))]
 
     # -- continuous scheduler ------------------------------------------------
-    def _run_continuous(self, prompts, outputs, max_new_tokens, key):
-        """One scheduler loop over the compiled step: admit from the queue
-        into free slots, prefill each slot at its own position, retire on
-        EOS/budget and refill mid-flight while other slots keep decoding."""
+    def _run_continuous(self, queue, outputs, key):
+        """One scheduler loop over the compiled step: admit the ordered
+        (rid, prompt-tail, budget) queue into free slots, prefill each
+        slot at its own position, retire on EOS/budget and refill
+        mid-flight while other slots keep decoding."""
         cfg = self.cfg
         n_slots = cfg.batch_slots
-        queue = [(rid, self._prompt_tail(p, max_new_tokens))
-                 for rid, p in enumerate(prompts)]
         cache = self.model.init_cache(n_slots, cfg.max_len)
         cur = np.zeros((n_slots, 1), np.int32)
         rid = [-1] * n_slots              # -1 = free slot
@@ -136,9 +177,9 @@ class DecodeEngine:
             admit = np.zeros((n_slots,), bool)
             for s in range(n_slots):
                 if rid[s] < 0 and queue:
-                    rid[s], prompt[s] = queue.pop(0)
+                    rid[s], prompt[s], budget = queue.pop(0)
                     ppos[s], spos[s] = 0, 0
-                    left[s] = max_new_tokens
+                    left[s] = budget
                     cur[s, 0] = prompt[s][0]
                     admit[s] = True
             if admit.any():
@@ -170,8 +211,9 @@ class DecodeEngine:
                     cur[s, 0] = tok
 
     # -- wave scheduler (parity reference) -----------------------------------
-    def _run_wave(self, wave, outputs, max_new_tokens, key):
-        """Serve one wave of requests (<= batch_slots) from a fresh cache.
+    def _run_wave(self, wave, outputs, key):
+        """Serve one wave of (rid, prompt, budget) requests (<= batch_slots)
+        from a fresh cache.
 
         Streams each slot's prompt through the compiled step token by
         token (prefill), then keeps stepping to decode; a slot flips from
@@ -179,9 +221,9 @@ class DecodeEngine:
         """
         cfg = self.cfg
         n_slots = cfg.batch_slots
-        prompts = [self._prompt_tail(p, max_new_tokens) for _, p in wave]
-        rids = [r for r, _ in wave]
-        left = [max_new_tokens] * len(wave)
+        prompts = [p for _, p, _ in wave]    # tails already truncated
+        rids = [r for r, _, _ in wave]
+        left = [b for _, _, b in wave]
         done = [False] * len(wave)
         cache = self.model.init_cache(n_slots, cfg.max_len)
         cur = np.zeros((n_slots, 1), np.int32)

@@ -1,0 +1,358 @@
+"""Device-resident dynamic energy: Pallas bit-census kernel vs jnp oracle
+(bit-exact), batched dynamic estimator vs the host-side
+``dynamic_fpu_energy`` reference, and static-vs-dynamic front sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import enable_x64
+
+from repro.apps import get_app, make_task
+from repro.core import explore
+from repro.core.estimators import (DynamicEnergyEstimator,
+                                   StaticEnergyEstimator, fold_bit_counts,
+                                   host_device_parity, make_estimator,
+                                   register_estimator)
+from repro.core.explorer import ExplorationTask, PopulationEvaluator, \
+    sites_for_family
+from repro.core.profiler import profile
+from repro.core.scope import pscope
+from repro.kernels.ops import bit_census
+from repro.kernels.ref import bit_census_ref
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs jnp oracle: bit-exact across dtypes and shapes
+# ---------------------------------------------------------------------------
+
+SHAPES = [(1,), (7,), (33, 5), (257, 130), (3, 128, 2), (1024, 600)]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_bit_census_kernel_matches_oracle(dtype, shape):
+    rng = np.random.default_rng(hash((str(dtype), shape)) % 2**32)
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    # salt with the census's edge classes: zero fraction, specials, exacts
+    flat = x.reshape(-1)
+    salt = jnp.asarray([0.0, 1.0, 0.25, -2.0, jnp.inf, -jnp.inf, jnp.nan],
+                       dtype)[: flat.shape[0]]
+    x = flat.at[: salt.shape[0]].set(salt).reshape(shape)
+    assert int(bit_census(x, backend="interpret")) == int(bit_census_ref(x))
+
+
+def test_bit_census_kernel_matches_oracle_f64():
+    with enable_x64():
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((65, 9)), jnp.float64)
+        assert int(bit_census(x, backend="interpret")) \
+            == int(bit_census_ref(x))
+
+
+def test_bit_census_edges():
+    # zero fraction counts the implicit bit only; empty tensors count 0
+    assert int(bit_census_ref(jnp.zeros((4, 4), jnp.float32))) == 16
+    assert int(bit_census(jnp.zeros((4, 4), jnp.float32),
+                          backend="interpret")) == 16
+    assert int(bit_census(jnp.zeros((0,), jnp.float32),
+                          backend="interpret")) == 0
+    # full-precision odd fraction counts every mantissa bit
+    x = jnp.asarray([np.float32(1.0) + np.float32(2.0 ** -23)])
+    assert int(bit_census(x, backend="interpret")) == 24
+    # auto backend (jnp ref on CPU) agrees with forced emulation
+    y = jnp.asarray(np.linspace(-3, 3, 77), jnp.float32)
+    assert int(bit_census(y)) == int(bit_census(y, backend="interpret"))
+
+
+# ---------------------------------------------------------------------------
+# batched dynamic estimator vs host dynamic_fpu_energy, per genome
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bs_setup():
+    task = make_task(get_app("blackscholes"), n_train=3, n_test=2)
+    prof = profile(task.fn, *task.train_inputs[0])
+    sites = sites_for_family(prof, "cip", 4)
+    exact = [jax.tree.map(np.asarray, task.fn(*inp))
+             for inp in task.train_inputs]
+    return task, prof, sites, exact
+
+
+def test_dynamic_estimator_matches_host_reference(bs_setup):
+    """Per-(genome, input) device census folded to pJ == the eager
+    host-side capture fed to dynamic_fpu_energy, to well under 1e-6
+    (both are f64 reductions of identical exact integer counts)."""
+    task, prof, sites, exact = bs_setup
+    ev = PopulationEvaluator(task, "cip", sites, pop_hint=5,
+                             collect_bits=True)
+    rng = np.random.default_rng(0)
+    genomes = [tuple(int(v) for v in rng.integers(1, 25, len(sites)))
+               for _ in range(5)]
+    ev.errors_matrix(genomes, task.train_inputs, exact)
+    est = make_estimator("dynamic", prof, "cip", sites, target=task.target)
+    assert est.fpu_matrix(ev, genomes).shape == (5, len(task.train_inputs))
+    worst = host_device_parity(task, "cip", sites, est, ev, genomes,
+                               task.train_inputs)
+    assert worst < 1e-6
+
+
+def test_dynamic_estimator_scan_app_matches_host():
+    """Scan bodies thread their census out through the scan outputs: the
+    fold over iterations must equal the eager reference too."""
+    task = make_task(get_app("kmeans"), n_train=2, n_test=0)
+    prof = profile(task.fn, *task.train_inputs[0])
+    sites = sites_for_family(prof, "fcs", 4)
+    exact = [jax.tree.map(np.asarray, task.fn(*inp))
+             for inp in task.train_inputs]
+    ev = PopulationEvaluator(task, "fcs", sites, pop_hint=2,
+                             collect_bits=True)
+    genomes = [(6,) * len(sites), (20,) * len(sites)]
+    ev.errors_matrix(genomes, task.train_inputs, exact)
+    est = make_estimator("dynamic", prof, "fcs", sites, target=task.target)
+    assert host_device_parity(task, "fcs", sites, est, ev, genomes,
+                              task.train_inputs) < 1e-6
+    # every channel carries its static count bound (scan folds compound
+    # it by the iteration count to pick an exact accumulator)
+    assert all(ch.max_count > 0 for ch in ev.bit_channels)
+
+
+def test_heterogeneous_input_shapes_fold_per_signature():
+    """Unstackable (shape-varying) inputs dispatch at distinct jit
+    signatures whose census channels differ (shape enters the
+    flops/numel weight): each input's counts must fold with its own
+    signature's scales, matching the host reference per input."""
+    def fn(a, b):
+        with pscope("mm"):
+            return (a @ b) * jnp.float32(0.5)
+
+    rng = np.random.default_rng(9)
+    inputs = [
+        (jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+         jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)),
+        (jnp.asarray(rng.standard_normal((4, 16)), jnp.float32),
+         jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)),
+    ]
+    task = ExplorationTask(name="ragged", fn=fn, train_inputs=inputs,
+                           test_inputs=[])
+    prof = profile(task.fn, *inputs[0])
+    sites = sites_for_family(prof, "cip", 2)
+    exact = [jax.tree.map(np.asarray, task.fn(*inp)) for inp in inputs]
+    ev = PopulationEvaluator(task, "cip", sites, pop_hint=3,
+                             collect_bits=True)
+    genomes = [(6,) * len(sites), (12,) * len(sites), (24,) * len(sites)]
+    ev.errors_matrix(genomes, inputs, exact)
+    assert PopulationEvaluator.stack_inputs(inputs) is None  # truly ragged
+    # the dot channel's weight = 2K differs between the two inputs
+    w0 = {c.weight for c in ev.bit_channels_list[0]}
+    w1 = {c.weight for c in ev.bit_channels_list[1]}
+    assert w0 != w1
+    est = make_estimator("dynamic", prof, "cip", sites, target=task.target)
+    assert host_device_parity(task, "cip", sites, est, ev, genomes,
+                              inputs) < 1e-6
+    # the serial path agrees input by input as well
+    for p, g in enumerate(genomes):
+        ev.errors_serial(g, inputs, exact)
+        for i in range(len(inputs)):
+            np.testing.assert_array_equal(ev.last_serial_bit_counts[i],
+                                          ev.last_bit_counts_list[i][p])
+
+
+def test_while_cond_bodies_keep_static_charge():
+    """Governed FLOPs inside while/cond bodies cannot thread a value
+    census out (data-dependent trip counts); they must be charged their
+    static genome-scaled bound instead — for an app whose governed FLOPs
+    all live in such bodies, dynamic == static exactly, and the host
+    reference agrees."""
+    def fn(x):
+        with pscope("loop"):
+            def body(c):
+                i, v = c
+                return i + 1, v * jnp.float32(1.5) + x
+            _, y = jax.lax.while_loop(lambda c: c[0] < 3, body,
+                                      (jnp.int32(0), x))
+        with pscope("branch"):
+            y = jax.lax.cond(jnp.sum(y) > 0,
+                             lambda v: v * jnp.float32(2.0),
+                             lambda v: v + jnp.float32(1.0), y)
+        return y
+
+    rng = np.random.default_rng(5)
+    inputs = [(jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),)]
+    task = ExplorationTask(name="wl", fn=fn, train_inputs=inputs,
+                           test_inputs=[])
+    prof = profile(task.fn, *inputs[0])
+    sites = sites_for_family(prof, "cip", 3)
+    exact = [jax.tree.map(np.asarray, task.fn(*inp)) for inp in inputs]
+    ev = PopulationEvaluator(task, "cip", sites, pop_hint=2,
+                             collect_bits=True)
+    genomes = [(5,) * len(sites), (24,) * len(sites)]
+    ev.errors_matrix(genomes, inputs, exact)
+    dyn = make_estimator("dynamic", prof, "cip", sites, target=task.target)
+    stat = make_estimator("static", prof, "cip", sites, target=task.target)
+    df, _ = dyn.population(genomes, evaluator=ev)
+    sf, _ = stat.population(genomes)
+    np.testing.assert_allclose(df, sf, rtol=1e-9)
+    assert host_device_parity(task, "cip", sites, dyn, ev, genomes,
+                              inputs) < 1e-6
+
+
+def test_governed_transcendentals_keep_static_charge(bs_setup):
+    """Governed FLOPs the interpreter does not intercept (blackscholes is
+    exp/log-heavy) must keep their static genome-scaled charge: at the
+    full-precision genome the dynamic estimate stays close below static
+    (random mantissas average ~full-1 manipulated bits), not collapsed to
+    a fraction of it."""
+    task, prof, sites, exact = bs_setup
+    ev = PopulationEvaluator(task, "cip", sites, pop_hint=1,
+                             collect_bits=True)
+    genomes = [(24,) * len(sites)]
+    ev.errors_matrix(genomes, task.train_inputs, exact)
+    stat = make_estimator("static", prof, "cip", sites, target=task.target)
+    dyn = make_estimator("dynamic", prof, "cip", sites, target=task.target)
+    sf, _ = stat.population(genomes)
+    df, _ = dyn.population(genomes, evaluator=ev)
+    assert df[0] <= sf[0] * (1 + 1e-9)
+    assert df[0] > 0.8 * sf[0]
+    assert dyn.governed_residual(genomes)[0] > 0
+
+
+def test_serial_path_matches_batched_census(bs_setup):
+    """errors_serial collects the same accumulators as the batched
+    dispatch, genome by genome."""
+    task, prof, sites, exact = bs_setup
+    ev = PopulationEvaluator(task, "cip", sites, pop_hint=3,
+                             collect_bits=True)
+    genomes = [(8,) * len(sites), (3,) * len(sites), (24,) * len(sites)]
+    ev.errors_matrix(genomes, task.train_inputs, exact)
+    batched = ev.last_bit_counts.copy()
+    for p, g in enumerate(genomes):
+        ev.errors_serial(g, task.train_inputs, exact)
+        np.testing.assert_array_equal(
+            np.stack(ev.last_serial_bit_counts), batched[p])
+
+
+# ---------------------------------------------------------------------------
+# static-vs-dynamic sanity: dynamic energy <= static for identical genomes
+# ---------------------------------------------------------------------------
+
+def _sparse_task():
+    """A scoped app fed sparse-mantissa inputs (small integers / exact
+    powers of two): the dynamic census should be far below the static
+    charge, never above it."""
+    def fn(x, y):
+        with pscope("prod"):
+            a = x * y
+        with pscope("blend"):
+            b = a + x
+            c = b * jnp.float32(0.5)
+        return c
+
+    rng = np.random.default_rng(7)
+    inputs = [(jnp.asarray(rng.integers(1, 9, (64, 32)), jnp.float32),
+               jnp.asarray(2.0 ** rng.integers(-3, 4, (64, 32)),
+                           jnp.float32))
+              for _ in range(2)]
+    return ExplorationTask(name="sparse", fn=fn, train_inputs=inputs,
+                           test_inputs=[])
+
+
+def test_dynamic_leq_static_on_sparse_inputs():
+    task = _sparse_task()
+    prof = profile(task.fn, *task.train_inputs[0])
+    sites = sites_for_family(prof, "cip", 4)
+    exact = [jax.tree.map(np.asarray, task.fn(*inp))
+             for inp in task.train_inputs]
+    ev = PopulationEvaluator(task, "cip", sites, pop_hint=6,
+                             collect_bits=True)
+    rng = np.random.default_rng(1)
+    genomes = [tuple(int(v) for v in rng.integers(1, 25, len(sites)))
+               for _ in range(6)]
+    ev.errors_matrix(genomes, task.train_inputs, exact)
+    stat = make_estimator("static", prof, "cip", sites, target=task.target)
+    dyn = make_estimator("dynamic", prof, "cip", sites, target=task.target)
+    sf, sm = stat.population(genomes)
+    df, dm = dyn.population(genomes, evaluator=ev)
+    assert np.all(df <= sf * (1 + 1e-9))
+    # sparse mantissas leave most static bits uncharged
+    assert np.all(df < sf)
+    # memory energy stays the static storage model
+    np.testing.assert_allclose(dm, sm)
+    # per-site folding is consistent with the per-genome totals
+    per_site = fold_bit_counts(ev.bit_channels, ev.last_bit_counts,
+                               len(sites))
+    np.testing.assert_allclose(
+        per_site.sum(axis=2).mean(axis=1) + dyn.coeffs.fpu_const
+        + dyn.governed_residual(genomes), df, rtol=1e-12)
+
+
+def test_explore_dynamic_end_to_end(bs_setup):
+    """explore(energy="dynamic") stays population-batched: identical
+    dispatch count to the static objective, dynamic energies on the
+    shared static-baseline axis, robustness energies recomputed on the
+    unseen inputs."""
+    task, _, _, _ = bs_setup
+    kw = dict(family="cip", n_sites=4, pop_size=8, n_gen=2, max_evals=24,
+              seed=0)
+    rep_s = explore(task, energy="static", **kw)
+    rep_d = explore(task, energy="dynamic", **kw)
+    assert rep_d.energy_estimator == "dynamic"
+    assert rep_d.n_dispatches <= rep_s.n_dispatches + 2
+    assert rep_d.n_evals == rep_s.n_evals
+    assert all(np.isfinite(p.energy) and p.energy > 0 for p in rep_d.points)
+    # same genomes explored (identical NSGA-II seeds + error objective
+    # stream would only diverge through the energy objective's ranking)
+    assert np.isfinite(rep_d.robustness_energy_r)
+
+    # serial dynamic path agrees with the batched dynamic front
+    rep_ds = explore(task, energy="dynamic", batched=False,
+                     robustness=False, **kw)
+    front_b = {p.payload["genome"]: p.energy for p in rep_d.hull}
+    front_s = {p.payload["genome"]: p.energy for p in rep_ds.hull}
+    assert set(front_b) == set(front_s)
+    for g in front_b:
+        assert front_b[g] == pytest.approx(front_s[g], rel=1e-6)
+
+
+def test_estimator_registry_and_errors(bs_setup):
+    task, prof, sites, exact = bs_setup
+    with pytest.raises(ValueError, match="unknown energy estimator"):
+        make_estimator("entropy", prof, "cip", sites)
+    # a ready-made estimator instance passes through
+    est = make_estimator("dynamic", prof, "cip", sites)
+    assert make_estimator(est) is est
+    # dynamic estimator refuses stale/missing accumulators
+    ev = PopulationEvaluator(task, "cip", sites, pop_hint=2,
+                             collect_bits=True)
+    with pytest.raises(ValueError, match="bit-census"):
+        est.population([(8,) * len(sites)], evaluator=ev)
+    # custom registration plugs into explore() and reports its own name
+    register_estimator("dynamic2", DynamicEnergyEstimator)
+    est2 = make_estimator("dynamic2", prof, "cip", sites)
+    assert est2.needs_bit_census
+    assert est2.name == "dynamic2"
+
+
+def test_custom_estimator_drives_serial_path(bs_setup):
+    """A non-census custom estimator must rank genomes on *its* energies
+    in batched AND serial mode (the serial path used to silently fall
+    back to static_energy)."""
+    task, prof, sites, _ = bs_setup
+
+    class Halved(StaticEnergyEstimator):
+        def population(self, bits_matrix, *, evaluator=None):
+            fpu, mem = super().population(bits_matrix, evaluator=evaluator)
+            return fpu / 2.0, mem
+
+    coeffs = make_estimator("static", prof, "cip", sites).coeffs
+    kw = dict(family="cip", n_sites=4, pop_size=6, n_gen=1, max_evals=10,
+              seed=0, robustness=False)
+    for batched in (True, False):
+        rep_h = explore(task, energy=Halved(coeffs, name="halved"),
+                        batched=batched, **kw)
+        rep_s = explore(task, energy="static", batched=batched, **kw)
+        assert rep_h.energy_estimator == "halved"
+        by_genome = {p.payload["genome"]: p.energy for p in rep_s.points}
+        for p in rep_h.points:
+            # halved pJ against the unhalved baseline: exactly half
+            assert p.energy == pytest.approx(
+                by_genome[p.payload["genome"]] / 2.0, rel=1e-6)
