@@ -17,10 +17,17 @@ Reads the ``BENCH_*.json`` files emitted by ``benchmarks.run`` and fails
   steps of the wave engine on the skewed workload, with identical greedy
   completions. Step time is constant at fixed batch shape, so the steps
   ratio is the deterministic form of the tokens/sec speedup.
+* serve-prefill: chunked prefill must cut mean time-to-first-token by
+  >= ``MIN_TTFT_SPEEDUP`` over streaming prefill on the skewed workload
+  (expected ~an order of magnitude: 32-token chunks collapse ~96
+  per-token dispatches into 3), with greedy completions identical to the
+  wave reference; the chunked/streaming prefill *step* counts must also
+  differ by >= the same factor (the deterministic form of the TTFT win).
 
-Wall-clock numbers (us, tokens/sec) are reported but not gated — CI
-runners are noisy; dispatch counts, step counts and parity bits are
-exact for a fixed seed/workload.
+Wall-clock numbers (us, tokens/sec) are reported but not gated except
+for the serve-prefill TTFT ratio, whose expected margin dwarfs CI
+runner noise — dispatch counts, step counts and parity bits are exact
+for a fixed seed/workload.
 
   python -m benchmarks.check_smoke [--json-dir .]
 """
@@ -32,6 +39,7 @@ import os
 import sys
 
 MIN_SERVE_SPEEDUP = 1.5
+MIN_TTFT_SPEEDUP = 2.0             # chunked vs streaming prefill
 MAX_DISPATCH_RATIO = 0.25          # batched <= serial / 4
 MAX_DYNAMIC_EXTRA_DISPATCHES = 2   # dynamic objective <= static + 2
 DYNAMIC_HOST_DEVICE_RTOL = 1e-6
@@ -101,6 +109,29 @@ def check_serve(path: str) -> list:
     return errs
 
 
+def check_serve_prefill(path: str) -> list:
+    rows = _rows(path)
+    errs = []
+    ttft = float(_field(rows["serve_prefill_speedup"], "ttft_speedup")
+                 .rstrip("x"))
+    if ttft < MIN_TTFT_SPEEDUP:
+        errs.append(f"chunked-prefill TTFT regression: {ttft:.2f}x < "
+                    f"{MIN_TTFT_SPEEDUP}x over streaming prefill")
+    ch_steps = int(_field(rows["serve_prefill_chunked"], "prefill_steps"))
+    st_steps = int(_field(rows["serve_prefill_streaming"],
+                          "prefill_steps"))
+    step_ratio = st_steps / max(ch_steps, 1)
+    if step_ratio < MIN_TTFT_SPEEDUP:
+        errs.append(f"chunked-prefill step regression: streaming/chunked "
+                    f"prefill-step ratio {step_ratio:.2f}x < "
+                    f"{MIN_TTFT_SPEEDUP}x (streaming={st_steps}, "
+                    f"chunked={ch_steps})")
+    if _field(rows["serve_prefill_speedup"], "parity") != "True":
+        errs.append("chunked-prefill parity regression: chunked != wave "
+                    "greedy completions")
+    return errs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json-dir", default=".")
@@ -108,7 +139,8 @@ def main() -> None:
 
     checks = [("BENCH_explorer_pop.json", check_explorer),
               ("BENCH_explorer-dynamic.json", check_explorer_dynamic),
-              ("BENCH_serve.json", check_serve)]
+              ("BENCH_serve.json", check_serve),
+              ("BENCH_serve-prefill.json", check_serve_prefill)]
     errs = []
     for fname, fn in checks:
         path = os.path.join(args.json_dir, fname)
@@ -123,7 +155,8 @@ def main() -> None:
             print(f"[check_smoke] FAIL: {e}", file=sys.stderr)
         raise SystemExit(1)
     print("[check_smoke] OK: dispatch counts, Pareto parity, dynamic-"
-          "energy host/device agreement and serve speedup within bounds")
+          "energy host/device agreement, serve speedup and chunked-"
+          "prefill TTFT within bounds")
 
 
 if __name__ == "__main__":

@@ -150,7 +150,9 @@ class EnergyCoeffs:
 
 def energy_coeffs(prof: Profile, family: str, sites: Sequence[str], *,
                   target: str = "single",
-                  op_classes: Optional[frozenset] = None) -> EnergyCoeffs:
+                  op_classes: Optional[frozenset] = None,
+                  epi_fn=None,
+                  mem_pj_per_byte: float = MEM_PJ_PER_BYTE) -> EnergyCoeffs:
     """Build the coefficient tensor: one pass over the profile census,
     amortized across every genome the search will ever evaluate.
 
@@ -158,7 +160,11 @@ def energy_coeffs(prof: Profile, family: str, sites: Sequence[str], *,
     FPU-only residual view — memory terms stay zero); the dynamic
     estimator uses it to keep the static genome-scaled charge for
     governed FLOPs the interpreter does not intercept (transcendentals
-    unless ``include_transcendental``)."""
+    unless ``include_transcendental``). ``epi_fn`` / ``mem_pj_per_byte``
+    swap the per-FLOP and per-byte charges (default: the paper's EPI
+    table and Borkar's 1.5 nJ/byte) — the measured-power estimator
+    substitutes roofline execution time x device TDP."""
+    epi_of = epi_fn or _epi
     site_idx = {s: i for i, s in enumerate(sites)}
     n_sites = len(sites)
     fulls = sorted({_full_bits(dt) for st in prof.scopes.values()
@@ -179,7 +185,7 @@ def energy_coeffs(prof: Profile, family: str, sites: Sequence[str], *,
             for dtype in st.by_dtype:
                 share = st.by_dtype[dtype] / max(st.flops, 1)
                 n = flops * share
-                epi = _epi(op_class, dtype)
+                epi = epi_of(op_class, dtype)
                 full = _full_bits(dtype)
                 if s_i is not None and _is_target_dtype(jnp.dtype(dtype),
                                                         target):
@@ -190,11 +196,11 @@ def energy_coeffs(prof: Profile, family: str, sites: Sequence[str], *,
             continue
         wsum = sum(st.by_dtype.values())
         if not wsum:
-            mem_const += st.bytes * MEM_PJ_PER_BYTE
+            mem_const += st.bytes * mem_pj_per_byte
             continue
         for dtype, f in st.by_dtype.items():
             spec = float_spec(jnp.dtype(dtype))
-            amount = st.bytes * (f / wsum) * MEM_PJ_PER_BYTE
+            amount = st.bytes * (f / wsum) * mem_pj_per_byte
             if s_i is not None and _is_target_dtype(jnp.dtype(dtype), target):
                 # bits_for_storage(min(b, full)) == exp + min(b, full), b >= 1
                 mem_lin[s_i, d_idx[spec.mantissa_bits]] += \

@@ -2,8 +2,8 @@
 
 The explorer no longer hardcodes the coefficient-tensor static model:
 an :class:`EnergyEstimator` turns a generation's genome batch into the
-``(P,)`` FPU/memory energy vectors NSGA-II ranks on. Two built-ins,
-matching the paper's §III-C estimators:
+``(P,)`` FPU/memory energy vectors NSGA-II ranks on. Three built-ins —
+two matching the paper's §III-C estimators, one roofline-derived:
 
 * ``"static"`` — the PR-1 coefficient tensor: energy is affine in the
   clamped per-site mantissa widths, so a population is one einsum.
@@ -21,9 +21,21 @@ matching the paper's §III-C estimators:
   FLOPs no genome site governs keep their static charge
   (``coeffs.fpu_const``); memory energy stays the static storage model.
 
+* ``"measured-power"`` — per-op execution time x device TDP, from the
+  roofline constants in ``launch/roofline.py``: dot/conv FLOPs stream
+  through the MXU at peak, element-wise FLOPs at the VPU rate, and the
+  per-FLOP time scales with the clamped mantissa width (the
+  transprecision-FPU assumption: latency tracks the bits actually
+  computed). Memory energy is bytes-moved / HBM bandwidth x TDP.
+  Structurally it is the static coefficient tensor with the EPI table
+  replaced by seconds x watts, so a population stays one einsum.
+
 Custom estimators register via :func:`register_estimator`; anything
 honouring the :class:`EnergyEstimator` protocol plugs into
-``explore(..., energy=...)``.
+``explore(..., energy=...)``. A factory marked ``needs_profile = True``
+receives the profile/family/site context (keyword-only, no precomputed
+coefficients) and builds its own coefficient view (``measured-power``
+does).
 """
 from __future__ import annotations
 
@@ -169,9 +181,44 @@ class DynamicEnergyEstimator:
         return fpu.mean(axis=1), mem
 
 
+@dataclasses.dataclass
+class MeasuredPowerEstimator(StaticEnergyEstimator):
+    """Roofline-timing estimator: pJ = seconds x TDP, affine in widths.
+
+    ``coeffs`` is a time-based coefficient tensor (built by the
+    ``measured-power`` factory), so ``baseline``/``population`` inherit
+    the static estimator's one-einsum evaluation; the per-site linear
+    terms model a transprecision FPU whose per-op latency scales with
+    the clamped mantissa width."""
+    name: str = "measured-power"
+
+
+def _measured_power_epi(op_class: str, dtype: str) -> float:
+    """pJ per full-width scalar FLOP: execution time x device TDP.
+    dot/conv stream through the MXU at peak; everything else runs at the
+    VPU's element-wise rate; transcendentals cost one VPU FLOP each (the
+    profiler already charges their polynomial expansion as FLOPs)."""
+    from repro.launch.roofline import PEAK_FLOPS, TDP_WATTS, VPU_FLOPS
+    rate = PEAK_FLOPS if op_class in ("dot", "conv") else VPU_FLOPS
+    return TDP_WATTS / rate * 1e12
+
+
+def _measured_power_factory(*, prof: Profile, family: str,
+                            sites: Sequence[str],
+                            target: str) -> MeasuredPowerEstimator:
+    from repro.launch.roofline import HBM_BW, TDP_WATTS
+    tcoeffs = energy_coeffs(prof, family, sites, target=target,
+                            epi_fn=_measured_power_epi,
+                            mem_pj_per_byte=TDP_WATTS / HBM_BW * 1e12)
+    return MeasuredPowerEstimator(tcoeffs)
+
+
+_measured_power_factory.needs_profile = True
+
 _ESTIMATORS: Dict[str, Callable[[EnergyCoeffs], EnergyEstimator]] = {
     "static": StaticEnergyEstimator,
     "dynamic": DynamicEnergyEstimator,
+    "measured-power": _measured_power_factory,
 }
 
 
@@ -202,7 +249,11 @@ def make_estimator(kind, prof: Optional[Profile] = None,
                          f"{sorted(_ESTIMATORS)}") from None
     if prof is None:
         raise ValueError("building a named estimator requires a Profile")
-    est = factory(energy_coeffs(prof, family, sites, target=target))
+    if getattr(factory, "needs_profile", False):
+        # builds its own coefficient view — don't waste a census pass
+        est = factory(prof=prof, family=family, sites=sites, target=target)
+    else:
+        est = factory(energy_coeffs(prof, family, sites, target=target))
     if (getattr(est, "needs_bit_census", False)
             and hasattr(est, "resid") and est.resid is None
             and not include_transcendental):

@@ -21,11 +21,16 @@ traced counters ride the evaluator's existing dispatch as one extra
 ``(n_channels,)`` output, vmapped per genome like everything else. Scan
 bodies thread their per-iteration counts out through the scan's stacked
 outputs and fold them (sum over iterations == the profiler's
-``length``-multiplied census); while/cond bodies cannot thread a value
-census out (data-dependent trip counts), so their governed FLOPs are
-charged the static genome-scaled bound ``numel * min(b, full)`` instead,
-at the profiler's trip estimate (one while iteration / largest branch) —
-keeping ``dyn <= static`` an equality for those FLOPs.
+``length``-multiplied census); while bodies thread one accumulator per
+channel through the **loop carry**, so data-dependent trip counts are
+measured too (note the static model charges whiles at the profiler's
+one-iteration estimate, so a multi-trip loop's measured energy may
+legitimately exceed its static charge). Cond branches and while *cond*
+bodies cannot thread a value census out (their only product is a branch
+index / loop predicate), so their governed FLOPs keep the static
+genome-scaled bound ``numel * min(b, full)`` — the largest branch for
+cond, one evaluation for the predicate — keeping ``dyn <= static`` an
+equality for those FLOPs.
 """
 from __future__ import annotations
 
@@ -317,10 +322,12 @@ class NeatInterpreter:
     def _static_census_jaxpr(self, jaxpr: jcore.Jaxpr,
                              stack: Tuple[str, ...], mult: int = 1) -> None:
         """Static census fallback for control-flow bodies the value
-        census cannot thread counts out of (while/cond): charge each
-        governed float eqn its static bound ``numel * min(b, full)``
-        manipulated bits — exactly its static-model term, so
-        ``dyn <= static`` holds with equality for these FLOPs. Keep
+        census cannot thread counts out of (cond branches, while *cond*
+        bodies — while bodies are measured through the loop carry):
+        charge each governed float eqn its static bound
+        ``numel * min(b, full)`` manipulated bits — exactly its
+        static-model term, so ``dyn <= static`` holds with equality for
+        these FLOPs. Keep
         primitive coverage and trip counts in sync with
         ``profiler._walk`` (one while iteration, the largest cond
         branch, ``length`` for nested scans) — the invariant assumes
@@ -388,24 +395,90 @@ class NeatInterpreter:
                 self.bit_counts.append(
                     jnp.int32(numel * mult) * jnp.asarray(bits, jnp.int32))
 
+    @staticmethod
+    def _while_acc_dtype(count_dtype):
+        """Accumulator dtype for one while-threaded census channel: a
+        float fold (a nested scan's degraded accumulator) stays float;
+        integer counts widen to int64 when the runtime has it, else stay
+        int32 (exact until 2^31 manipulated bits per channel — the trip
+        count is data-dependent, so no static bound can promote them the
+        way scan folds are promoted)."""
+        dt = jnp.dtype(count_dtype)
+        if jnp.issubdtype(dt, jnp.floating):
+            return dt
+        return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
     def _eval_while(self, eqn, invals, stack):
+        """While loops with the census threaded through the carry.
+
+        Counters minted inside the body join the loop carry as one
+        accumulator per channel, so data-dependent trip counts are
+        *measured* — each iteration folds its exact per-iteration census
+        into the running sum (under vmap, lanes whose predicate has
+        dropped keep their carry, so per-genome counts stop with their
+        own loop). Channel ``max_count`` stays the per-iteration bound
+        (no static trip multiplier exists). The cond body keeps the
+        static genome-scaled bound as its fallback: its only output is
+        the loop predicate, so no value census can thread out of it —
+        and a body that mints no channels (ungoverned) degenerates to
+        exactly the old behavior.
+
+        The counts measure the *compiled* loop's values; XLA's
+        value-changing loop fusions (mul+add -> fma) can flip low-order
+        mantissa bits relative to an eagerly-executed reference, so
+        full-precision trailing-zero counts carry a tiny
+        compilation-context sensitivity that reduced-width truncation
+        rounds away (tests/test_energy_dynamic.py pins the tolerance).
+        """
         p = eqn.params
         cn, bn = p["cond_nconsts"], p["body_nconsts"]
         cond_consts = invals[:cn]
         body_consts = invals[cn:cn + bn]
         init = tuple(invals[cn + bn:])
-        if self.collect_bits:
-            # data-dependent trip count: no value census; charge the
-            # static genome-scaled bound instead
-            self._static_census_jaxpr(p["cond_jaxpr"].jaxpr, stack)
-            self._static_census_jaxpr(p["body_jaxpr"].jaxpr, stack)
         cond_run = self._closed_runner(p["cond_jaxpr"], stack)
         body_run = self._closed_runner(p["body_jaxpr"], stack)
-        with self._suspend_census():
-            out = lax.while_loop(
-                lambda c: cond_run(*cond_consts, *c)[0],
-                lambda c: tuple(body_run(*body_consts, *c)),
-                init)
+        if not self.collect_bits:
+            with self._suspend_census():
+                out = lax.while_loop(
+                    lambda c: cond_run(*cond_consts, *c)[0],
+                    lambda c: tuple(body_run(*body_consts, *c)),
+                    init)
+            return list(out)
+
+        self._static_census_jaxpr(p["cond_jaxpr"].jaxpr, stack)
+        # pre-trace the body abstractly to mint the channel metadata: the
+        # accumulator carry structure must be known before while_loop
+        # traces. The pre-trace would double-record the FLOP census, so
+        # snapshot/restore it; its abstract counts are dropped (the real
+        # body trace re-mints both, idempotently, via the del marks).
+        cmark = len(self.bit_channels)
+        vmark = len(self.bit_counts)
+        census_snapshot = dict(self.census)
+        jax.eval_shape(lambda c: tuple(body_run(*body_consts, *c)), init)
+        self.census = census_snapshot
+        acc_dtypes = [self._while_acc_dtype(getattr(c, "dtype", jnp.int32))
+                      for c in self.bit_counts[vmark:]]
+        del self.bit_counts[vmark:]
+
+        def cond_fn(carry):
+            state, _ = carry
+            with self._suspend_census():   # already statically charged
+                return cond_run(*cond_consts, *state)[0]
+
+        def body_fn(carry):
+            state, accs = carry
+            del self.bit_channels[cmark:]
+            del self.bit_counts[vmark:]
+            outs = body_run(*body_consts, *state)
+            step = tuple(self.bit_counts[vmark:])
+            del self.bit_counts[vmark:]
+            new_accs = tuple(a + s.astype(dt) for a, s, dt
+                             in zip(accs, step, acc_dtypes))
+            return tuple(outs), new_accs
+
+        init_accs = tuple(jnp.zeros((), dt) for dt in acc_dtypes)
+        out, accs = lax.while_loop(cond_fn, body_fn, (init, init_accs))
+        self.bit_counts.extend(accs)
         return list(out)
 
     def _eval_cond(self, eqn, invals, stack):

@@ -27,8 +27,8 @@ from repro.utils.jax_compat import CompilerParams as _CompilerParams
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, kvl_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale, causal, window, kv_steps, block_q, block_k, q_offset,
+def _kernel(q_ref, k_ref, v_ref, kvl_ref, qs_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale, causal, window, kv_steps, block_q, block_k,
             pad_k, qk_bits, pv_bits, mode):
     kv_i = pl.program_id(2)
 
@@ -47,12 +47,14 @@ def _kernel(q_ref, k_ref, v_ref, kvl_ref, o_ref, m_ref, l_ref, acc_ref, *,
     if qk_bits < 24:
         s = _trunc_block(s, qk_bits, mode)      # NEAT: truncated logits
 
-    # causal / sliding-window mask; queries right-aligned against keys.
-    # q_offset maps query row i to its position in padded key coords
-    # ((tk - tq) + pad_k, both unpadded), so causal alignment survives
-    # query padding; key positions < pad_k are the zero left-pad keys.
+    # causal / sliding-window mask. qs_ref carries the per-row query
+    # offset in padded key coords: (tk - tq) + pad_k for the default
+    # right-aligned layout, or q_start[b] + pad_k when the caller places
+    # a query chunk at an explicit per-slot cache position. Either way
+    # causal alignment survives query padding; key positions < pad_k are
+    # the zero left-pad keys.
     q_pos = (pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 0)) + q_offset
+        jnp.int32, (block_q, block_k), 0)) + qs_ref[0, 0]
     k_pos = kv_i * block_k + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 1)
     mask = k_pos >= pad_k
@@ -90,14 +92,18 @@ def _kernel(q_ref, k_ref, v_ref, kvl_ref, o_ref, m_ref, l_ref, acc_ref, *,
                               "mode", "block_q", "block_k", "interpret"))
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            window: int | None = None,
-                           kv_len=None, qk_bits: int = 24,
+                           kv_len=None, q_start=None, qk_bits: int = 24,
                            pv_bits: int = 24, mode: str = "rne",
                            block_q: int = 128, block_k: int = 128,
                            interpret: bool | None = None):
     """q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D). Returns (B, Hq, Tq, D).
     ``kv_len`` ((B,) int32) optionally limits row b's attention to its
-    first ``kv_len[b]`` keys (ragged-slot prefix mask). ``interpret=None``
-    resolves from the backend (compiled on TPU)."""
+    first ``kv_len[b]`` keys (ragged-slot prefix mask). ``q_start``
+    ((B,) int32) optionally places row b's query chunk at absolute key
+    position ``q_start[b]`` (query i sits at ``q_start[b] + i``) instead
+    of the default right alignment — the chunked-prefill contract where a
+    (B, C, D) chunk attends causally against each slot's KV-cache prefix.
+    ``interpret=None`` resolves from the backend (compiled on TPU)."""
     interpret = default_interpret(interpret)
     b, hq, tq, d = q.shape
     _, hkv, tk, _ = k.shape
@@ -126,13 +132,16 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     kvl = (jnp.full((b,), tk, jnp.int32) if kv_len is None
            else kv_len.astype(jnp.int32))
     kvl3 = jnp.repeat(kvl + pk, hq).reshape(b * hq, 1)
+    # per-row query offset in padded key coords (right-aligned default)
+    qs = (jnp.full((b,), tk - tq, jnp.int32) if q_start is None
+          else q_start.astype(jnp.int32))
+    qs3 = jnp.repeat(qs + pk, hq).reshape(b * hq, 1)
 
     out = pl.pallas_call(
         functools.partial(
             _kernel, scale=scale, causal=causal, window=window,
             kv_steps=kv_steps, block_q=block_q, block_k=block_k,
-            q_offset=(tk - tq) + pk, pad_k=pk,
-            qk_bits=qk_bits, pv_bits=pv_bits, mode=mode),
+            pad_k=pk, qk_bits=qk_bits, pv_bits=pv_bits, mode=mode),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
@@ -140,6 +149,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
                          lambda h, qi, ki, g=group: (h // g, ki, 0)),
             pl.BlockSpec((1, block_k, d),
                          lambda h, qi, ki, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((1, 1), lambda h, qi, ki: (h, 0)),
             pl.BlockSpec((1, 1), lambda h, qi, ki: (h, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
@@ -152,6 +162,6 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(q3, k3, v3, kvl3)
+    )(q3, k3, v3, kvl3, qs3)
     out = out.reshape(b, hq, tqp, d)[:, :, :tq]
     return out

@@ -54,20 +54,25 @@ def quant_matmul(a: jnp.ndarray, b: jnp.ndarray, *, a_bits: int = 24,
 
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: int | None = None,
-                    kv_len: jnp.ndarray | None = None, qk_bits: int = 24,
+                    kv_len: jnp.ndarray | None = None,
+                    q_start: jnp.ndarray | None = None, qk_bits: int = 24,
                     pv_bits: int = 24, mode: str = "rne",
                     backend: str = "auto"):
     """``kv_len`` ((B,) int32, optional) masks each batch row to its first
     ``kv_len[b]`` keys — the ragged-slot prefix mask for continuous
-    batching (rows must not query beyond their own valid prefix)."""
+    batching (rows must not query beyond their own valid prefix).
+    ``q_start`` ((B,) int32, optional) places row b's queries at absolute
+    key positions ``q_start[b] + i`` — the chunked-prefill layout where a
+    (B, C, D) query chunk attends causally against each slot's KV-cache
+    prefix (pair it with ``kv_len = q_start + n_new``)."""
     be = _resolve(backend)
     if be == "ref":
         return _ref.flash_attention_ref(q, k, v, causal=causal,
                                         window=window, kv_len=kv_len,
-                                        qk_bits=qk_bits,
+                                        q_start=q_start, qk_bits=qk_bits,
                                         pv_bits=pv_bits, mode=mode)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                  kv_len=kv_len,
+                                  kv_len=kv_len, q_start=q_start,
                                   qk_bits=qk_bits, pv_bits=pv_bits,
                                   mode=mode, interpret=_interp(be))
 

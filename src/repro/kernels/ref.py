@@ -41,15 +41,19 @@ def _mant(x) -> int:
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         *, causal: bool = True, window: int | None = None,
                         kv_len: jnp.ndarray | None = None,
+                        q_start: jnp.ndarray | None = None,
                         qk_bits: int = 24, pv_bits: int = 24,
                         mode: str = "rne") -> jnp.ndarray:
     """Oracle for kernels.flash_attention.
 
     q: (B, Hq, Tq, D), k/v: (B, Hkv, Tk, D) with Hq % Hkv == 0 (GQA).
     ``kv_len`` ((B,) int32) optionally limits row b to its first
-    ``kv_len[b]`` keys (ragged-slot prefix mask; undefined for query rows
-    entirely beyond their prefix). Optional NEAT truncation of the QK^T
-    logits and the PV product.
+    ``kv_len[b]`` keys (ragged-slot prefix mask). ``q_start`` ((B,)
+    int32) optionally places row b's queries at absolute key positions
+    ``q_start[b] + i`` (the chunked-prefill layout) instead of right
+    alignment. Query rows whose mask admits no key return zeros,
+    matching the kernel's zero-denominator guard. Optional NEAT
+    truncation of the QK^T logits and the PV product.
     """
     b, hq, tq, d = q.shape
     hkv = k.shape[1]
@@ -61,20 +65,23 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         kk.astype(jnp.float32)) * scale
     if qk_bits < 24:
         logits = truncate_mantissa(logits, qk_bits, mode)
+    # one mask path for both layouts: right alignment is q_start=tk-tq
     tk = k.shape[2]
-    qpos = jnp.arange(tq)[:, None] + (tk - tq)   # right-aligned queries
-    kpos = jnp.arange(tk)[None, :]
-    mask = jnp.ones((tq, tk), bool)
+    qs = (jnp.full((b,), tk - tq, jnp.int32) if q_start is None
+          else q_start.astype(jnp.int32))
+    qpos = qs[:, None, None] + jnp.arange(tq)[None, :, None]
+    kpos = jnp.arange(tk)[None, None, :]
+    bmask = jnp.ones((b, tq, tk), bool)
     if causal:
-        mask &= kpos <= qpos
+        bmask &= kpos <= qpos
     if window is not None:
-        mask &= kpos > qpos - window
+        bmask &= kpos > qpos - window
     if kv_len is not None:
-        bmask = mask[None] & (kpos[None] < kv_len[:, None, None])
-        logits = jnp.where(bmask[:, None], logits, -jnp.inf)
-    else:
-        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+        bmask &= kpos < kv_len[:, None, None]
+    logits = jnp.where(bmask[:, None], logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
+    # rows with no admissible key: 0, not NaN (kernel's l==0 guard)
+    p = jnp.where(jnp.any(bmask, -1, keepdims=True)[:, None], p, 0.0)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
     if pv_bits < 24:
         out = truncate_mantissa(out, pv_bits, mode)

@@ -25,6 +25,13 @@ from typing import Dict, Optional
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 ICI_BW = 50e9                # bytes/s / link
+#: per-chip power envelope, watts (documented estimate — Google quotes
+#: ~2x perf/W over v4; the absolute TDP is not published). Feeds the
+#: measured-power energy estimator (time x TDP).
+TDP_WATTS = 170.0
+#: element-wise throughput: the 8x128 VPU sustains a small fraction of
+#: the MXU's matmul peak (documented estimate)
+VPU_FLOPS = PEAK_FLOPS / 16
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

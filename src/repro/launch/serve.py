@@ -37,6 +37,10 @@ def main() -> None:
     ap.add_argument("--admission", default="fifo", choices=("fifo", "sjf"),
                     help="queue admission order: arrival (fifo) or "
                          "shortest-prompt-first (sjf)")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk size for the continuous engine "
+                         "(tokens ingested per slot per compiled step; "
+                         "1 = legacy streaming prefill)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -54,7 +58,8 @@ def main() -> None:
     engine = DecodeEngine(model, params,
                           ServeConfig(max_len=128, batch_slots=args.slots,
                                       engine=args.engine,
-                                      admission=args.admission),
+                                      admission=args.admission,
+                                      prefill_chunk=args.chunk),
                           rule=rule)
     prompts = [[(7 * i + 3) % cfg.vocab_size for _ in range(4)]
                for i in range(args.prompts)]
@@ -63,7 +68,9 @@ def main() -> None:
         print(f"[serve] prompt {i}: {len(o)} tokens -> {o[:8]}...")
     st = engine.stats
     print(f"[serve] engine={args.engine} steps={st.steps} "
-          f"occupancy={st.occupancy:.2f} tokens={st.tokens_out}")
+          f"occupancy={st.occupancy:.2f} tokens={st.tokens_out} "
+          f"prefill_tokens={st.prefill_tokens} "
+          f"mean_ttft={st.mean_ttft_s * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,9 @@ from repro.models.layers import init_linear, init_norm, linear, norm, rotary
 NEG_INF = -1e30
 
 
-def _sdpa_scan(q, k, v, *, causal: bool, window, block_q: int, kv_len=None):
+def _sdpa_scan(q, k, v, *, causal: bool, window, block_q: int, kv_len=None,
+               q_start=None, qk_bits: int = 24, pv_bits: int = 24,
+               mode: str = "rne"):
     """Memory-efficient attention: lax.scan over q blocks with an
     in-scan remat body — peak temp is one (B, H, bq, Tk) logits block and
     the backward recomputes it per block (flash semantics in pure jnp;
@@ -39,25 +41,43 @@ def _sdpa_scan(q, k, v, *, causal: bool, window, block_q: int, kv_len=None):
     kg = k.reshape(b, hkv, 1, tk, d)
     vg = v.reshape(b, hkv, 1, tk, d)
 
+    # one mask path for both layouts: right alignment == per-row offset
+    # tk - tq (q_start rows carry their own cache positions). The offset
+    # ignores the query padding — padded rows sit at the END of the
+    # array (positions >= tk, garbage, sliced off), so real query i
+    # keeps its unpadded position tk - tq + i. (The previous
+    # tk - (tq + pad) offset shifted every real query left by the pad,
+    # silently tightening the causal mask whenever block_q ∤ tq.)
+    qs = (jnp.full((b,), tk - tq, jnp.int32) if q_start is None
+          else q_start.astype(jnp.int32))
+
     def body(carry, xs):
         qblk, start = xs                       # (B,Hq,bq,D), scalar
         qr = qblk.reshape(b, hkv, group, bq, d)
         s = jnp.einsum("bhgqd,bhukd->bhgqk", qr.astype(jnp.float32),
                        kg.astype(jnp.float32)) * scale
-        qpos = start + jnp.arange(bq)[:, None] + (tk - (tq + pad))
-        kpos = jnp.arange(tk)[None, :]
-        mask = jnp.ones((bq, tk), bool)
+        if qk_bits < 24:            # fused NEAT truncation (kernel parity)
+            from repro.utils.numerics import truncate_mantissa
+            s = truncate_mantissa(s, qk_bits, mode)
+        qpos = qs[:, None, None] + start + jnp.arange(bq)[None, :, None]
+        kpos = jnp.arange(tk)[None, None, :]
+        bmask = jnp.ones((b, bq, tk), bool)
         if causal:
-            mask &= kpos <= qpos
+            bmask &= kpos <= qpos
         if window is not None:
-            mask &= kpos > qpos - window
+            bmask &= kpos > qpos - window
         if kv_len is not None:      # per-row valid-KV prefix (ragged slots)
-            bmask = mask[None] & (kpos[None] < kv_len[:, None, None])
-            s = jnp.where(bmask[:, None, None], s, NEG_INF)
-        else:
-            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            bmask &= kpos < kv_len[:, None, None]
+        s = jnp.where(bmask[:, None, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
+        # rows with no admissible key: 0, not a uniform average (matches
+        # the kernel's zero-denominator guard and the jnp oracle)
+        p = jnp.where(jnp.any(bmask, -1, keepdims=True)[:, None, None],
+                      p, 0.0)
         o = jnp.einsum("bhgqk,bhukd->bhgqd", p, vg.astype(jnp.float32))
+        if pv_bits < 24:
+            from repro.utils.numerics import truncate_mantissa
+            o = truncate_mantissa(o, pv_bits, mode)
         return carry, o.reshape(b, hq, bq, d).astype(q.dtype)
 
     _, outs = jax.lax.scan(jax.checkpoint(body), 0, (qb, starts))
@@ -65,19 +85,25 @@ def _sdpa_scan(q, k, v, *, causal: bool, window, block_q: int, kv_len=None):
     return out[:, :, :tq]
 
 
-def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool, kv_len=None):
+def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool, kv_len=None,
+          q_start=None, qk_bits: int = 24, pv_bits: int = 24,
+          mode: str = "rne"):
     backend = cfg.kernel_backend
+    bits = dict(qk_bits=qk_bits, pv_bits=pv_bits, mode=mode)
     if backend in ("pallas", "interpret"):
         return kops.flash_attention(q, k, v, causal=causal,
                                     window=cfg.sliding_window,
-                                    kv_len=kv_len, backend=backend)
+                                    kv_len=kv_len, q_start=q_start,
+                                    backend=backend, **bits)
     tq, tk = q.shape[2], k.shape[2]
     if max(tq, tk) <= 2 * cfg.attn_block_q:
         return kops.flash_attention(q, k, v, causal=causal,
                                     window=cfg.sliding_window,
-                                    kv_len=kv_len, backend="ref")
+                                    kv_len=kv_len, q_start=q_start,
+                                    backend="ref", **bits)
     return _sdpa_scan(q, k, v, causal=causal, window=cfg.sliding_window,
-                      block_q=cfg.attn_block_q, kv_len=kv_len)
+                      block_q=cfg.attn_block_q, kv_len=kv_len,
+                      q_start=q_start, **bits)
 
 
 def init_attention(key, cfg: ModelConfig):
@@ -221,6 +247,73 @@ def decode_attention(p, x, cfg: ModelConfig, layer_cache, pos
             out = jnp.einsum("bkgs,bskd->bkgd", w, cv.astype(jnp.float32))
             out = quantize_here(out, "dot").astype(x.dtype)
         out = out.reshape(b, 1, h * dh)
+        with pscope("out_proj"):
+            y = linear(p["wo"], out)
+    return y, {"k": ck, "v": cv}
+
+
+def _ambient_dot_bits() -> Tuple[int, int, str]:
+    """Resolve the active NEAT rule at the current scope stack to the
+    flash kernel's fused ``(qk_bits, pv_bits, mode)``. The decode path
+    enforces the rule with an explicit ``quantize_here(scores, "dot")``
+    before its softmax; the chunked path fuses its softmax inside the
+    kernel, so the same truncation must ride the kernel's NEAT hooks —
+    otherwise chunked prefill and streaming decode diverge under a
+    reduced-precision serving rule. Identity (24 bits) with no rule."""
+    from repro.core.quantize import active_rule
+    from repro.core.scope import current_stack
+    rule = active_rule()
+    if rule is None:
+        return 24, 24, "rne"
+    fpi = rule.select(current_stack(), "dot", jnp.dtype(jnp.float32))
+    bits = min(int(fpi.mantissa_bits(jnp.dtype(jnp.float32))), 24)
+    return bits, bits, getattr(fpi, "mode", "rne")
+
+
+def prefill_attention(p, x, cfg: ModelConfig, layer_cache, pos, n_new
+                      ) -> Tuple[jnp.ndarray, dict]:
+    """Chunked prefill: ingest a multi-token chunk per slot. x: (B, C, D);
+    cache k/v: (B, S, KV, Dh); pos: (B,) int32 per-slot write starts;
+    n_new: (B,) int32 valid tokens per slot (1 <= n_new <= C).
+
+    Writes each slot's first ``n_new[b]`` K/V rows at positions
+    ``pos[b] .. pos[b]+n_new[b]-1`` (columns beyond ``n_new`` scatter out
+    of bounds and are dropped, so the cache only ever holds ingested
+    tokens and a near-``max_len`` write cannot clamp onto earlier
+    entries), gives column i the RoPE phase ``pos[b]+i``, and attends the
+    whole chunk causally against the slot's cache prefix through the
+    flash kernel's ``q_start``/``kv_len`` path. Output columns at or
+    beyond ``n_new[b]`` are garbage (their K/V never lands in the cache,
+    so the garbage stays column-local); callers read column
+    ``n_new[b]-1``. The single-token decode path is unchanged —
+    ``prefill_attention(..., n_new=1)`` matches ``decode_attention`` up
+    to kernel-vs-einsum float reordering.
+    """
+    b, c, _ = x.shape
+    with pscope("attn"):
+        pos = _broadcast_pos(pos, b)
+        n_new = _broadcast_pos(n_new, b)
+        offs = jnp.arange(c, dtype=jnp.int32)
+        positions = pos[:, None] + offs[None, :]          # (B, C) phases
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        s_len = layer_cache["k"].shape[1]
+        idx = jnp.where(offs[None, :] < n_new[:, None],
+                        pos[:, None] + offs[None, :], s_len)
+        write = lambda cb, u, i: cb.at[i].set(u, mode="drop")
+        ck = jax.vmap(write)(layer_cache["k"],
+                             k.astype(layer_cache["k"].dtype), idx)
+        cv = jax.vmap(write)(layer_cache["v"],
+                             v.astype(layer_cache["v"].dtype), idx)
+        qh = q.transpose(0, 2, 1, 3)                      # (B, H, C, Dh)
+        kh = ck.transpose(0, 2, 1, 3)                     # (B, KV, S, Dh)
+        vh = cv.transpose(0, 2, 1, 3)
+        with pscope("sdpa"):
+            qk_bits, pv_bits, mode = _ambient_dot_bits()
+            out = _sdpa(qh, kh, vh, cfg, causal=True,
+                        kv_len=pos + n_new, q_start=pos,
+                        qk_bits=qk_bits, pv_bits=pv_bits, mode=mode)
+            out = quantize_here(out, "dot")
+        out = out.transpose(0, 2, 1, 3).reshape(b, c, -1)
         with pscope("out_proj"):
             y = linear(p["wo"], out)
     return y, {"k": ck, "v": cv}

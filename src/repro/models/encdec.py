@@ -132,6 +132,39 @@ def reset_slots(cfg: ModelConfig, cache, mask):
     return new
 
 
+def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig,
+                  memory: jnp.ndarray | None = None):
+    """Chunked decoder prefill: the (B, C) chunk runs batched through
+    each decoder layer — self-attention against the slot's KV prefix via
+    the flash kernel's ``q_start`` path, cross-attention over the cached
+    encoder memory. Returns each slot's last-valid-column logits and the
+    cache advanced by ``n_new`` per slot."""
+    from repro.models.prefill import broadcast_n_new, gather_last_logits
+    memory = cache["memory"] if memory is None else memory
+    b, c = tokens.shape
+    pos = cache["pos"]
+    n_new = broadcast_n_new(n_new, b)
+    with pscope("model"), pscope("decoder"):
+        x = embedding(params["embed"], tokens, cfg.compute_dtype)
+        new_layers = []
+        for i, layer in enumerate(params["decoder"]):
+            with pscope(f"dec{i:02d}"):
+                h = norm(layer["attn_norm"], x, cfg.norm)
+                y, lc = attn_mod.prefill_attention(
+                    layer["attn"], h, cfg, cache["layers"][i], pos, n_new)
+                x = x + y
+                new_layers.append(lc)
+                h = norm(layer["cross_norm"], x, cfg.norm)
+                x = x + attn_mod.cross_attention(layer["cross"], h, memory,
+                                                 cfg)
+                h = norm(layer["ffn_norm"], x, cfg.norm)
+                x = x + mlp(layer["mlp"], h, cfg)
+        x = norm(params["final_norm"], x, cfg.norm)
+        logits = unembed(params["head"], x, tied=False)
+    return (gather_last_logits(logits, n_new),
+            {"layers": new_layers, "pos": pos + n_new, "memory": memory})
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig,
                 memory: jnp.ndarray | None = None):
     """Single-token decode against cached self-attn KV + encoder memory."""

@@ -165,6 +165,17 @@ def reset_slots(cfg: ModelConfig, cache, mask):
     }
 
 
+def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig):
+    """Chunked prefill: the Mamba backbone is stateful per token, so the
+    chunk is scanned on-device (one compiled ``lax.scan`` of the decode
+    cell, per-slot ``n_new`` state masking) — the shared attention
+    block's KV cache advances inside the same scan."""
+    from repro.models.prefill import masked_scan_prefill
+    return masked_scan_prefill(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
+        n_new)
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig):
     period = max(cfg.attn_period, 1)
     pos = cache["pos"]

@@ -20,6 +20,9 @@ class Model:
     init_cache: Callable           # (batch, max_len) -> cache
     decode_step: Callable          # (params, cache, tokens) -> (logits, cache)
     reset_slots: Callable          # (cache, (B,) bool mask) -> cache
+    #: chunked prefill: (params, cache, (B, C) tokens, (B,) n_new) ->
+    #: ((B, 1, V) last-valid-column logits, cache advanced by n_new)
+    prefill_chunk: Callable
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -42,6 +45,8 @@ def build_model(cfg: ModelConfig) -> Model:
         init_cache=lambda b, s: mod.init_cache(cfg, b, s),
         decode_step=lambda p, c, tok: mod.decode_step(p, c, tok, cfg),
         reset_slots=lambda c, m: mod.reset_slots(cfg, c, m),
+        prefill_chunk=lambda p, c, tok, n: mod.prefill_chunk(p, c, tok, n,
+                                                             cfg),
     )
 
 

@@ -1,0 +1,65 @@
+"""Shared chunked-prefill machinery for the serving engine.
+
+Attention families ingest a (B, C) token chunk through one batched
+``prefill_attention`` call per layer (the flash kernel's ``q_start``
+path). Recurrent / state-space families have no parallel form for their
+streaming decode cell, so they scan the chunk **on-device**: one
+``lax.scan`` of the family's single-token decode step over the chunk's
+columns, inside one compiled dispatch, instead of round-tripping to the
+host per token. Columns at or beyond a slot's ``n_new`` leave that
+slot's state untouched (a masked merge), which is what makes mixed
+prefill/decode batches — and ragged chunk tails — safe.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def broadcast_n_new(n_new, batch: int) -> jnp.ndarray:
+    """Normalize a per-slot valid-token count to (B,) int32 (a scalar
+    broadcasts, mirroring the cache's position-vector convention)."""
+    return jnp.broadcast_to(jnp.atleast_1d(
+        jnp.asarray(n_new, jnp.int32)), (batch,))
+
+
+def gather_last_logits(logits: jnp.ndarray, n_new: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """(B, C, V) chunk logits -> (B, 1, V) logits of each slot's last
+    *valid* column (``n_new[b] - 1``) — the one the engine samples."""
+    idx = (n_new.astype(jnp.int32) - 1)[:, None, None]
+    return jnp.take_along_axis(logits, idx, axis=1)
+
+
+def masked_scan_prefill(decode_step: Callable, params, cache,
+                        tokens: jnp.ndarray, n_new: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, dict]:
+    """Chunked prefill by scanning a single-token decode cell.
+
+    ``decode_step(params, cache, (B, 1) tokens) -> (logits, cache)`` is
+    the family's streaming step; ``tokens``: (B, C); ``n_new``: (B,)
+    valid tokens per slot. Column i's state update is kept only for
+    slots with ``i < n_new[b]`` (every cache leaf carries the slot axis
+    first), so the scan is arithmetically identical to streaming each
+    slot's valid tokens through ``decode_step`` one dispatch at a time —
+    greedy parity with the streaming engine is bit-exact. Returns the
+    (B, 1, V) logits of each slot's last valid column and the new cache.
+    """
+    b, c = tokens.shape
+    n_new = broadcast_n_new(n_new, b)
+
+    def step(carry, xs):
+        tok, col = xs                               # (B,), scalar
+        logits, new_cache = decode_step(params, carry, tok[:, None])
+        keep = col < n_new                          # (B,)
+        merged = jax.tree.map(
+            lambda n, o: jnp.where(
+                keep.reshape((b,) + (1,) * (n.ndim - 1)), n, o),
+            new_cache, carry)
+        return merged, logits[:, 0]                 # (B, V)
+
+    cache, seq = jax.lax.scan(
+        step, cache, (tokens.T, jnp.arange(c, dtype=jnp.int32)))
+    return gather_last_logits(seq.transpose(1, 0, 2), n_new), cache

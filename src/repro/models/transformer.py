@@ -149,6 +149,57 @@ def _decode_block(layer, lc, x, pos, cfg: ModelConfig, i: int,
     return x, new_lc
 
 
+def _prefill_block(layer, lc, x, pos, n_new, cfg: ModelConfig, i: int,
+                   moe_impl: str):
+    with pscope(f"layer{i:02d}" if not cfg.scan_layers else "layer"):
+        h = norm(layer["attn_norm"], x, cfg.norm)
+        y, new_lc = attn_mod.prefill_attention(layer["attn"], h, cfg, lc,
+                                               pos, n_new)
+        x = x + y
+        h = norm(layer["ffn_norm"], x, cfg.norm)
+        if cfg.family == "moe":
+            x = x + moe_ffn(layer["moe"], h, cfg, impl=moe_impl)
+        else:
+            x = x + mlp(layer["mlp"], h, cfg)
+    return x, new_lc
+
+
+def prefill_chunk(params, cache, tokens: jnp.ndarray, n_new: jnp.ndarray,
+                  cfg: ModelConfig, *, moe_impl: str | None = None
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """Chunked prefill: ingest a (B, C) token chunk, each slot writing its
+    first ``n_new[b]`` tokens' K/V at its own position and attending the
+    chunk causally against its cache prefix (the flash kernel's
+    ``q_start`` path). Returns the (B, 1, V) logits of each slot's last
+    valid column and the cache advanced by ``n_new`` per slot."""
+    from repro.models.prefill import broadcast_n_new, gather_last_logits
+    moe_impl = moe_impl or cfg.moe_impl
+    b, c = tokens.shape
+    pos = cache["pos"]
+    n_new = broadcast_n_new(n_new, b)
+    with pscope("model"):
+        x = embedding(params["embed"], tokens, cfg.compute_dtype)
+        if cfg.scan_layers:
+            def body(y, xs):
+                layer, lc = xs
+                y, new_lc = _prefill_block(layer, lc, y, pos, n_new, cfg,
+                                           0, moe_impl)
+                return y, new_lc
+            x, new_layers = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+        else:
+            new_layers = []
+            for i, layer in enumerate(params["layers"]):
+                x, lc = _prefill_block(layer, cache["layers"][i], x, pos,
+                                       n_new, cfg, i, moe_impl)
+                new_layers.append(lc)
+        x = norm(params["final_norm"], x, cfg.norm)
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = unembed(head, x, cfg.tie_embeddings)
+    return (gather_last_logits(logits, n_new),
+            {"layers": new_layers, "pos": pos + n_new})
+
+
 def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
                 *, moe_impl: str | None = None) -> Tuple[jnp.ndarray, dict]:
     """One decode step. tokens: (B, 1) -> (logits (B, 1, V), new cache).

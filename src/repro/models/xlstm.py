@@ -337,6 +337,18 @@ def reset_slots(cfg: ModelConfig, cache, mask):
     return {"blocks": blocks, "pos": jnp.where(mask, 0, cache["pos"])}
 
 
+def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig):
+    """Chunked prefill for the recurrent stack: no parallel form exists
+    for the streaming cells (sLSTM's R h_{t-1} term forbids it), so the
+    chunk is scanned on-device — one compiled ``lax.scan`` of the decode
+    cell over the chunk's columns with per-slot ``n_new`` state masking —
+    instead of one host dispatch per token."""
+    from repro.models.prefill import masked_scan_prefill
+    return masked_scan_prefill(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
+        n_new)
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig):
     kinds = block_kinds(cfg)
     with pscope("model"):

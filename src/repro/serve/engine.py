@@ -1,36 +1,47 @@
 """Decode engine: prefill + greedy/temperature decode against the model's
 KV cache, with NEAT placement support for reduced-precision serving.
 
-Two schedulers share one compiled (batch, 1)-token step function:
+Two schedulers share one compiled (batch, 1)-token decode step; the
+continuous scheduler additionally runs a compiled **chunked-prefill**
+step:
 
 * **continuous** (default): the KV cache carries a per-slot position
   vector, so the engine is a scheduler loop — admit queued requests into
-  free slots *mid-flight*, stream each slot's prompt left-aligned at its
-  own position (prefill), retire on EOS/budget, and immediately refill.
-  A retired slot is reset (its KV entries and position zeroed) before
-  reuse, and per-slot causal masking keys every slot on its own length,
-  so a recycled slot can never attend to the previous request's KV
-  entries. No wave barrier, no fresh-cache restarts.
+  free slots *mid-flight*, ingest each slot's remaining prompt in
+  ``prefill_chunk``-token blocks through one compiled
+  ``Model.prefill_chunk`` call (attention families batch the chunk
+  through the flash kernel's ``q_start`` path; recurrent families scan
+  it on-device), retire on EOS/budget, and immediately refill. Steps are
+  **mixed**: slots mid-prefill consume chunks while decoding slots emit
+  one token in the same dispatch, ragged tails masked via per-slot
+  ``n_new``/``kv_len``. Once no slot is prefilling the engine drops back
+  to the cheap (batch, 1) decode step. A retired slot is reset (its KV
+  entries and position zeroed) before reuse, and per-slot causal masking
+  keys every slot on its own length, so a recycled slot can never attend
+  to the previous request's KV entries. No wave barrier, no fresh-cache
+  restarts. ``prefill_chunk=1`` degenerates to streaming prefill (the
+  baseline the chunked path is benchmarked against).
 
 * **wave**: the historical scheduler — requests are packed into fixed
-  slots wave by wave and a finished wave pulls the next requests from the
-  queue; slots idle once their request finishes until the whole wave
-  drains. Kept as the parity reference: under greedy decoding both
-  schedulers produce identical per-request completions.
-
-Prefill is real in both: every prompt token is stepped through the
-compiled decode step, so the KV cache holds the whole prompt and
-completions condition on all of it.
+  slots wave by wave, every prompt token streamed through the decode
+  step, and a finished wave pulls the next requests from the queue.
+  Kept as the parity reference: under greedy decoding both schedulers
+  produce identical per-request completions.
 
 Both schedulers admit from one queue whose order is the configured
-admission policy — ``"fifo"`` (arrival) or ``"sjf"`` (shortest prompt
-first) — and every request carries its own ``max_new`` budget
+admission policy — ``"fifo"`` (arrival) or ``"sjf"`` (fewest remaining
+prefill *steps* first: ``ceil(len(tail) / prefill_chunk)`` for the
+continuous engine, the raw tail length for the streaming wave
+scheduler) — and every request carries its own ``max_new`` budget
 (``generate(prompts, max_new_tokens=[...])``; an int broadcasts).
+``ServeStats`` tracks per-request time-to-first-token alongside the
+step/occupancy accounting.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Union
+import time
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,26 +60,40 @@ class ServeConfig:
     eos_token: Optional[int] = None
     seed: int = 0
     engine: str = "continuous"        # "continuous" | "wave"
-    #: queue admission order: "fifo" (arrival) or "sjf" (shortest prompt
+    #: queue admission order: "fifo" (arrival) or "sjf" (shortest job
     #: first — short requests stop convoying behind long prefills; a
-    #: stable sort keeps arrival order among equal lengths). Completions
+    #: stable sort keeps arrival order among equal keys). The sjf key is
+    #: the post-chunking remaining-prefill length: the number of compiled
+    #: prefill steps the admitted tail will actually consume. Completions
     #: are returned in request order either way, and greedy outputs are
     #: admission-order independent.
     admission: str = "fifo"
+    #: tokens each prefilling slot ingests per compiled step (continuous
+    #: engine only; 1 = legacy streaming prefill, token by token)
+    prefill_chunk: int = 32
 
 
 @dataclasses.dataclass
 class ServeStats:
-    """Occupancy accounting for the last ``generate`` call."""
-    steps: int = 0                    # compiled decode-step dispatches
+    """Occupancy + latency accounting for the last ``generate`` call."""
+    steps: int = 0                    # compiled step dispatches
     active_slot_steps: int = 0        # slot-steps spent on a live request
     slot_steps: int = 0               # steps * batch_slots
     tokens_out: int = 0               # completion tokens emitted
     n_requests: int = 0
+    prefill_steps: int = 0            # steps where >= 1 slot ate a chunk
+    prefill_tokens: int = 0           # prompt tokens ingested
+    #: per-request time-to-first-token, seconds since generate() started
+    ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
 
     @property
     def occupancy(self) -> float:
         return self.active_slot_steps / max(self.slot_steps, 1)
+
+    @property
+    def mean_ttft_s(self) -> float:
+        return (sum(self.ttft_s.values()) / len(self.ttft_s)
+                if self.ttft_s else 0.0)
 
 
 class DecodeEngine:
@@ -78,6 +103,8 @@ class DecodeEngine:
             raise ValueError(f"unknown engine {cfg.engine!r}")
         if cfg.admission not in ("fifo", "sjf"):
             raise ValueError(f"unknown admission policy {cfg.admission!r}")
+        if cfg.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -86,6 +113,11 @@ class DecodeEngine:
         with use_rule(rule):
             self._step = jax.jit(
                 lambda p, c, t: model.decode_step(p, c, t))
+            # the chunked-prefill step: (B, C) tokens + per-slot n_new in
+            # one dispatch (mixed prefill/decode); compiled lazily, so
+            # wave engines never pay for it
+            self._chunk_step = jax.jit(
+                lambda p, c, t, n: model.prefill_chunk(p, c, t, n))
             # donate the cache: the reset runs on the admit hot path and
             # the caller always rebinds, so XLA may update it in place
             # instead of copying every layer's (B, S, KV, Dh) buffers
@@ -121,11 +153,22 @@ class DecodeEngine:
             raise ValueError("per-request max_new budgets must be >= 1")
         return budgets
 
+    def _prefill_stride(self) -> int:
+        """Prompt tokens one compiled step ingests per slot: the chunk
+        size for the continuous engine, 1 for the streaming wave path."""
+        return (self.cfg.prefill_chunk if self.cfg.engine == "continuous"
+                else 1)
+
     def _admission_order(self, queue: List[tuple]) -> List[tuple]:
         """Apply the configured admission policy to a (rid, prompt, budget)
-        queue. ``sjf`` sorts by prompt length, stably."""
+        queue. ``sjf`` sorts by the post-chunking remaining-prefill
+        length — the compiled prefill steps the admitted tail will
+        consume, ``ceil(len / prefill_stride)`` — stably, so chunked
+        prefill doesn't misorder on sub-chunk length differences that
+        cost identical step counts."""
         if self.cfg.admission == "sjf":
-            return sorted(queue, key=lambda e: len(e[1]))
+            stride = self._prefill_stride()
+            return sorted(queue, key=lambda e: -(-len(e[1]) // stride))
         return list(queue)
 
     def generate(self, prompts: List[List[int]],
@@ -133,14 +176,15 @@ class DecodeEngine:
                  ) -> List[List[int]]:
         """Serve a list of token prompts; returns completions per prompt.
         ``max_new_tokens`` is a global ceiling (int) or one budget per
-        request. ``self.stats`` holds step/occupancy accounting."""
+        request. ``self.stats`` holds step/occupancy/TTFT accounting."""
         self.stats = ServeStats(n_requests=len(prompts))
+        self._t0 = time.perf_counter()
         outputs: dict[int, List[int]] = {i: [] for i in range(len(prompts))}
         budgets = self._budgets(prompts, max_new_tokens)
         key = jax.random.key(self.cfg.seed)
         with use_rule(self.rule):
             # both schedulers admit the cache-truncated prompt tails, so
-            # the sjf sort key is the length actually prefilled
+            # the sjf sort key is computed on the length actually prefilled
             queue = self._admission_order(
                 [(rid, self._prompt_tail(p, budgets[rid]), budgets[rid])
                  for rid, p in enumerate(prompts)])
@@ -155,19 +199,27 @@ class DecodeEngine:
         self.stats.tokens_out = sum(len(o) for o in outputs.values())
         return [outputs[i] for i in range(len(prompts))]
 
+    def _first_token(self, rid: int) -> None:
+        """Record time-to-first-token the moment a request's first
+        completion token lands."""
+        if rid not in self.stats.ttft_s:
+            self.stats.ttft_s[rid] = time.perf_counter() - self._t0
+
     # -- continuous scheduler ------------------------------------------------
     def _run_continuous(self, queue, outputs, key):
-        """One scheduler loop over the compiled step: admit the ordered
-        (rid, prompt-tail, budget) queue into free slots, prefill each
-        slot at its own position, retire on EOS/budget and refill
-        mid-flight while other slots keep decoding."""
+        """One scheduler loop over the compiled steps: admit the ordered
+        (rid, prompt-tail, budget) queue into free slots, ingest each
+        slot's remaining prompt in ``prefill_chunk``-token blocks (mixed
+        with single-token decodes for slots already past prefill), retire
+        on EOS/budget and refill mid-flight while other slots keep
+        working."""
         cfg = self.cfg
         n_slots = cfg.batch_slots
+        chunk = cfg.prefill_chunk
         cache = self.model.init_cache(n_slots, cfg.max_len)
-        cur = np.zeros((n_slots, 1), np.int32)
         rid = [-1] * n_slots              # -1 = free slot
-        prompt = [[0]] * n_slots
-        ppos = [0] * n_slots              # index of the token in `cur`
+        rem: List[List[int]] = [[] for _ in range(n_slots)]  # prompt left
+        cur = [0] * n_slots               # next decode token per slot
         left = [0] * n_slots              # completion tokens still owed
         spos = [0] * n_slots              # slot's own cache position
 
@@ -177,16 +229,45 @@ class DecodeEngine:
             admit = np.zeros((n_slots,), bool)
             for s in range(n_slots):
                 if rid[s] < 0 and queue:
-                    rid[s], prompt[s], budget = queue.pop(0)
-                    ppos[s], spos[s] = 0, 0
+                    rid[s], prompt, budget = queue.pop(0)
+                    rem[s] = list(prompt)
                     left[s] = budget
-                    cur[s, 0] = prompt[s][0]
+                    spos[s] = 0
                     admit[s] = True
             if admit.any():
                 cache = self._reset(cache, jnp.asarray(admit))
 
             key, sub = jax.random.split(key)
-            logits, cache = self._step(self.params, cache, jnp.asarray(cur))
+            took = [0] * n_slots
+            if any(rid[s] >= 0 and rem[s] for s in range(n_slots)):
+                # mixed chunked step: prefilling slots eat a chunk,
+                # decoding slots ride along with n_new == 1
+                toks = np.zeros((n_slots, chunk), np.int32)
+                n_new = np.ones((n_slots,), np.int32)
+                for s in range(n_slots):
+                    if rid[s] < 0:
+                        continue
+                    if rem[s]:
+                        take = rem[s][:chunk]
+                        took[s] = len(take)
+                        n_new[s] = len(take)
+                        toks[s, :len(take)] = take
+                        self.stats.prefill_tokens += len(take)
+                    else:
+                        toks[s, 0] = cur[s]
+                logits, cache = self._chunk_step(
+                    self.params, cache, jnp.asarray(toks),
+                    jnp.asarray(n_new))
+                self.stats.prefill_steps += 1
+            else:
+                # pure decode step: the cheap (B, 1) path
+                toks = np.zeros((n_slots, 1), np.int32)
+                n_new = np.ones((n_slots,), np.int32)
+                for s in range(n_slots):
+                    if rid[s] >= 0:
+                        toks[s, 0] = cur[s]
+                logits, cache = self._step(self.params, cache,
+                                           jnp.asarray(toks))
             nxt = np.asarray(self._sample(logits, sub))
             self.stats.steps += 1
 
@@ -194,21 +275,25 @@ class DecodeEngine:
                 if rid[s] < 0:
                     continue
                 self.stats.active_slot_steps += 1
-                spos[s] += 1
-                if ppos[s] + 1 < len(prompt[s]):
-                    ppos[s] += 1                      # still prefilling
-                    cur[s, 0] = prompt[s][ppos[s]]
-                    continue
-                tok = int(nxt[s])                     # prompt fully in cache
+                spos[s] += int(n_new[s])
+                if took[s]:
+                    rem[s] = rem[s][took[s]:]
+                    if rem[s]:
+                        continue              # still prefilling next step
+                # prompt fully in cache: the sample is a completion token
+                # (for a slot that just drained its prompt, the chunk's
+                # last valid column produced it — first token for free)
+                tok = int(nxt[s])
+                self._first_token(rid[s])
                 outputs[rid[s]].append(tok)
                 left[s] -= 1
                 if (left[s] <= 0
                         or (cfg.eos_token is not None
                             and tok == cfg.eos_token)
                         or spos[s] >= cfg.max_len - 1):
-                    rid[s] = -1                       # retire; refill next step
+                    rid[s] = -1               # retire; refill next step
                 else:
-                    cur[s, 0] = tok
+                    cur[s] = tok
 
     # -- wave scheduler (parity reference) -----------------------------------
     def _run_wave(self, wave, outputs, key):
@@ -240,10 +325,13 @@ class DecodeEngine:
             for s in range(len(wave)):
                 if done[s]:
                     continue
+                if pos < len(prompts[s]):
+                    self.stats.prefill_tokens += 1
                 if pos + 1 < len(prompts[s]):
                     cur[s, 0] = prompts[s][pos + 1]   # still prefilling
                     continue
                 tok = int(nxt[s])                     # prompt fully in cache
+                self._first_token(rids[s])
                 outputs[rids[s]].append(tok)
                 left[s] -= 1
                 if left[s] <= 0 or (cfg.eos_token is not None

@@ -157,23 +157,69 @@ def test_heterogeneous_input_shapes_fold_per_signature():
                                           ev.last_bit_counts_list[i][p])
 
 
-def test_while_cond_bodies_keep_static_charge():
-    """Governed FLOPs inside while/cond bodies cannot thread a value
-    census out (data-dependent trip counts); they must be charged their
-    static genome-scaled bound instead — for an app whose governed FLOPs
-    all live in such bodies, dynamic == static exactly, and the host
-    reference agrees."""
+def test_cond_bodies_keep_static_charge():
+    """Governed FLOPs inside cond branches cannot thread a value census
+    out (the branch produces values, but which branch ran is data-
+    dependent); they must be charged the largest branch's static
+    genome-scaled bound — for an app whose governed FLOPs all live in
+    cond branches, dynamic == static exactly, and the host reference
+    agrees."""
+    def fn(x):
+        with pscope("branch"):
+            y = jax.lax.cond(jnp.sum(x) > 0,
+                             lambda v: v * jnp.float32(2.0),
+                             lambda v: v + jnp.float32(1.0), x)
+        return y
+
+    rng = np.random.default_rng(5)
+    inputs = [(jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),)]
+    task = ExplorationTask(name="br", fn=fn, train_inputs=inputs,
+                           test_inputs=[])
+    prof = profile(task.fn, *inputs[0])
+    sites = sites_for_family(prof, "cip", 3)
+    exact = [jax.tree.map(np.asarray, task.fn(*inp)) for inp in inputs]
+    ev = PopulationEvaluator(task, "cip", sites, pop_hint=2,
+                             collect_bits=True)
+    genomes = [(5,) * len(sites), (24,) * len(sites)]
+    ev.errors_matrix(genomes, inputs, exact)
+    dyn = make_estimator("dynamic", prof, "cip", sites, target=task.target)
+    stat = make_estimator("static", prof, "cip", sites, target=task.target)
+    df, _ = dyn.population(genomes, evaluator=ev)
+    sf, _ = stat.population(genomes)
+    np.testing.assert_allclose(df, sf, rtol=1e-9)
+    assert host_device_parity(task, "cip", sites, dyn, ev, genomes,
+                              inputs) < 1e-6
+
+
+def test_while_bodies_measured_via_carry():
+    """While bodies thread their census through the loop carry: the
+    data-dependent trip count is *measured*, not charged the profiler's
+    one-iteration static bound — so a 3-trip loop's dynamic FPU energy
+    exceeds the 1-trip static charge.
+
+    Parity caveat: a while body only ever executes compiled, and XLA's
+    value-changing loop fusions (mul+add -> fma) differ between the
+    device's whole-program compile, the host reference's standalone loop
+    compile, and eager unrolled execution — so *full-precision*
+    trailing-zero counts can disagree in low-order bits across the
+    three. Reduced-width genomes truncate those bits away (exact
+    equality); full-width parity is asserted to a documented 5e-3."""
+    trips = 3
+
     def fn(x):
         with pscope("loop"):
             def body(c):
                 i, v = c
                 return i + 1, v * jnp.float32(1.5) + x
-            _, y = jax.lax.while_loop(lambda c: c[0] < 3, body,
+            _, y = jax.lax.while_loop(lambda c: c[0] < trips, body,
                                       (jnp.int32(0), x))
-        with pscope("branch"):
-            y = jax.lax.cond(jnp.sum(y) > 0,
-                             lambda v: v * jnp.float32(2.0),
-                             lambda v: v + jnp.float32(1.0), y)
+        return y
+
+    def unrolled(x):
+        with pscope("loop"):
+            y = x
+            for _ in range(trips):
+                y = y * jnp.float32(1.5) + x
         return y
 
     rng = np.random.default_rng(5)
@@ -188,10 +234,69 @@ def test_while_cond_bodies_keep_static_charge():
     genomes = [(5,) * len(sites), (24,) * len(sites)]
     ev.errors_matrix(genomes, inputs, exact)
     dyn = make_estimator("dynamic", prof, "cip", sites, target=task.target)
+    assert host_device_parity(task, "cip", sites, dyn, ev, genomes,
+                              inputs) < 5e-3
+
+    # the measured loop census == the loop unrolled by hand: bit-exact at
+    # the truncated genome, fma-fusion-tolerant at full width
+    from repro.core.energy import dynamic_fpu_energy
+    from repro.core.interpreter import capture_bit_census
+    from repro.core.placement import rule_from_genome
+    for g, rel in ((genomes[0], 1e-12), (genomes[1], 5e-3)):
+        rule = rule_from_genome("cip", sites, g, target=task.target,
+                                mode=task.mode)
+        _, rec_w = capture_bit_census(fn, rule, "cip", sites,
+                                      target=task.target)(*inputs[0])
+        _, rec_u = capture_bit_census(unrolled, rule, "cip", sites,
+                                      target=task.target)(*inputs[0])
+        assert dynamic_fpu_energy(rec_w) == pytest.approx(
+            dynamic_fpu_energy(rec_u), rel=rel)
+
+    # at the truncated genome the rounding absorbs fusion differences:
+    # device accumulators equal the host records exactly, channel by
+    # channel, and equal trips x the per-iteration census
+    rule = rule_from_genome("cip", sites, genomes[0], target=task.target,
+                            mode=task.mode)
+    _, recs = capture_bit_census(fn, rule, "cip", sites,
+                                 target=task.target)(*inputs[0])
+    np.testing.assert_array_equal(
+        np.asarray([r.count for r in recs]),
+        np.asarray(ev.last_bit_counts_list[0][0]))
+
+    # trip counts measured, not bounded: 3 trips of real values dwarf the
+    # profiler's single-iteration static estimate
     stat = make_estimator("static", prof, "cip", sites, target=task.target)
     df, _ = dyn.population(genomes, evaluator=ev)
     sf, _ = stat.population(genomes)
-    np.testing.assert_allclose(df, sf, rtol=1e-9)
+    assert np.all(df > sf)
+
+
+def test_ungoverned_while_bodies_keep_old_path():
+    """A while whose body mints no census channel (integer-only work)
+    threads an empty accumulator tuple — the old behavior, exactly: the
+    loop runs, the census is untouched, and host/device still agree on
+    the surrounding governed ops."""
+    def fn(x):
+        with pscope("count"):
+            n, _ = jax.lax.while_loop(
+                lambda c: c[0] < 4,
+                lambda c: (c[0] + 1, c[1]),
+                (jnp.int32(0), jnp.int32(7)))
+        with pscope("scale"):
+            return x * (1.0 + 0.1 * n.astype(jnp.float32))
+
+    rng = np.random.default_rng(11)
+    inputs = [(jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),)]
+    task = ExplorationTask(name="uw", fn=fn, train_inputs=inputs,
+                           test_inputs=[])
+    prof = profile(task.fn, *inputs[0])
+    sites = sites_for_family(prof, "cip", 2)
+    exact = [jax.tree.map(np.asarray, task.fn(*inp)) for inp in inputs]
+    ev = PopulationEvaluator(task, "cip", sites, pop_hint=1,
+                             collect_bits=True)
+    genomes = [(8,) * len(sites)]
+    ev.errors_matrix(genomes, inputs, exact)
+    dyn = make_estimator("dynamic", prof, "cip", sites, target=task.target)
     assert host_device_parity(task, "cip", sites, dyn, ev, genomes,
                               inputs) < 1e-6
 
@@ -330,6 +435,39 @@ def test_estimator_registry_and_errors(bs_setup):
     est2 = make_estimator("dynamic2", prof, "cip", sites)
     assert est2.needs_bit_census
     assert est2.name == "dynamic2"
+
+
+def test_measured_power_estimator_serial_path(bs_setup):
+    """The third registrant: per-op roofline time x device TDP. Width-
+    monotone, baseline-consistent, and the serial explorer path ranks on
+    it exactly like the batched path (it is census-free, so both paths
+    reduce to the same einsum)."""
+    task, prof, sites, exact = bs_setup
+    est = make_estimator("measured-power", prof, "cip", sites,
+                         target=task.target)
+    assert est.name == "measured-power"
+    assert not est.needs_bit_census
+    genomes = [(4,) * len(sites), (12,) * len(sites), (24,) * len(sites)]
+    fpu, mem = est.population(genomes)
+    # transprecision timing: wider mantissas -> more seconds -> more J
+    assert np.all(np.diff(fpu) > 0) and np.all(np.diff(mem) > 0)
+    # the full-width genome reproduces the identity baseline
+    np.testing.assert_allclose(fpu[-1], est.baseline().fpu_pj, rtol=1e-12)
+    # MXU-rate charges differ from the paper's EPI table: the static and
+    # measured-power estimators disagree on absolute pJ
+    stat = make_estimator("static", prof, "cip", sites, target=task.target)
+    assert not np.allclose(fpu, stat.population(genomes)[0])
+
+    kw = dict(family="cip", n_sites=4, pop_size=6, n_gen=1, max_evals=10,
+              seed=0, robustness=False)
+    rep_b = explore(task, energy="measured-power", **kw)
+    rep_s = explore(task, energy="measured-power", batched=False, **kw)
+    assert rep_b.energy_estimator == "measured-power"
+    front_b = {p.payload["genome"]: p.energy for p in rep_b.hull}
+    front_s = {p.payload["genome"]: p.energy for p in rep_s.hull}
+    assert set(front_b) == set(front_s)
+    for g in front_b:
+        assert front_b[g] == pytest.approx(front_s[g], rel=1e-6)
 
 
 def test_custom_estimator_drives_serial_path(bs_setup):

@@ -96,6 +96,104 @@ def test_flash_attention_ragged_kv_len(causal, t):
                                    np.asarray(sl), atol=3e-5, rtol=1e-4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 16])
+def test_flash_attention_q_start(dtype, window):
+    """The chunked-prefill layout: a (B, H, C, D) query chunk placed at
+    per-row cache positions ``q_start`` attends causally against each
+    row's ``kv_len``-prefix. Kernel == oracle, and each row equals the
+    right-aligned kernel path on its own prefix slice (queries = the
+    prefix's last C positions) — the two mask paths are one contract."""
+    b, hq, hkv, c, s, d = 3, 4, 2, 8, 70, 32
+    tol = dict(atol=3e-5, rtol=1e-4) if dtype == jnp.float32 \
+        else dict(atol=3e-2, rtol=3e-2)
+    q = jnp.asarray(RNG.standard_normal((b, hq, c, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), dtype)
+    q_start = jnp.asarray([0, 5, 61], jnp.int32)
+    n_new = jnp.asarray([8, 8, 3], jnp.int32)     # ragged chunk tails
+    kv_len = q_start + n_new
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              kv_len=kv_len, q_start=q_start,
+                              backend="interpret")
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                   kv_len=kv_len, q_start=q_start)
+    assert not np.any(np.isnan(np.asarray(got, np.float32)))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+    # per-row semantic check against the pre-existing right-aligned path
+    for row in range(b):
+        n = int(n_new[row])
+        hi = int(kv_len[row])
+        sl = ops.flash_attention(q[row:row + 1, :, :n],
+                                 k[row:row + 1, :, :hi],
+                                 v[row:row + 1, :, :hi], causal=True,
+                                 window=window, backend="interpret")
+        np.testing.assert_allclose(np.asarray(got[row:row + 1, :, :n],
+                                              np.float32),
+                                   np.asarray(sl, np.float32), **tol)
+
+
+def test_flash_attention_q_start_defaults_to_right_alignment():
+    """q_start = tk - tq reproduces the default layout exactly, and rows
+    whose mask admits no key come back as zeros (not NaN) from kernel
+    and oracle alike."""
+    b, h, tq, tk, d = 2, 2, 16, 64, 16
+    q = jnp.asarray(RNG.standard_normal((b, h, tq, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, h, tk, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, h, tk, d)), jnp.float32)
+    base = ops.flash_attention(q, k, v, causal=True, backend="interpret")
+    qs = jnp.full((b,), tk - tq, jnp.int32)
+    aligned = ops.flash_attention(q, k, v, causal=True, q_start=qs,
+                                  backend="interpret")
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(aligned))
+    # kv_len == 0 masks every key for row 0: zeros, no NaN poisoning
+    kv_len = jnp.asarray([0, tk], jnp.int32)
+    got = ops.flash_attention(q, k, v, causal=True, q_start=qs,
+                              kv_len=kv_len, backend="interpret")
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_start=qs,
+                                   kv_len=kv_len)
+    assert np.all(np.asarray(got[0]) == 0) and np.all(
+        np.asarray(want[0]) == 0)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_sdpa_scan_matches_oracle():
+    """The jnp scanned-flash fallback (models/attention.py::_sdpa_scan,
+    the big-T training path) obeys the same contract as the kernel and
+    oracle: right-aligned and q_start layouts, windows, ragged kv_len,
+    fused truncation, zero rows for empty masks — including query
+    lengths the q-block does NOT divide (the padded tail used to shift
+    every real query's causal mask left by the pad)."""
+    from repro.models.attention import _sdpa_scan
+    b, hq, hkv, d = 2, 4, 2, 16
+    cases = [
+        (33, 77, None, None, None, 24),    # block_q does not divide tq
+        (64, 64, 16, None, None, 24),
+        (64, 128, None, [100, 70], None, 24),
+        (8, 70, 8, [11, 40], [3, 32], 24),  # chunked-prefill layout
+        (33, 77, None, None, None, 7),      # fused NEAT truncation
+        (33, 77, 16, [60, 77], None, 24),   # rows with no valid key
+    ]
+    for tq, tk, window, kvl, qs, bits in cases:
+        q = jnp.asarray(RNG.standard_normal((b, hq, tq, d)), jnp.float32)
+        k = jnp.asarray(RNG.standard_normal((b, hkv, tk, d)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((b, hkv, tk, d)), jnp.float32)
+        kv_len = None if kvl is None else jnp.asarray(kvl, jnp.int32)
+        q_start = None if qs is None else jnp.asarray(qs, jnp.int32)
+        got = _sdpa_scan(q, k, v, causal=True, window=window, block_q=16,
+                         kv_len=kv_len, q_start=q_start, qk_bits=bits,
+                         pv_bits=bits)
+        want = ref.flash_attention_ref(q, k, v, causal=True,
+                                       window=window, kv_len=kv_len,
+                                       q_start=q_start, qk_bits=bits,
+                                       pv_bits=bits)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=1e-4,
+                                   err_msg=f"case {(tq, tk, window)}")
+
+
 def test_flash_attention_fused_truncation():
     b, hq, hkv, t, d = 1, 2, 1, 64, 16
     q = jnp.asarray(RNG.standard_normal((b, hq, t, d)), jnp.float32)

@@ -186,12 +186,13 @@ def test_sjf_admission_matches_fifo_greedy():
 
 
 def test_sjf_admits_short_prompts_first():
-    """SJF really reorders: the admission queue comes out length-sorted
-    (stably), and on the skewed workload the wave scheduler packs
-    similar-length prompts together — strictly fewer compiled steps than
-    FIFO packing (waves stop idling behind one long prefill)."""
+    """SJF really reorders: the wave queue (streaming prefill, stride 1)
+    comes out length-sorted (stably), and on the skewed workload the wave
+    scheduler packs similar-length prompts together — strictly fewer
+    compiled steps than FIFO packing (waves stop idling behind one long
+    prefill)."""
     model, params = _tiny("codeqwen1.5-7b")
-    eng = _engine(model, params, "continuous", admission="sjf")
+    eng = _engine(model, params, "wave", admission="sjf")
     q = eng._admission_order([(i, p, 3) for i, p in enumerate(PROMPTS)])
     assert [len(p) for _, p, _ in q] == sorted(len(p) for p in PROMPTS)
     assert q[0][0] == 4                      # the single-token prompt
@@ -202,6 +203,28 @@ def test_sjf_admits_short_prompts_first():
     assert fifo.generate(PROMPTS, max_new_tokens=6) == \
         sjf.generate(PROMPTS, max_new_tokens=6)
     assert sjf.stats.steps < fifo.stats.steps
+
+
+def test_sjf_key_is_post_chunking_prefill_steps():
+    """The continuous engine's SJF key is the *post-chunking* remaining-
+    prefill length (compiled prefill steps, ceil(len/chunk)), not the raw
+    tail length: prompts whose prefill costs the same number of chunk
+    steps keep arrival order, while genuinely costlier prefills still
+    sort later."""
+    model, params = _tiny("codeqwen1.5-7b")
+    eng = _engine(model, params, "continuous", admission="sjf",
+                  prefill_chunk=8)
+    q = eng._admission_order([(i, p, 3) for i, p in enumerate(PROMPTS)])
+    steps = [-(-len(p) // 8) for _, p, _ in q]
+    assert steps == sorted(steps)
+    # every prompt but [3]*12 and [6]*9 fits one 8-token chunk: those two
+    # sort last, everything else keeps arrival order (stable sort)
+    assert [e[0] for e in q] == [0, 1, 3, 4, 5, 7, 2, 6]
+    # with chunk 1 the key degenerates to the raw length (streaming)
+    eng1 = _engine(model, params, "continuous", admission="sjf",
+                   prefill_chunk=1)
+    q1 = eng1._admission_order([(i, p, 3) for i, p in enumerate(PROMPTS)])
+    assert [len(p) for _, p, _ in q1] == sorted(len(p) for p in PROMPTS)
 
 
 def test_per_request_budgets():
