@@ -23,13 +23,26 @@ Reads the ``BENCH_*.json`` files emitted by ``benchmarks.run`` and fails
   per-token dispatches into 3), with greedy completions identical to the
   wave reference; the chunked/streaming prefill *step* counts must also
   differ by >= the same factor (the deterministic form of the TTFT win).
+* serve-paged: the paged pool + packed prefill must beat the rectangle
+  path by >= ``MIN_PAGED_SPEEDUP`` tokens/sec at fixed KV memory, admit
+  >= ``MIN_PAGED_CONCURRENCY`` x the contiguous slot cap concurrently,
+  keep resident pages at or below the pool (the memory-ceiling claim),
+  and reproduce the rectangle engine's greedy completions exactly.
 
-Wall-clock numbers (us, tokens/sec) are reported but not gated except
-for the serve-prefill TTFT ratio, whose expected margin dwarfs CI
-runner noise — dispatch counts, step counts and parity bits are exact
-for a fixed seed/workload.
+On top of the absolute gates, every artifact with a **committed
+baseline** (``benchmarks/baselines/BENCH_*.json``) is compared against
+it with a tolerance: deterministic count fields (steps, dispatches) may
+grow at most ``BASELINE_COUNT_TOL``; relative speedup fields may shrink
+to at most ``BASELINE_RATIO_TOL`` of the recorded value. Raw wall-clock
+fields (us, tokens/sec) are never baseline-gated — CI runners differ —
+only ratios of two same-run measurements and exact counts are. Refresh
+the baselines in the same PR as an intentional perf change:
+
+  PYTHONPATH=src python -m benchmarks.run --only explorer,serve \
+      --json-dir benchmarks/baselines
 
   python -m benchmarks.check_smoke [--json-dir .]
+      [--baseline-dir benchmarks/baselines]
 """
 from __future__ import annotations
 
@@ -40,9 +53,30 @@ import sys
 
 MIN_SERVE_SPEEDUP = 1.5
 MIN_TTFT_SPEEDUP = 2.0             # chunked vs streaming prefill
+MIN_PAGED_SPEEDUP = 1.3            # paged+packed vs rectangle, fixed KV
+MIN_PAGED_CONCURRENCY = 2.0        # peak active vs contiguous slot cap
 MAX_DISPATCH_RATIO = 0.25          # batched <= serial / 4
 MAX_DYNAMIC_EXTRA_DISPATCHES = 2   # dynamic objective <= static + 2
 DYNAMIC_HOST_DEVICE_RTOL = 1e-6
+
+# baseline gating: counts may regress by 10%, ratios keep 75% of the
+# recorded win (CI noise headroom; the absolute gates still apply)
+BASELINE_COUNT_TOL = 1.10
+BASELINE_RATIO_TOL = 0.75
+#: derived fields gated against the committed baseline, by direction:
+#: "le" = current <= baseline * BASELINE_COUNT_TOL (deterministic
+#: counts), "ge" = current >= baseline * BASELINE_RATIO_TOL (relative
+#: speedups). Everything else (wall clock, memory high-water marks that
+#: only have absolute gates) is reported, not baseline-gated.
+BASELINE_GATES = {
+    "steps": "le",
+    "prefill_steps": "le",
+    "batched": "le",
+    "dynamic": "le",
+    "speedup": "ge",
+    "ttft_speedup": "ge",
+    "concurrency": "ge",
+}
 
 
 def _rows(path: str) -> dict:
@@ -132,15 +166,87 @@ def check_serve_prefill(path: str) -> list:
     return errs
 
 
+def check_serve_paged(path: str) -> list:
+    rows = _rows(path)
+    errs = []
+    speed = float(_field(rows["serve_paged_speedup"], "speedup")
+                  .rstrip("x"))
+    if speed < MIN_PAGED_SPEEDUP:
+        errs.append(f"paged-serve speedup regression: {speed:.2f}x < "
+                    f"{MIN_PAGED_SPEEDUP}x over the rectangle path at "
+                    "fixed KV memory")
+    conc = float(_field(rows["serve_paged_speedup"], "concurrency")
+                 .rstrip("x"))
+    if conc < MIN_PAGED_CONCURRENCY:
+        errs.append(f"paged-serve concurrency regression: {conc:.2f}x < "
+                    f"{MIN_PAGED_CONCURRENCY}x the contiguous slot cap "
+                    "at fixed KV memory")
+    peak = int(_field(rows["serve_paged"], "peak_pages"))
+    pool = int(_field(rows["serve_paged"], "pool"))
+    if peak > pool:
+        errs.append(f"paged-serve memory ceiling broken: "
+                    f"{peak} resident pages > pool of {pool}")
+    if _field(rows["serve_paged_speedup"], "parity") != "True":
+        errs.append("paged-serve parity regression: paged != rectangle "
+                    "greedy completions")
+    return errs
+
+
+def _gate_value(raw: str):
+    try:
+        return float(raw.rstrip("x"))
+    except ValueError:
+        return None
+
+
+def check_baseline(path: str, base_path: str) -> list:
+    """Compare one artifact's gated derived fields against the committed
+    baseline (see BASELINE_GATES). Rows or fields absent from either
+    side are skipped — baselines only tighten, never block, new rows."""
+    rows, base = _rows(path), _rows(base_path)
+    errs = []
+    fname = os.path.basename(base_path)
+    for rname, derived in base.items():
+        if rname not in rows:
+            continue
+        for part in derived.split(";"):
+            if "=" not in part:
+                continue
+            key, raw = part.split("=", 1)
+            gate = BASELINE_GATES.get(key)
+            want = _gate_value(raw)
+            if gate is None or want is None:
+                continue
+            try:
+                got = _gate_value(_field(rows[rname], key))
+            except KeyError:
+                continue
+            if got is None:
+                continue
+            if gate == "le" and got > want * BASELINE_COUNT_TOL:
+                errs.append(
+                    f"{fname}:{rname}:{key} regressed vs baseline: "
+                    f"{got:g} > {want:g} * {BASELINE_COUNT_TOL}")
+            if gate == "ge" and got < want * BASELINE_RATIO_TOL:
+                errs.append(
+                    f"{fname}:{rname}:{key} regressed vs baseline: "
+                    f"{got:g} < {want:g} * {BASELINE_RATIO_TOL}")
+    return errs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json-dir", default=".")
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "baselines"))
     args = ap.parse_args()
 
     checks = [("BENCH_explorer_pop.json", check_explorer),
               ("BENCH_explorer-dynamic.json", check_explorer_dynamic),
               ("BENCH_serve.json", check_serve),
-              ("BENCH_serve-prefill.json", check_serve_prefill)]
+              ("BENCH_serve-prefill.json", check_serve_prefill),
+              ("BENCH_serve-paged.json", check_serve_paged)]
     errs = []
     for fname, fn in checks:
         path = os.path.join(args.json_dir, fname)
@@ -149,14 +255,17 @@ def main() -> None:
                         "--only explorer,serve succeed?")
             continue
         errs.extend(fn(path))
+        base = os.path.join(args.baseline_dir, fname)
+        if os.path.exists(base):
+            errs.extend(check_baseline(path, base))
 
     if errs:
         for e in errs:
             print(f"[check_smoke] FAIL: {e}", file=sys.stderr)
         raise SystemExit(1)
     print("[check_smoke] OK: dispatch counts, Pareto parity, dynamic-"
-          "energy host/device agreement, serve speedup and chunked-"
-          "prefill TTFT within bounds")
+          "energy host/device agreement, serve/chunked-prefill/paged "
+          "speedups and the baseline comparison within bounds")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ def main() -> None:
         ("explorer-dynamic", explorer_bench.explorer_dynamic),
         ("serve", serve_bench.serve_throughput),
         ("serve-prefill", serve_bench.serve_prefill),
+        ("serve-paged", serve_bench.serve_paged),
         ("fig04", paper_figs.fig04_flop_breakdown),
         ("fig05_06", paper_figs.fig05_06_wp_vs_cip),
         ("fig07", paper_figs.fig07_memory_savings),

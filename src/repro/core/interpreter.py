@@ -25,12 +25,15 @@ outputs and fold them (sum over iterations == the profiler's
 channel through the **loop carry**, so data-dependent trip counts are
 measured too (note the static model charges whiles at the profiler's
 one-iteration estimate, so a multi-trip loop's measured energy may
-legitimately exceed its static charge). Cond branches and while *cond*
-bodies cannot thread a value census out (their only product is a branch
-index / loop predicate), so their governed FLOPs keep the static
-genome-scaled bound ``numel * min(b, full)`` — the largest branch for
-cond, one evaluation for the predicate — keeping ``dyn <= static`` an
-equality for those FLOPs.
+legitimately exceed its static charge). Cond branches are **measured by
+branch**: every branch's channels join the union suffix and the
+``lax.switch`` selects the taken branch's exact counts (zeros for the
+others), replacing the old static largest-branch bound — so, like
+whiles, a taken branch bigger than the static model's
+most-equations branch can legitimately exceed its static charge. Only
+while *cond* bodies keep the static genome-scaled bound
+``numel * min(b, full)`` (their sole product is the loop predicate —
+no value census can thread out).
 """
 from __future__ import annotations
 
@@ -322,9 +325,11 @@ class NeatInterpreter:
     def _static_census_jaxpr(self, jaxpr: jcore.Jaxpr,
                              stack: Tuple[str, ...], mult: int = 1) -> None:
         """Static census fallback for control-flow bodies the value
-        census cannot thread counts out of (cond branches, while *cond*
-        bodies — while bodies are measured through the loop carry):
-        charge each governed float eqn its static bound
+        census cannot thread counts out of (while *cond* bodies — while
+        bodies are measured through the loop carry and cond branches
+        through the switch's union counts vector; nested conds *inside*
+        a while-cond body stay static, largest branch, via the cond
+        case below): charge each governed float eqn its static bound
         ``numel * min(b, full)`` manipulated bits — exactly its
         static-model term, so ``dyn <= static`` holds with equality for
         these FLOPs. Keep
@@ -482,16 +487,86 @@ class NeatInterpreter:
         return list(out)
 
     def _eval_cond(self, eqn, invals, stack):
+        """Cond with **measured** per-branch censuses.
+
+        Each branch is pre-traced abstractly to mint its channel
+        metadata (exactly the while-body approach); the union of all
+        branches' channels becomes this cond's channel suffix, and each
+        ``lax.switch`` branch returns, alongside its outputs, the union
+        counts vector — its own segment measured, every other branch's
+        segment zero. Selecting by the (data-dependent) branch index
+        therefore selects the *taken* branch's exact census, replacing
+        the old static largest-branch bound. Under vmap (the population
+        evaluator) a batched index lowers to select-of-all-branches, so
+        each genome lane keeps the census of the branch *it* took.
+
+        Caveat (mirrors the while-loop one): the static model still
+        charges the branch with the most equations, so a taken branch
+        whose governed FLOPs exceed that branch's can push measured
+        energy above the static charge — dyn <= static remains a
+        convention of the static model's branch choice, not an
+        invariant the measurement enforces. The while *cond* body keeps
+        its static charge (its only product is the predicate)."""
         branches = eqn.params["branches"]
         index, *ops = invals
-        if self.collect_bits:
-            br = max(branches, key=lambda b: len(b.jaxpr.eqns))
-            self._static_census_jaxpr(br.jaxpr, stack)
         fns = [self._closed_runner(br, stack) for br in branches]
-        with self._suspend_census():   # branch censuses would differ
-            out = lax.switch(index,
-                             [lambda *a, f=f: tuple(f(*a)) for f in fns],
-                             *ops)
+        if not self.collect_bits:
+            with self._suspend_census():
+                return list(lax.switch(
+                    index, [lambda *a, f=f: tuple(f(*a)) for f in fns],
+                    *ops))
+
+        # pre-trace every branch to mint the union channel metadata;
+        # abstract counts are dropped (the real switch trace re-mints
+        # them idempotently via the del marks), and the pre-trace must
+        # not double-record the FLOP census
+        cmark = len(self.bit_channels)
+        vmark = len(self.bit_counts)
+        census_snapshot = dict(self.census)
+        seg_channels: List[List[BitChannel]] = []
+        seg_dtypes: List[List] = []
+        for f in fns:
+            sub_cmark = len(self.bit_channels)
+            jax.eval_shape(lambda *a, f=f: tuple(f(*a)), *ops)
+            seg_channels.append(list(self.bit_channels[sub_cmark:]))
+            seg_dtypes.append([
+                self._while_acc_dtype(getattr(c, "dtype", jnp.int32))
+                for c in self.bit_counts[vmark:]])
+            del self.bit_counts[vmark:]
+        self.census = census_snapshot
+        del self.bit_channels[cmark:]
+        union = [ch for seg in seg_channels for ch in seg]
+        # one shared accumulator dtype per union slot (a branch only
+        # fills its own segment; zeros elsewhere)
+        union_dtypes = [dt for seg in seg_dtypes for dt in seg]
+        offsets = np.cumsum([0] + [len(s) for s in seg_channels])
+
+        def branch_fn(j, f):
+            def run(*a):
+                del self.bit_channels[cmark:]
+                del self.bit_counts[vmark:]
+                outs = f(*a)
+                step = list(self.bit_counts[vmark:])
+                del self.bit_counts[vmark:]
+                counts = [jnp.zeros((), dt) for dt in union_dtypes]
+                for k, c in enumerate(step):
+                    counts[offsets[j] + k] = c.astype(
+                        union_dtypes[offsets[j] + k])
+                return tuple(outs), tuple(counts)
+            return run
+
+        # collect_bits must stay on inside the switch trace (the branch
+        # bodies mint the measured counters); the FLOP census records
+        # every traced branch, exactly like the collect_bits=False path
+        # (_record is not gated by collect_bits), so the diagnostic is
+        # mode-independent
+        out, counts = lax.switch(
+            index, [branch_fn(j, f) for j, f in enumerate(fns)], *ops)
+        # drop the last-traced branch's re-mints; install the union
+        del self.bit_channels[cmark:]
+        del self.bit_counts[vmark:]
+        self.bit_channels.extend(union)
+        self.bit_counts.extend(counts)
         return list(out)
 
     # -- census ----------------------------------------------------------------

@@ -9,5 +9,6 @@ from repro.kernels.ops import (
     mantissa_trunc,
     quant_matmul,
     flash_attention,
+    paged_flash_attention,
     bit_census,
 )

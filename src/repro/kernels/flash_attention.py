@@ -10,6 +10,17 @@ HBM traffic.
 Layout: q (BH, Tq, D), kv (BHkv, Tk, D); grid (BH, Tq/bq, Tk/bk) with the
 KV dim innermost ("arbitrary") carrying running max / denominator /
 accumulator scratch.
+
+**Paged variant** (``paged_flash_attention_pallas``): K/V live in a
+shared physical pool ``(num_pages, page_size, Hkv, D)`` and each batch
+row owns a ``(max_pages,)`` block table mapping its logical prefix onto
+pool pages. The table rides as a scalar-prefetch argument
+(``pltpu.PrefetchScalarGridSpec``) so the KV BlockSpec's index map
+resolves the *physical* page per grid step — the kernel body is the
+same online-softmax loop, streaming one page per KV step, and the
+``kv_len``/``q_start`` mask contract is unchanged (logical key position
+``page_slot * page_size + offset``). Unallocated table entries are
+clamped to a valid page and masked off by ``kv_len``.
 """
 from __future__ import annotations
 
@@ -165,3 +176,99 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     )(q3, k3, v3, kvl3, qs3)
     out = out.reshape(b, hq, tqp, d)[:, :, :tq]
     return out
+
+
+def _paged_kernel(tbl_ref, q_ref, k_ref, v_ref, kvl_ref, qs_ref, o_ref,
+                  m_ref, l_ref, acc_ref, **kw):
+    # the block table only steers the KV BlockSpec index maps; the body
+    # is the same online-softmax loop as the contiguous kernel
+    _kernel(q_ref, k_ref, v_ref, kvl_ref, qs_ref, o_ref, m_ref, l_ref,
+            acc_ref, **kw)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "qk_bits", "pv_bits",
+                              "mode", "block_q", "interpret"))
+def paged_flash_attention_pallas(q, k_pool, v_pool, block_tables, *,
+                                 causal: bool = True,
+                                 window: int | None = None,
+                                 kv_len=None, q_start=None,
+                                 qk_bits: int = 24, pv_bits: int = 24,
+                                 mode: str = "rne", block_q: int = 128,
+                                 interpret: bool | None = None):
+    """Flash attention over a paged KV pool.
+
+    q: (B, Hq, Tq, D); k_pool/v_pool: (num_pages, page_size, Hkv, D);
+    block_tables: (B, max_pages) int32 mapping row b's logical key
+    position ``p * page_size + j`` onto pool page
+    ``block_tables[b, p]``, row ``j``. ``kv_len``/``q_start`` keep the
+    contiguous kernel's contract in *logical* coordinates. Table entries
+    past a row's allocation may hold any value (the canonical sentinel
+    is ``num_pages``): the index map clamps them to a valid page and the
+    ``kv_len`` mask discards whatever is read. One KV grid step streams
+    one page (``block_k == page_size``), so the pool is never gathered
+    into a contiguous (B, S, ...) buffer.
+    """
+    interpret = default_interpret(interpret)
+    b, hq, tq, d = q.shape
+    num_pages, page_size, hkv, _ = k_pool.shape
+    max_pages = block_tables.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+
+    block_q = min(block_q, tq)
+    pq = (-tq) % block_q
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else q
+    tqp = tq + pq
+    q3 = qp.reshape(b * hq, tqp, d)
+    # pool flattened page-major over KV heads: page p, head u -> p*Hkv+u
+    k3 = k_pool.transpose(0, 2, 1, 3).reshape(num_pages * hkv,
+                                              page_size, d)
+    v3 = v_pool.transpose(0, 2, 1, 3).reshape(num_pages * hkv,
+                                              page_size, d)
+    logical = max_pages * page_size
+    kvl = (jnp.full((b,), logical, jnp.int32) if kv_len is None
+           else kv_len.astype(jnp.int32))
+    kvl3 = jnp.repeat(kvl, hq).reshape(b * hq, 1)
+    qs = (jnp.full((b,), logical - tq, jnp.int32) if q_start is None
+          else q_start.astype(jnp.int32))
+    qs3 = jnp.repeat(qs, hq).reshape(b * hq, 1)
+    tbl = jnp.clip(block_tables.astype(jnp.int32), 0, num_pages - 1)
+
+    grid = (b * hq, tqp // block_q, max_pages)
+
+    def kv_map(h, qi, ki, tbl_ref, g=group, nh=hq, u=hkv):
+        return (tbl_ref[h // nh, ki] * u + (h % nh) // g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d),
+                         lambda h, qi, ki, tbl_ref: (h, qi, 0)),
+            pl.BlockSpec((1, page_size, d), kv_map),
+            pl.BlockSpec((1, page_size, d), kv_map),
+            pl.BlockSpec((1, 1), lambda h, qi, ki, tbl_ref: (h, 0)),
+            pl.BlockSpec((1, 1), lambda h, qi, ki, tbl_ref: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda h, qi, ki, tbl_ref: (h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),   # denominator
+            pltpu.VMEM((block_q, d), jnp.float32),     # accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _paged_kernel, scale=scale, causal=causal, window=window,
+            kv_steps=max_pages, block_q=block_q, block_k=page_size,
+            pad_k=0, qk_bits=qk_bits, pv_bits=pv_bits, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, tqp, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tbl, q3, k3, v3, kvl3, qs3)
+    return out.reshape(b, hq, tqp, d)[:, :, :tq]

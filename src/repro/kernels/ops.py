@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.bit_census import bit_census_pallas
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (flash_attention_pallas,
+                                           paged_flash_attention_pallas)
 from repro.kernels.mantissa_trunc import mantissa_trunc_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
 from repro.kernels.runtime import on_tpu as _on_tpu
@@ -75,6 +76,32 @@ def flash_attention(q, k, v, *, causal: bool = True,
                                   kv_len=kv_len, q_start=q_start,
                                   qk_bits=qk_bits, pv_bits=pv_bits,
                                   mode=mode, interpret=_interp(be))
+
+
+def paged_flash_attention(q, k_pool, v_pool, block_tables, *,
+                          causal: bool = True, window: int | None = None,
+                          kv_len: jnp.ndarray | None = None,
+                          q_start: jnp.ndarray | None = None,
+                          qk_bits: int = 24, pv_bits: int = 24,
+                          mode: str = "rne", backend: str = "auto"):
+    """Flash attention over a paged KV pool: ``k_pool``/``v_pool`` are
+    ``(num_pages, page_size, Hkv, D)`` and ``block_tables`` ((B,
+    max_pages) int32) maps each row's logical prefix onto physical
+    pages. ``kv_len``/``q_start`` keep the contiguous entry's contract
+    in logical coordinates. On the Pallas path the table rides as a
+    scalar-prefetch argument so one KV grid step streams one page; the
+    ref path gathers the logical prefix and reuses the contiguous
+    oracle."""
+    be = _resolve(backend)
+    if be == "ref":
+        return _ref.paged_flash_attention_ref(
+            q, k_pool, v_pool, block_tables, causal=causal, window=window,
+            kv_len=kv_len, q_start=q_start, qk_bits=qk_bits,
+            pv_bits=pv_bits, mode=mode)
+    return paged_flash_attention_pallas(
+        q, k_pool, v_pool, block_tables, causal=causal, window=window,
+        kv_len=kv_len, q_start=q_start, qk_bits=qk_bits, pv_bits=pv_bits,
+        mode=mode, interpret=_interp(be))
 
 
 def bit_census(x: jnp.ndarray, *, backend: str = "auto") -> jnp.ndarray:

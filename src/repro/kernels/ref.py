@@ -86,3 +86,44 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     if pv_bits < 24:
         out = truncate_mantissa(out, pv_bits, mode)
     return out.astype(q.dtype)
+
+
+def gather_pages(pool: jnp.ndarray, block_tables: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Materialize each row's logical K/V prefix from a paged pool.
+
+    pool: (num_pages, page_size, ...); block_tables: (B, max_pages)
+    int32. Returns (B, max_pages * page_size, ...) — logical position
+    ``p * page_size + j`` reads pool page ``block_tables[b, p]``, row
+    ``j``. Sentinel/stale table entries are clamped onto a valid page;
+    callers mask the result with their ``kv_len`` prefix, exactly like
+    the paged kernel does. This is the oracle-side (and CPU fallback)
+    form of the kernel's scalar-prefetch page streaming.
+    """
+    num_pages, page_size = pool.shape[0], pool.shape[1]
+    tbl = jnp.clip(block_tables.astype(jnp.int32), 0, num_pages - 1)
+    b, max_pages = tbl.shape
+    gathered = pool[tbl]                 # (B, max_pages, page_size, ...)
+    return gathered.reshape((b, max_pages * page_size) + pool.shape[2:])
+
+
+def paged_flash_attention_ref(q, k_pool, v_pool, block_tables, *,
+                              causal: bool = True,
+                              window: int | None = None,
+                              kv_len: jnp.ndarray | None = None,
+                              q_start: jnp.ndarray | None = None,
+                              qk_bits: int = 24, pv_bits: int = 24,
+                              mode: str = "rne") -> jnp.ndarray:
+    """Oracle for kernels.paged_flash_attention: gather the logical
+    K/V prefix per row, then run the contiguous oracle with the same
+    ``kv_len``/``q_start`` mask contract.
+
+    q: (B, Hq, Tq, D); k_pool/v_pool: (num_pages, page_size, Hkv, D);
+    block_tables: (B, max_pages) int32."""
+    kk = gather_pages(k_pool, block_tables)   # (B, S_log, Hkv, D)
+    vv = gather_pages(v_pool, block_tables)
+    return flash_attention_ref(q, kk.transpose(0, 2, 1, 3),
+                               vv.transpose(0, 2, 1, 3), causal=causal,
+                               window=window, kv_len=kv_len,
+                               q_start=q_start, qk_bits=qk_bits,
+                               pv_bits=pv_bits, mode=mode)

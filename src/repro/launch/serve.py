@@ -41,6 +41,16 @@ def main() -> None:
                     help="prefill chunk size for the continuous engine "
                          "(tokens ingested per slot per compiled step; "
                          "1 = legacy streaming prefill)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page size in tokens (0 = contiguous "
+                         "per-slot strips; > 0 = paged pool + block "
+                         "tables + packed ragged prefill)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="total KV pool pages (0 derives the contiguous "
+                         "layout's capacity, slots * max_len/page_size)")
+    ap.add_argument("--pack-tokens", type=int, default=0,
+                    help="packed prefill stream width per step (0 "
+                         "derives slots * chunk)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -59,7 +69,10 @@ def main() -> None:
                           ServeConfig(max_len=128, batch_slots=args.slots,
                                       engine=args.engine,
                                       admission=args.admission,
-                                      prefill_chunk=args.chunk),
+                                      prefill_chunk=args.chunk,
+                                      page_size=args.page_size,
+                                      kv_pages=args.kv_pages,
+                                      pack_tokens=args.pack_tokens),
                           rule=rule)
     prompts = [[(7 * i + 3) % cfg.vocab_size for _ in range(4)]
                for i in range(args.prompts)]
@@ -71,6 +84,10 @@ def main() -> None:
           f"occupancy={st.occupancy:.2f} tokens={st.tokens_out} "
           f"prefill_tokens={st.prefill_tokens} "
           f"mean_ttft={st.mean_ttft_s * 1e3:.1f}ms")
+    if args.page_size:
+        print(f"[serve] paged: pool={st.pool_pages} pages "
+              f"peak_resident={st.peak_resident_pages} "
+              f"peak_active={st.peak_active_requests}")
 
 
 if __name__ == "__main__":

@@ -180,6 +180,67 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
             "pos": jnp.zeros((batch,), jnp.int32)}
 
 
+def max_pages_for(max_len: int, page_size: int) -> int:
+    """Block-table width: logical pages covering one slot's ``max_len``
+    ceiling. Callers should pick ``page_size | max_len`` so the logical
+    capacity equals the contiguous layout's S axis exactly (keeps
+    paged-vs-contiguous attention reductions over the same masked
+    length)."""
+    return -(-max_len // page_size)
+
+
+def init_paged_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                        page_size: int, num_pages: int,
+                        n_layers: Optional[int] = None, dtype=None):
+    """Paged cache: one shared ``(num_pages, page_size, KV, Dh)`` K/V
+    *pool* per layer plus a ``(B, max_pages)`` block table mapping each
+    slot's logical prefix onto physical pages (one table serves every
+    layer — page ids index each layer's pool identically, the vLLM
+    layout). Unallocated table entries hold the sentinel ``num_pages``:
+    any write routed through them lands out of bounds and is dropped,
+    and reads are clamped+masked, so a slot without pages can never
+    touch pool memory. Total resident KV is ``num_pages * page_size``
+    tokens — set by the *pool*, not ``B * max_len``."""
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    dt = dtype or cfg.compute_dtype
+    n = n_layers if n_layers is not None else cfg.n_layers
+    layer = lambda: {
+        "k": jnp.zeros((num_pages, page_size, kv, dh), dt),
+        "v": jnp.zeros((num_pages, page_size, kv, dh), dt),
+    }
+    return {"layers": [layer() for _ in range(n)],
+            "block_tables": jnp.full(
+                (batch, max_pages_for(max_len, page_size)), num_pages,
+                jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def is_paged(cache) -> bool:
+    """A cache dict is paged iff it carries a block table."""
+    return isinstance(cache, dict) and "block_tables" in cache
+
+
+def paged_write(pool: jnp.ndarray, tables: jnp.ndarray,
+                positions: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """Scatter ``rows[i]`` into ``pool`` at logical position
+    ``positions[i]`` of the slot whose block-table row is
+    ``tables[i]``. pool: (P, ps, ...); tables: (N, max_pages) int32;
+    positions: (N,) int32; rows: (N, ...). Writes through sentinel
+    table entries (or positions past the table) index out of bounds and
+    are dropped — never clamped onto live entries."""
+    num_pages, ps = pool.shape[0], pool.shape[1]
+    n, max_pages = tables.shape
+    slot_pages = jnp.clip(positions // ps, 0, max_pages - 1)
+    page = jnp.take_along_axis(tables, slot_pages[:, None], axis=1)[:, 0]
+    # sentinel pages (>= num_pages) push the flat index past the pool
+    flat = page * ps + positions % ps
+    flat = jnp.where(positions // ps < max_pages, flat,
+                     num_pages * ps)
+    pooled = pool.reshape((num_pages * ps,) + pool.shape[2:])
+    pooled = pooled.at[flat].set(rows.astype(pool.dtype), mode="drop")
+    return pooled.reshape(pool.shape)
+
+
 def slot_mask(mask: jnp.ndarray, ndim: int, axis: int = 0) -> jnp.ndarray:
     """Reshape a (B,) bool mask for broadcasting against a leaf whose
     batch axis sits at ``axis`` of an ``ndim``-rank array."""
@@ -193,7 +254,18 @@ def reset_kv_cache(cache, mask: jnp.ndarray):
     bool ``mask``; other slots are untouched. Per-slot masking already
     hides entries beyond ``pos``, so this is defense in depth — a recycled
     slot can never attend to its predecessor's keys even if the zeroing
-    were skipped."""
+    were skipped.
+
+    Paged caches reset the slot's *block-table row* to the sentinel and
+    its position to zero instead: the pool is shared, so page contents
+    are left for the allocator to recycle — a slot whose table is
+    sentinel-filled can neither read nor write any page, which is the
+    same isolation guarantee by construction."""
+    if is_paged(cache):
+        num_pages = cache["layers"][0]["k"].shape[0]
+        bt = jnp.where(mask[:, None], num_pages, cache["block_tables"])
+        return {"layers": cache["layers"], "block_tables": bt,
+                "pos": jnp.where(mask, 0, cache["pos"])}
     layers = [{"k": jnp.where(slot_mask(mask, lc["k"].ndim), 0, lc["k"]),
                "v": jnp.where(slot_mask(mask, lc["v"].ndim), 0, lc["v"])}
               for lc in cache["layers"]]
@@ -206,15 +278,23 @@ def _broadcast_pos(pos, batch: int) -> jnp.ndarray:
     return jnp.broadcast_to(jnp.atleast_1d(pos), (batch,))
 
 
-def decode_attention(p, x, cfg: ModelConfig, layer_cache, pos
-                     ) -> Tuple[jnp.ndarray, dict]:
-    """Single-token decode. x: (B, 1, D); cache k/v: (B, S, KV, Dh);
-    pos: (B,) int32 per-slot write positions (a scalar broadcasts, which
-    advances every slot in lockstep — the legacy wave behavior).
+def decode_attention(p, x, cfg: ModelConfig, layer_cache, pos,
+                     block_tables=None) -> Tuple[jnp.ndarray, dict]:
+    """Single-token decode. x: (B, 1, D); cache k/v: (B, S, KV, Dh)
+    contiguous strips, or — when ``block_tables`` ((B, max_pages) int32)
+    is given — (num_pages, page_size, KV, Dh) shared pools; pos: (B,)
+    int32 per-slot write positions (a scalar broadcasts, which advances
+    every slot in lockstep — the legacy wave behavior).
 
     Each slot writes its K/V at its own position and is masked causally
     against its own length, so slots at different phases (prefill vs.
-    decode vs. freshly reset) coexist in one compiled step. The
+    decode vs. freshly reset) coexist in one compiled step. The paged
+    path scatters through the block table (sentinel rows drop the
+    write) and, on kernel backends, streams pages through the paged
+    flash kernel (no gather materialization); the CPU path gathers the
+    logical prefix and runs the same einsum as the contiguous layout —
+    when ``max_pages * page_size`` equals the contiguous S the masked
+    reduction runs over the same length, so both layouts agree. The
     score/value contractions reduce over the cache's S axis, so under a
     sequence-sharded cache GSPMD emits the flash-decoding partial-softmax
     all-reduce automatically.
@@ -225,26 +305,49 @@ def decode_attention(p, x, cfg: ModelConfig, layer_cache, pos
         pos = _broadcast_pos(pos, b)
         positions = pos[:, None]                      # (B, 1) RoPE phases
         q, k, v = _project_qkv(p, x, cfg, positions)
-        upd = lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
-            c, u, i, axis=0)
-        ck = jax.vmap(upd)(layer_cache["k"],
-                           k.astype(layer_cache["k"].dtype), pos)
-        cv = jax.vmap(upd)(layer_cache["v"],
-                           v.astype(layer_cache["v"].dtype), pos)
+        if block_tables is not None:
+            ck = paged_write(layer_cache["k"], block_tables, pos, k[:, 0])
+            cv = paged_write(layer_cache["v"], block_tables, pos, v[:, 0])
+            if cfg.kernel_backend in ("pallas", "interpret"):
+                # page-streaming decode: one (B, H, 1, D) query against
+                # the slot's prefix, causal mask == s_idx <= pos
+                qh4 = q.transpose(0, 2, 1, 3)
+                with pscope("sdpa"):
+                    qk_bits, pv_bits, mode = _ambient_dot_bits()
+                    out = _sdpa_paged(qh4, ck, cv, block_tables, cfg,
+                                      kv_len=pos + 1, q_start=pos,
+                                      qk_bits=qk_bits, pv_bits=pv_bits,
+                                      mode=mode)
+                    out = quantize_here(out, "dot")
+                out = out.transpose(0, 2, 1, 3).reshape(b, 1, h * dh)
+                with pscope("out_proj"):
+                    y = linear(p["wo"], out)
+                return y, {"k": ck, "v": cv}
+            from repro.kernels.ref import gather_pages
+            kk = gather_pages(ck, block_tables)       # (B, S_log, KV, Dh)
+            vv = gather_pages(cv, block_tables)
+        else:
+            upd = lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                c, u, i, axis=0)
+            ck = jax.vmap(upd)(layer_cache["k"],
+                               k.astype(layer_cache["k"].dtype), pos)
+            cv = jax.vmap(upd)(layer_cache["v"],
+                               v.astype(layer_cache["v"].dtype), pos)
+            kk, vv = ck, cv
         group = h // kv
         qh = q.reshape(b, kv, group, dh)              # t == 1
         with pscope("sdpa"):
             scores = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
-                                ck.astype(jnp.float32)) / jnp.sqrt(
+                                kk.astype(jnp.float32)) / jnp.sqrt(
                                     jnp.float32(dh))
             scores = quantize_here(scores, "dot")
-            s_idx = jnp.arange(ck.shape[1])
+            s_idx = jnp.arange(kk.shape[1])
             valid = s_idx[None, :] <= pos[:, None]    # (B, S) per-slot causal
             if cfg.sliding_window is not None:
                 valid &= s_idx[None, :] > pos[:, None] - cfg.sliding_window
             scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
             w = jax.nn.softmax(scores, axis=-1)
-            out = jnp.einsum("bkgs,bskd->bkgd", w, cv.astype(jnp.float32))
+            out = jnp.einsum("bkgs,bskd->bkgd", w, vv.astype(jnp.float32))
             out = quantize_here(out, "dot").astype(x.dtype)
         out = out.reshape(b, 1, h * dh)
         with pscope("out_proj"):
@@ -314,6 +417,78 @@ def prefill_attention(p, x, cfg: ModelConfig, layer_cache, pos, n_new
                         qk_bits=qk_bits, pv_bits=pv_bits, mode=mode)
             out = quantize_here(out, "dot")
         out = out.transpose(0, 2, 1, 3).reshape(b, c, -1)
+        with pscope("out_proj"):
+            y = linear(p["wo"], out)
+    return y, {"k": ck, "v": cv}
+
+
+def _sdpa_paged(q, k_pool, v_pool, tables, cfg: ModelConfig, *, kv_len,
+                q_start, qk_bits: int = 24, pv_bits: int = 24,
+                mode: str = "rne"):
+    """Backend dispatch for paged attention. q: (N, Hq, Tq, D);
+    pools: (num_pages, page_size, KV, Dh); tables: (N, max_pages).
+    Kernel backends stream pages through the block-table scalar-prefetch
+    path; the CPU fallbacks gather each row's logical prefix
+    (``kernels.ref.gather_pages``) and reuse the contiguous
+    oracle / ``_sdpa_scan`` with the same ``kv_len``/``q_start``
+    contract."""
+    backend = cfg.kernel_backend
+    bits = dict(qk_bits=qk_bits, pv_bits=pv_bits, mode=mode)
+    if backend in ("pallas", "interpret"):
+        return kops.paged_flash_attention(
+            q, k_pool, v_pool, tables, causal=True,
+            window=cfg.sliding_window, kv_len=kv_len, q_start=q_start,
+            backend=backend, **bits)
+    from repro.kernels.ref import gather_pages
+    kk = gather_pages(k_pool, tables).transpose(0, 2, 1, 3)
+    vv = gather_pages(v_pool, tables).transpose(0, 2, 1, 3)
+    return _sdpa(q, kk, vv, cfg, causal=True, kv_len=kv_len,
+                 q_start=q_start, **bits)
+
+
+def packed_attention(p, x, cfg: ModelConfig, layer_cache, block_tables,
+                     slot, qpos) -> Tuple[jnp.ndarray, dict]:
+    """Ragged packed prefill: one (ΣC,) token stream instead of a
+    (B, C) rectangle. x: (1, T, D) packed hidden states; cache k/v:
+    (num_pages, page_size, KV, Dh) pools; block_tables: (B, max_pages);
+    slot: (T,) int32 owning slot per packed row (== B marks a padding
+    row); qpos: (T,) int32 absolute cache position per row.
+
+    Row i gets the RoPE phase ``qpos[i]``, writes its K/V through slot
+    ``slot[i]``'s block table at logical position ``qpos[i]`` (padding
+    rows and sentinel pages index out of bounds and are dropped), and
+    attends causally over its own slot's logical prefix — each packed
+    row is a batch row of the paged kernel with ``q_start = qpos`` and
+    ``kv_len = qpos + 1`` (0 for padding rows, which therefore return
+    zeros). Because the whole chunk's K/V is scattered before the
+    attention call, later rows of a slot see earlier rows of the same
+    step, exactly like the rectangle path. Padding rows' outputs are
+    garbage but row-local; callers gather per-slot last-row logits.
+    """
+    _, t, _ = x.shape
+    b = block_tables.shape[0]
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    page_size = layer_cache["k"].shape[1]
+    max_pages = block_tables.shape[1]
+    with pscope("attn"):
+        slot = slot.astype(jnp.int32)
+        qpos = qpos.astype(jnp.int32)
+        valid = slot < b
+        positions = qpos[None, :]                     # (1, T) RoPE phases
+        q, k, v = _project_qkv(p, x, cfg, positions)  # (1, T, H/KV, Dh)
+        rows_tbl = block_tables[jnp.clip(slot, 0, b - 1)]  # (T, max_pages)
+        wpos = jnp.where(valid, qpos, max_pages * page_size)  # pad -> OOB
+        ck = paged_write(layer_cache["k"], rows_tbl, wpos, k[0])
+        cv = paged_write(layer_cache["v"], rows_tbl, wpos, v[0])
+        qh = q[0][:, :, None, :]                      # (T, H, 1, Dh)
+        kv_len = jnp.where(valid, qpos + 1, 0)
+        with pscope("sdpa"):
+            qk_bits, pv_bits, mode = _ambient_dot_bits()
+            out = _sdpa_paged(qh, ck, cv, rows_tbl, cfg, kv_len=kv_len,
+                              q_start=qpos, qk_bits=qk_bits,
+                              pv_bits=pv_bits, mode=mode)
+            out = quantize_here(out, "dot")
+        out = out[:, :, 0, :].reshape(1, t, h * dh)
         with pscope("out_proj"):
             y = linear(p["wo"], out)
     return y, {"k": ck, "v": cv}

@@ -122,11 +122,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     page_size: int, num_pages: int):
+    """Paged decoder self-attn KV (shared pools + per-slot block table);
+    the cached encoder memory stays a per-slot dense strip."""
+    cache = attn_mod.init_paged_kv_cache(cfg, batch, max_len, page_size,
+                                         num_pages,
+                                         n_layers=cfg.n_dec_layers)
+    cache["memory"] = jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype)
+    return cache
+
+
 def reset_slots(cfg: ModelConfig, cache, mask):
     """Zero the (B,) bool-masked slots' self-attn KV, position and cached
-    encoder memory so a retired slot can serve a fresh request."""
-    new = attn_mod.reset_kv_cache({"layers": cache["layers"],
-                                   "pos": cache["pos"]}, mask)
+    encoder memory so a retired slot can serve a fresh request. Paged
+    caches sentinel the slot's block-table row instead of zeroing KV."""
+    core = {"layers": cache["layers"], "pos": cache["pos"]}
+    if attn_mod.is_paged(cache):
+        core["block_tables"] = cache["block_tables"]
+    new = attn_mod.reset_kv_cache(core, mask)
     new["memory"] = jnp.where(
         attn_mod.slot_mask(mask, cache["memory"].ndim), 0, cache["memory"])
     return new
@@ -165,11 +179,56 @@ def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig,
             {"layers": new_layers, "pos": pos + n_new, "memory": memory})
 
 
+def prefill_packed(params, cache, tokens, slot, qpos, last,
+                   cfg: ModelConfig, *, cap: int = 0,
+                   memory: jnp.ndarray | None = None):
+    """Ragged packed decoder prefill: (T,) packed rows, each attending
+    its own slot's paged self-attn prefix (``packed_attention``) and
+    cross-attending its slot's cached encoder memory (gathered per
+    row). See ``transformer.prefill_packed`` for the row contract."""
+    del cap
+    memory = cache["memory"] if memory is None else memory
+    bt = cache["block_tables"]
+    b = bt.shape[0]
+    slot = slot.astype(jnp.int32)
+    qpos = qpos.astype(jnp.int32)
+    counts = jnp.zeros((b,), jnp.int32).at[slot].add(1, mode="drop")
+    mem_rows = memory[jnp.clip(slot, 0, b - 1)]      # (T, Tm, D)
+    with pscope("model"), pscope("decoder"):
+        x = embedding(params["embed"], tokens[None], cfg.compute_dtype)
+        new_layers = []
+        for i, layer in enumerate(params["decoder"]):
+            with pscope(f"dec{i:02d}"):
+                h = norm(layer["attn_norm"], x, cfg.norm)
+                y, lc = attn_mod.packed_attention(
+                    layer["attn"], h, cfg, cache["layers"][i], bt, slot,
+                    qpos)
+                x = x + y
+                new_layers.append(lc)
+                h = norm(layer["cross_norm"], x, cfg.norm)
+                # per-row cross attention: each packed row queries its
+                # own slot's memory (batch axis = packed rows, Tq = 1)
+                xc = attn_mod.cross_attention(
+                    layer["cross"], h[0][:, None, :], mem_rows, cfg)
+                x = x + xc[:, 0][None]
+                h = norm(layer["ffn_norm"], x, cfg.norm)
+                x = x + mlp(layer["mlp"], h, cfg)
+        x = norm(params["final_norm"], x, cfg.norm)
+        logits = unembed(params["head"], x, tied=False)   # (1, T, V)
+    t = tokens.shape[0]
+    per_slot = logits[0][jnp.clip(last.astype(jnp.int32), 0, t - 1)]
+    return (per_slot[:, None, :],
+            {"layers": new_layers, "block_tables": bt,
+             "pos": cache["pos"] + counts, "memory": memory})
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig,
                 memory: jnp.ndarray | None = None):
-    """Single-token decode against cached self-attn KV + encoder memory."""
+    """Single-token decode against cached self-attn KV + encoder memory
+    (contiguous strips or paged pools alike)."""
     memory = cache["memory"] if memory is None else memory
     pos = cache["pos"]
+    bt = cache.get("block_tables")
     with pscope("model"), pscope("decoder"):
         x = embedding(params["embed"], tokens, cfg.compute_dtype)
         new_layers = []
@@ -177,7 +236,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig,
             with pscope(f"dec{i:02d}"):
                 h = norm(layer["attn_norm"], x, cfg.norm)
                 y, lc = attn_mod.decode_attention(
-                    layer["attn"], h, cfg, cache["layers"][i], pos)
+                    layer["attn"], h, cfg, cache["layers"][i], pos,
+                    block_tables=bt)
                 x = x + y
                 new_layers.append(lc)
                 h = norm(layer["cross_norm"], x, cfg.norm)
@@ -187,5 +247,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig,
                 x = x + mlp(layer["mlp"], h, cfg)
         x = norm(params["final_norm"], x, cfg.norm)
         logits = unembed(params["head"], x, tied=False)
-    return logits, {"layers": new_layers, "pos": pos + 1,
-                    "memory": memory}
+    out = {"layers": new_layers, "pos": pos + 1, "memory": memory}
+    if bt is not None:
+        out["block_tables"] = bt
+    return logits, out

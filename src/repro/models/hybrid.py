@@ -151,6 +151,22 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     }
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     page_size: int, num_pages: int):
+    """The Mamba backbone keeps its dense per-slot state (a recurrent
+    state has no length axis to page); only the shared attention
+    block's KV moves to pools + block table."""
+    n_attn = _n_shared_calls(cfg)
+    return {
+        "mamba": [mamba2_init_cache(cfg, batch) for _ in range(cfg.n_layers)],
+        "attn": attn_mod.init_paged_kv_cache(cfg, batch, max_len,
+                                             page_size, num_pages,
+                                             n_layers=n_attn),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "x0": jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype),
+    }
+
+
 def reset_slots(cfg: ModelConfig, cache, mask):
     """Zero the (B,) bool-masked slots' Mamba states, attention KV and
     positions so a retired slot can serve a fresh request mid-flight."""
@@ -176,9 +192,26 @@ def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig):
         n_new)
 
 
+def prefill_packed(params, cache, tokens, slot, qpos, last,
+                   cfg: ModelConfig, *, cap: int):
+    """Packed-stream prefill: the stream is unpacked into a (B, cap)
+    rectangle and scanned through the decode cell (the Mamba state is
+    dense; the shared attention block's paged KV advances inside the
+    scan — its pool writes self-heal, see ``prefill.merge_slotwise``).
+    ``qpos``/``last`` are implied by the cache's own positions and the
+    per-slot counts."""
+    del qpos, last
+    from repro.models.prefill import packed_scan_prefill
+    batch = cache["pos"].shape[0]
+    return packed_scan_prefill(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
+        slot, batch, cap)
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig):
     period = max(cfg.attn_period, 1)
     pos = cache["pos"]
+    bt = cache["attn"].get("block_tables")
     with pscope("model"):
         x = embedding(params["embed"], tokens, cfg.compute_dtype)
         x0 = x
@@ -199,7 +232,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
                         a = norm(sp["attn_norm"], h2, cfg.norm)
                         ya, lc = attn_mod.decode_attention(
                             sp["attn"], a, cfg,
-                            cache["attn"]["layers"][attn_i], pos)
+                            cache["attn"]["layers"][attn_i], pos,
+                            block_tables=bt)
                         h2 = h2 + ya
                         m = norm(sp["ffn_norm"], h2, cfg.norm)
                         x = x + h2 + mlp(sp["mlp"], m, cfg)
@@ -207,6 +241,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
                         attn_i += 1
         x = norm(params["final_norm"], x, cfg.norm)
         logits = unembed(params["head"], x, tied=False)
-    return logits, {"mamba": new_mamba,
-                    "attn": {"layers": new_attn, "pos": pos + 1},
+    attn_cache = {"layers": new_attn, "pos": pos + 1}
+    if bt is not None:
+        attn_cache["block_tables"] = bt
+    return logits, {"mamba": new_mamba, "attn": attn_cache,
                     "pos": pos + 1, "x0": cache["x0"]}

@@ -23,6 +23,18 @@ class Model:
     #: chunked prefill: (params, cache, (B, C) tokens, (B,) n_new) ->
     #: ((B, 1, V) last-valid-column logits, cache advanced by n_new)
     prefill_chunk: Callable
+    #: paged cache: (batch, max_len, page_size, num_pages) -> cache with
+    #: per-layer KV pools + (B, max_pages) block table (recurrent
+    #: families return their dense cache — nothing to page)
+    init_paged_cache: Callable
+    #: packed ragged prefill: (params, cache, (T,) tokens, (T,) slot,
+    #: (T,) qpos, (B,) last, cap) -> ((B, 1, V) logits, cache); ``cap``
+    #: is the static per-slot row ceiling (recurrent families unpack
+    #: into a (B, cap) rectangle)
+    prefill_packed: Callable
+    #: True when init_paged_cache really pages KV (block tables present),
+    #: i.e. the engine's page allocator governs this family's memory
+    paged_kv: bool = False
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -47,6 +59,11 @@ def build_model(cfg: ModelConfig) -> Model:
         reset_slots=lambda c, m: mod.reset_slots(cfg, c, m),
         prefill_chunk=lambda p, c, tok, n: mod.prefill_chunk(p, c, tok, n,
                                                              cfg),
+        init_paged_cache=lambda b, s, ps, np_: mod.init_paged_cache(
+            cfg, b, s, ps, np_),
+        prefill_packed=lambda p, c, t, s, q, l, cap: mod.prefill_packed(
+            p, c, t, s, q, l, cfg, cap=cap),
+        paged_kv=fam != "ssm",
     )
 
 

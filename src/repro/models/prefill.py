@@ -1,14 +1,19 @@
-"""Shared chunked-prefill machinery for the serving engine.
+"""Shared chunked/packed prefill machinery for the serving engine.
 
 Attention families ingest a (B, C) token chunk through one batched
 ``prefill_attention`` call per layer (the flash kernel's ``q_start``
-path). Recurrent / state-space families have no parallel form for their
+path), or — the ragged form — a packed (ΣC,) token stream through
+``packed_attention``, where each packed row carries its owning slot and
+absolute cache position instead of padding every slot to the same C.
+Recurrent / state-space families have no parallel form for their
 streaming decode cell, so they scan the chunk **on-device**: one
 ``lax.scan`` of the family's single-token decode step over the chunk's
 columns, inside one compiled dispatch, instead of round-tripping to the
 host per token. Columns at or beyond a slot's ``n_new`` leave that
 slot's state untouched (a masked merge), which is what makes mixed
-prefill/decode batches — and ragged chunk tails — safe.
+prefill/decode batches — and ragged chunk tails — safe. The packed
+entry for these families unpacks the stream back into a rectangle
+bounded by the engine's per-slot chunk cap and rides the same scan.
 """
 from __future__ import annotations
 
@@ -28,9 +33,62 @@ def broadcast_n_new(n_new, batch: int) -> jnp.ndarray:
 def gather_last_logits(logits: jnp.ndarray, n_new: jnp.ndarray
                        ) -> jnp.ndarray:
     """(B, C, V) chunk logits -> (B, 1, V) logits of each slot's last
-    *valid* column (``n_new[b] - 1``) — the one the engine samples."""
-    idx = (n_new.astype(jnp.int32) - 1)[:, None, None]
+    *valid* column (``n_new[b] - 1``) — the one the engine samples.
+    Slots with ``n_new == 0`` (inactive in a packed step) clamp to
+    column 0; their logits are garbage the caller ignores."""
+    idx = jnp.clip(n_new.astype(jnp.int32) - 1, 0)[:, None, None]
     return jnp.take_along_axis(logits, idx, axis=1)
+
+
+def unpack_stream(tokens: jnp.ndarray, slot: jnp.ndarray, batch: int,
+                  cap: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Unpack a packed (T,) token stream into a (B, cap) rectangle.
+
+    ``slot[i]`` names row i's owning slot (== ``batch`` for padding
+    rows). Rows keep their stream order within a slot; ``cap`` is the
+    static per-slot ceiling (the engine's prefill chunk), so the
+    rectangle is (B, cap) regardless of T. Returns the rectangle and the
+    (B,) per-slot counts (0 for slots with no rows). Rows past a slot's
+    ``cap`` would be dropped — the engine never packs more than ``cap``
+    rows per slot."""
+    slot = slot.astype(jnp.int32)
+    valid = slot < batch
+    onehot = (slot[:, None] == jnp.arange(batch)[None, :]) & valid[:, None]
+    rank = jnp.cumsum(onehot, axis=0, dtype=jnp.int32) - 1   # (T, B)
+    rank = jnp.take_along_axis(
+        rank, jnp.clip(slot, 0, batch - 1)[:, None], axis=1)[:, 0]
+    counts = jnp.sum(onehot, axis=0, dtype=jnp.int32)        # (B,)
+    rect = jnp.zeros((batch, cap), jnp.int32)
+    rows = jnp.where(valid, jnp.clip(slot, 0, batch - 1), batch)
+    cols = jnp.where(valid & (rank < cap), rank, cap)
+    rect = rect.at[rows, cols].set(tokens.astype(jnp.int32), mode="drop")
+    return rect, counts
+
+
+def merge_slotwise(new_cache, old_cache, keep: jnp.ndarray):
+    """Per-slot cache merge: take ``new`` for slots where ``keep`` is
+    True, ``old`` elsewhere. Every slot-major leaf (leading axis B) is
+    merged; **paged KV pools are left as written** — a pool is shared
+    across slots, so it cannot be merged per slot, and it doesn't need
+    to be: a masked slot's write this column landed at its *unadvanced*
+    position, where it is hidden by the slot's ``kv_len`` mask and
+    overwritten verbatim when the slot really ingests that position.
+    Pool leaves are recognized as the ``layers`` subtree of a dict that
+    also carries ``block_tables`` (the paged-cache signature)."""
+    b = keep.shape[0]
+
+    def rec(new, old):
+        if isinstance(new, dict):
+            paged = "block_tables" in new
+            return {k: (new[k] if (paged and k == "layers")
+                        else rec(new[k], old[k])) for k in new}
+        if isinstance(new, (list, tuple)):
+            merged = [rec(n, o) for n, o in zip(new, old)]
+            return type(new)(merged)
+        return jnp.where(keep.reshape((b,) + (1,) * (new.ndim - 1)),
+                         new, old)
+
+    return rec(new_cache, old_cache)
 
 
 def masked_scan_prefill(decode_step: Callable, params, cache,
@@ -41,11 +99,13 @@ def masked_scan_prefill(decode_step: Callable, params, cache,
     ``decode_step(params, cache, (B, 1) tokens) -> (logits, cache)`` is
     the family's streaming step; ``tokens``: (B, C); ``n_new``: (B,)
     valid tokens per slot. Column i's state update is kept only for
-    slots with ``i < n_new[b]`` (every cache leaf carries the slot axis
-    first), so the scan is arithmetically identical to streaming each
-    slot's valid tokens through ``decode_step`` one dispatch at a time —
-    greedy parity with the streaming engine is bit-exact. Returns the
-    (B, 1, V) logits of each slot's last valid column and the new cache.
+    slots with ``i < n_new[b]`` (every slot-major cache leaf carries the
+    slot axis first; shared paged pools self-heal instead — see
+    :func:`merge_slotwise`), so the scan is arithmetically identical to
+    streaming each slot's valid tokens through ``decode_step`` one
+    dispatch at a time — greedy parity with the streaming engine is
+    bit-exact. Returns the (B, 1, V) logits of each slot's last valid
+    column and the new cache.
     """
     b, c = tokens.shape
     n_new = broadcast_n_new(n_new, b)
@@ -53,13 +113,24 @@ def masked_scan_prefill(decode_step: Callable, params, cache,
     def step(carry, xs):
         tok, col = xs                               # (B,), scalar
         logits, new_cache = decode_step(params, carry, tok[:, None])
-        keep = col < n_new                          # (B,)
-        merged = jax.tree.map(
-            lambda n, o: jnp.where(
-                keep.reshape((b,) + (1,) * (n.ndim - 1)), n, o),
-            new_cache, carry)
+        merged = merge_slotwise(new_cache, carry, col < n_new)
         return merged, logits[:, 0]                 # (B, V)
 
     cache, seq = jax.lax.scan(
         step, cache, (tokens.T, jnp.arange(c, dtype=jnp.int32)))
     return gather_last_logits(seq.transpose(1, 0, 2), n_new), cache
+
+
+def packed_scan_prefill(decode_step: Callable, params, cache,
+                        tokens: jnp.ndarray, slot: jnp.ndarray,
+                        batch: int, cap: int
+                        ) -> Tuple[jnp.ndarray, dict]:
+    """Packed-stream prefill for recurrent families: unpack the (T,)
+    stream into a (B, cap) rectangle (rows keep stream order; ``cap``
+    is the engine's static per-slot chunk ceiling) and scan the family's
+    decode cell over its columns. The dense recurrent state rides the
+    per-slot masked merge exactly as in :func:`masked_scan_prefill`;
+    the packed layout only changes the *token plumbing*, not the
+    arithmetic."""
+    rect, counts = unpack_stream(tokens, slot, batch, cap)
+    return masked_scan_prefill(decode_step, params, cache, rect, counts)

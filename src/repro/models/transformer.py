@@ -123,9 +123,39 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return attn_mod.init_kv_cache(cfg, batch, max_len)
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     page_size: int, num_pages: int):
+    """Paged cache: per-layer (num_pages, page_size, KV, Dh) pools +
+    one (B, max_pages) block table shared by every layer."""
+    if cfg.scan_layers:
+        kv, dh = cfg.n_kv_heads, cfg.head_dim
+        dt = cfg.compute_dtype
+        mp = attn_mod.max_pages_for(max_len, page_size)
+        return {"layers": {
+                    "k": jnp.zeros((cfg.n_layers, num_pages, page_size,
+                                    kv, dh), dt),
+                    "v": jnp.zeros((cfg.n_layers, num_pages, page_size,
+                                    kv, dh), dt)},
+                "block_tables": jnp.full((batch, mp), num_pages,
+                                         jnp.int32),
+                "pos": jnp.zeros((batch,), jnp.int32)}
+    return attn_mod.init_paged_kv_cache(cfg, batch, max_len, page_size,
+                                        num_pages)
+
+
 def reset_slots(cfg: ModelConfig, cache, mask):
     """Zero the KV entries + position of the (B,) bool-masked slots so a
-    retired slot can be refilled with a new request mid-flight."""
+    retired slot can be refilled with a new request mid-flight. Paged
+    caches point the masked slots' block-table rows at the sentinel
+    instead — the shared pool is never touched (isolation holds because
+    a sentinel table can neither read nor write any page)."""
+    if attn_mod.is_paged(cache):
+        layers = cache["layers"]
+        num_pages = (layers["k"].shape[1] if cfg.scan_layers
+                     else layers[0]["k"].shape[0])
+        bt = jnp.where(mask[:, None], num_pages, cache["block_tables"])
+        return {"layers": layers, "block_tables": bt,
+                "pos": jnp.where(mask, 0, cache["pos"])}
     if cfg.scan_layers:   # stacked leaves (L, B, S, KV, Dh): batch axis 1
         layers = {n: jnp.where(attn_mod.slot_mask(mask, x.ndim, axis=1),
                                0, x)
@@ -135,11 +165,12 @@ def reset_slots(cfg: ModelConfig, cache, mask):
 
 
 def _decode_block(layer, lc, x, pos, cfg: ModelConfig, i: int,
-                  moe_impl: str):
+                  moe_impl: str, block_tables=None):
     with pscope(f"layer{i:02d}" if not cfg.scan_layers else "layer"):
         h = norm(layer["attn_norm"], x, cfg.norm)
         y, new_lc = attn_mod.decode_attention(layer["attn"], h, cfg, lc,
-                                              pos)
+                                              pos,
+                                              block_tables=block_tables)
         x = x + y
         h = norm(layer["ffn_norm"], x, cfg.norm)
         if cfg.family == "moe":
@@ -200,20 +231,86 @@ def prefill_chunk(params, cache, tokens: jnp.ndarray, n_new: jnp.ndarray,
             {"layers": new_layers, "pos": pos + n_new})
 
 
+def _packed_block(layer, lc, x, bt, slot, qpos, cfg: ModelConfig, i: int,
+                  moe_impl: str):
+    with pscope(f"layer{i:02d}" if not cfg.scan_layers else "layer"):
+        h = norm(layer["attn_norm"], x, cfg.norm)
+        y, new_lc = attn_mod.packed_attention(layer["attn"], h, cfg, lc,
+                                              bt, slot, qpos)
+        x = x + y
+        h = norm(layer["ffn_norm"], x, cfg.norm)
+        if cfg.family == "moe":
+            x = x + moe_ffn(layer["moe"], h, cfg, impl=moe_impl)
+        else:
+            x = x + mlp(layer["mlp"], h, cfg)
+    return x, new_lc
+
+
+def prefill_packed(params, cache, tokens: jnp.ndarray, slot: jnp.ndarray,
+                   qpos: jnp.ndarray, last: jnp.ndarray,
+                   cfg: ModelConfig, *, cap: int = 0,
+                   moe_impl: str | None = None
+                   ) -> Tuple[jnp.ndarray, dict]:
+    """Ragged packed prefill: one (ΣC,) token stream instead of a (B, C)
+    rectangle. ``tokens``/``slot``/``qpos``: (T,) packed rows — row i is
+    slot ``slot[i]``'s token at absolute cache position ``qpos[i]``
+    (``slot == B`` marks padding rows); ``last``: (B,) index of each
+    slot's final packed row this step (anything for inactive slots —
+    their logits are garbage the engine ignores). The cache must be
+    paged; each row writes K/V through its slot's block table and
+    attends over that slot's logical prefix (``models/attention.py::
+    packed_attention``). Returns the (B, 1, V) logits of each slot's
+    ``last`` row and the cache with ``pos`` advanced by each slot's
+    packed row count."""
+    del cap                    # batched path has no per-slot rectangle
+    moe_impl = moe_impl or cfg.moe_impl
+    bt = cache["block_tables"]
+    b = bt.shape[0]
+    slot = slot.astype(jnp.int32)
+    qpos = qpos.astype(jnp.int32)
+    counts = jnp.zeros((b,), jnp.int32).at[slot].add(1, mode="drop")
+    with pscope("model"):
+        x = embedding(params["embed"], tokens[None], cfg.compute_dtype)
+        if cfg.scan_layers:
+            def body(y, xs):
+                layer, lc = xs
+                y, new_lc = _packed_block(layer, lc, y, bt, slot, qpos,
+                                          cfg, 0, moe_impl)
+                return y, new_lc
+            x, new_layers = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+        else:
+            new_layers = []
+            for i, layer in enumerate(params["layers"]):
+                x, lc = _packed_block(layer, cache["layers"][i], x, bt,
+                                      slot, qpos, cfg, i, moe_impl)
+                new_layers.append(lc)
+        x = norm(params["final_norm"], x, cfg.norm)
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = unembed(head, x, cfg.tie_embeddings)    # (1, T, V)
+    t = tokens.shape[0]
+    per_slot = logits[0][jnp.clip(last.astype(jnp.int32), 0, t - 1)]
+    return (per_slot[:, None, :],
+            {"layers": new_layers, "block_tables": bt,
+             "pos": cache["pos"] + counts})
+
+
 def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
                 *, moe_impl: str | None = None) -> Tuple[jnp.ndarray, dict]:
     """One decode step. tokens: (B, 1) -> (logits (B, 1, V), new cache).
     ``cache["pos"]`` is the (B,) per-slot position vector; every slot
-    advances by one each step."""
+    advances by one each step. Works on contiguous and paged caches
+    alike — a paged cache routes its block table into the attention."""
     moe_impl = moe_impl or cfg.moe_impl
     pos = cache["pos"]
+    bt = cache.get("block_tables")
     with pscope("model"):
         x = embedding(params["embed"], tokens, cfg.compute_dtype)
         if cfg.scan_layers:
             def body(y, xs):
                 layer, lc = xs
                 y, new_lc = _decode_block(layer, lc, y, pos, cfg, 0,
-                                          moe_impl)
+                                          moe_impl, block_tables=bt)
                 return y, new_lc
             x, new_layers = jax.lax.scan(
                 body, x, (params["layers"], cache["layers"]))
@@ -221,9 +318,12 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
             new_layers = []
             for i, layer in enumerate(params["layers"]):
                 x, lc = _decode_block(layer, cache["layers"][i], x, pos,
-                                      cfg, i, moe_impl)
+                                      cfg, i, moe_impl, block_tables=bt)
                 new_layers.append(lc)
         x = norm(params["final_norm"], x, cfg.norm)
         head = params["embed"] if cfg.tie_embeddings else params["head"]
         logits = unembed(head, x, cfg.tie_embeddings)
-    return logits, {"layers": new_layers, "pos": pos + 1}
+    out = {"layers": new_layers, "pos": pos + 1}
+    if bt is not None:
+        out["block_tables"] = bt
+    return logits, out

@@ -337,6 +337,16 @@ def reset_slots(cfg: ModelConfig, cache, mask):
     return {"blocks": blocks, "pos": jnp.where(mask, 0, cache["pos"])}
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     page_size: int, num_pages: int):
+    """A pure recurrent stack has no KV length axis to page — the dense
+    per-slot state IS the cache. The paged engine therefore runs this
+    family with its ordinary cache (and a virtual, never-exhausted page
+    pool); only the packed-token plumbing is adopted."""
+    del page_size, num_pages
+    return init_cache(cfg, batch, max_len)
+
+
 def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig):
     """Chunked prefill for the recurrent stack: no parallel form exists
     for the streaming cells (sLSTM's R h_{t-1} term forbids it), so the
@@ -347,6 +357,19 @@ def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig):
     return masked_scan_prefill(
         lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
         n_new)
+
+
+def prefill_packed(params, cache, tokens, slot, qpos, last,
+                   cfg: ModelConfig, *, cap: int):
+    """Packed-stream prefill: unpack the (ΣC,) stream into a (B, cap)
+    rectangle and ride the masked decode-cell scan (the state is dense,
+    so only the token plumbing changes)."""
+    del qpos, last
+    from repro.models.prefill import packed_scan_prefill
+    batch = cache["pos"].shape[0]
+    return packed_scan_prefill(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
+        slot, batch, cap)
 
 
 def decode_step(params, cache, tokens, cfg: ModelConfig):

@@ -3,7 +3,23 @@ KV cache, with NEAT placement support for reduced-precision serving.
 
 Two schedulers share one compiled (batch, 1)-token decode step; the
 continuous scheduler additionally runs a compiled **chunked-prefill**
-step:
+step — and, with ``page_size > 0``, switches to the **paged** memory
+layout and a **packed ragged prefill** step:
+
+* the KV cache becomes a shared ``(num_pages, page_size, ...)`` pool
+  per layer plus one ``(B, max_pages)`` block table, managed by a
+  host-side :class:`PageAllocator` — pages are allocated on admission
+  (the request's worst-case ``ceil((tail + budget) / page_size)``
+  tokens), freed on retire, and **admission is gated on free pages, not
+  free slots**: total resident KV is bounded by the live requests'
+  actual needs, so at a fixed pool many more short requests run
+  concurrently than the contiguous layout's ``B × max_len`` strips
+  allow;
+* prefill steps carry one packed ``(ΣC,)`` token stream instead of a
+  ``(B, C)`` rectangle: each packed row names its owning slot and
+  absolute cache position, decoding slots ride along as single rows,
+  and the step's compute scales with *live tokens* (``pack_tokens``
+  budget) rather than ``B × C`` padding.
 
 * **continuous** (default): the KV cache carries a per-slot position
   vector, so the engine is a scheduler loop — admit queued requests into
@@ -64,13 +80,33 @@ class ServeConfig:
     #: first — short requests stop convoying behind long prefills; a
     #: stable sort keeps arrival order among equal keys). The sjf key is
     #: the post-chunking remaining-prefill length: the number of compiled
-    #: prefill steps the admitted tail will actually consume. Completions
-    #: are returned in request order either way, and greedy outputs are
-    #: admission-order independent.
+    #: prefill steps the admitted tail will actually consume — with a
+    #: **page-availability tie-break** on the paged engine: among equal
+    #: step keys, the request needing fewer KV pages sorts first (then
+    #: arrival order), so a short-prompt request with a huge completion
+    #: budget cannot hold the queue head while cheaper requests could
+    #: already run. Completions are returned in request order either
+    #: way, and greedy outputs are admission-order independent.
     admission: str = "fifo"
     #: tokens each prefilling slot ingests per compiled step (continuous
     #: engine only; 1 = legacy streaming prefill, token by token)
     prefill_chunk: int = 32
+    #: KV page size in tokens; 0 = contiguous per-slot (B, max_len)
+    #: strips (the PR-4 rectangle path). > 0 switches the continuous
+    #: engine to the paged pool + block tables + packed ragged prefill.
+    #: Pick ``page_size | max_len`` so the paged logical length equals
+    #: the contiguous S axis (keeps the attention reductions identical).
+    page_size: int = 0
+    #: total pool pages; 0 derives ``batch_slots * ceil(max_len /
+    #: page_size)`` — the same token capacity as the contiguous layout.
+    #: Smaller pools trade concurrency headroom for memory; admission
+    #: blocks (backpressure) rather than overcommitting.
+    kv_pages: int = 0
+    #: packed-stream width per compiled prefill step (ΣC); 0 derives
+    #: ``batch_slots * prefill_chunk`` (the rectangle's token capacity,
+    #: so step counts never regress). Must be >= batch_slots so every
+    #: active slot gets at least one row per step.
+    pack_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -83,6 +119,11 @@ class ServeStats:
     n_requests: int = 0
     prefill_steps: int = 0            # steps where >= 1 slot ate a chunk
     prefill_tokens: int = 0           # prompt tokens ingested
+    #: paged engine: pool size, high-water mark of allocated pages and
+    #: of concurrently admitted requests (0 on the contiguous path)
+    pool_pages: int = 0
+    peak_resident_pages: int = 0
+    peak_active_requests: int = 0
     #: per-request time-to-first-token, seconds since generate() started
     ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
 
@@ -96,6 +137,37 @@ class ServeStats:
                 if self.ttft_s else 0.0)
 
 
+class PageAllocator:
+    """Host-side free-list allocator over the shared KV pool.
+
+    Pages are plain ints indexing every layer's pool identically. The
+    free list is FIFO (freed pages recycle oldest-first), so allocation
+    is deterministic for a fixed workload — the paged engine's step
+    sequence, and therefore its stats, are reproducible."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` pages, or None (and no change) if fewer are free."""
+        if n > len(self._free):
+            return None
+        taken, self._free = self._free[:n], self._free[n:]
+        return taken
+
+    def free(self, pages: List[int]) -> None:
+        self._free.extend(pages)
+
+
 class DecodeEngine:
     def __init__(self, model: Model, params, cfg: ServeConfig,
                  rule: Optional[PlacementRule] = None):
@@ -105,11 +177,26 @@ class DecodeEngine:
             raise ValueError(f"unknown admission policy {cfg.admission!r}")
         if cfg.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if cfg.page_size < 0 or cfg.kv_pages < 0 or cfg.pack_tokens < 0:
+            raise ValueError("page_size/kv_pages/pack_tokens must be >= 0")
+        if cfg.page_size and cfg.engine != "continuous":
+            raise ValueError("paged KV requires the continuous engine")
+        from repro.models.attention import max_pages_for
         self.model = model
         self.params = params
         self.cfg = cfg
         self.rule = rule
         self.stats = ServeStats()
+        self.paged = cfg.page_size > 0
+        if self.paged:
+            self.max_pages = max_pages_for(cfg.max_len, cfg.page_size)
+            self.num_pages = (cfg.kv_pages or
+                              cfg.batch_slots * self.max_pages)
+            self.pack_tokens = (cfg.pack_tokens or
+                                cfg.batch_slots * cfg.prefill_chunk)
+            if self.pack_tokens < cfg.batch_slots:
+                raise ValueError("pack_tokens must be >= batch_slots "
+                                 "(every active slot needs one row)")
         with use_rule(rule):
             self._step = jax.jit(
                 lambda p, c, t: model.decode_step(p, c, t))
@@ -118,6 +205,12 @@ class DecodeEngine:
             # wave engines never pay for it
             self._chunk_step = jax.jit(
                 lambda p, c, t, n: model.prefill_chunk(p, c, t, n))
+            # the packed-prefill step: one (ΣC,) ragged stream + per-row
+            # slot/position vectors; per-slot rows are capped at
+            # prefill_chunk (static, for the recurrent unpack rectangle)
+            self._packed_step = jax.jit(
+                lambda p, c, t, s, q, l: model.prefill_packed(
+                    p, c, t, s, q, l, cfg.prefill_chunk))
             # donate the cache: the reset runs on the admit hot path and
             # the caller always rebinds, so XLA may update it in place
             # instead of copying every layer's (B, S, KV, Dh) buffers
@@ -159,16 +252,37 @@ class DecodeEngine:
         return (self.cfg.prefill_chunk if self.cfg.engine == "continuous"
                 else 1)
 
+    def _pages_needed(self, tail_len: int, budget: int) -> int:
+        """Worst-case KV pages one request can touch: its prompt tail
+        plus its full completion budget (the engine retires a slot
+        before writing past this, so admission-time reservation never
+        has to grow — exhaustion can only block *admission*, never a
+        running request), clamped to the block-table width — a slot
+        retires at ``max_len - 1`` anyway, so reserving past
+        ``max_pages`` could never be used (and wouldn't fit the
+        table)."""
+        if not (self.paged and self.model.paged_kv):
+            return 0
+        return min(-(-(tail_len + budget) // self.cfg.page_size),
+                   self.max_pages)
+
     def _admission_order(self, queue: List[tuple]) -> List[tuple]:
         """Apply the configured admission policy to a (rid, prompt, budget)
         queue. ``sjf`` sorts by the post-chunking remaining-prefill
         length — the compiled prefill steps the admitted tail will
         consume, ``ceil(len / prefill_stride)`` — stably, so chunked
         prefill doesn't misorder on sub-chunk length differences that
-        cost identical step counts."""
+        cost identical step counts. On the paged engine the sort key is
+        ``(prefill_steps, pages_needed)``: a request's KV-page demand
+        covers its *completion budget* too, so a short-prompt request
+        with a huge ``max_new`` (cheap to prefill, expensive to hold)
+        no longer outranks an equally-cheap request that could actually
+        be admitted — the documented page-availability tie-break."""
         if self.cfg.admission == "sjf":
             stride = self._prefill_stride()
-            return sorted(queue, key=lambda e: -(-len(e[1]) // stride))
+            return sorted(queue, key=lambda e: (
+                -(-len(e[1]) // stride),
+                self._pages_needed(len(e[1]), e[2])))
         return list(queue)
 
     def generate(self, prompts: List[List[int]],
@@ -188,7 +302,9 @@ class DecodeEngine:
             queue = self._admission_order(
                 [(rid, self._prompt_tail(p, budgets[rid]), budgets[rid])
                  for rid, p in enumerate(prompts)])
-            if self.cfg.engine == "continuous":
+            if self.cfg.engine == "continuous" and self.paged:
+                self._run_packed(queue, outputs, key)
+            elif self.cfg.engine == "continuous":
                 self._run_continuous(queue, outputs, key)
             else:
                 while queue:
@@ -292,6 +408,180 @@ class DecodeEngine:
                             and tok == cfg.eos_token)
                         or spos[s] >= cfg.max_len - 1):
                     rid[s] = -1               # retire; refill next step
+                else:
+                    cur[s] = tok
+
+    # -- paged scheduler (packed ragged prefill) -----------------------------
+    def _run_packed(self, queue, outputs, key):
+        """Continuous scheduling over the paged KV pool.
+
+        Admission walks the ordered queue and admits every request that
+        can get both a free slot and its worst-case page reservation
+        (``ceil((tail + budget) / page_size)``); a request that cannot
+        get pages blocks later requests **unless they need strictly
+        fewer pages** (bounded bypass: a cheaper request can never delay
+        the blocked head, whose reservation the bypassing one couldn't
+        have satisfied anyway — and the head retains priority the
+        moment its pages exist). Retiring a slot frees its pages and
+        sentinels its block-table row immediately, so a recycled page
+        can never be written through a stale table.
+
+        While any slot holds un-ingested prompt, the step is one packed
+        ``(pack_tokens,)`` stream: every active slot contributes at
+        least one row (decoding slots exactly one — their next token),
+        prefilling slots up to ``prefill_chunk`` rows as the budget
+        allows, and the remainder is padding (slot index B, masked
+        everywhere). Pure-decode steps drop to the (B, 1) path.
+        """
+        cfg = self.cfg
+        n_slots = cfg.batch_slots
+        chunk = cfg.prefill_chunk
+        ps = cfg.page_size
+        virtual = not self.model.paged_kv     # recurrent: nothing to page
+        alloc = PageAllocator(self.num_pages)
+        self.stats.pool_pages = 0 if virtual else self.num_pages
+        for _, prompt, budget in queue:
+            need = self._pages_needed(len(prompt), budget)
+            if need > self.num_pages:
+                raise ValueError(
+                    f"request needs {need} KV pages but the pool holds "
+                    f"{self.num_pages}; raise kv_pages or lower "
+                    "max_len/max_new")
+        if virtual:
+            cache = self.model.init_cache(n_slots, cfg.max_len)
+        else:
+            cache = self.model.init_paged_cache(
+                n_slots, cfg.max_len, ps, self.num_pages)
+        tables = np.full((n_slots, self.max_pages), self.num_pages,
+                         np.int32)
+        tables_dirty = not virtual
+        slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        rid = [-1] * n_slots
+        rem: List[List[int]] = [[] for _ in range(n_slots)]
+        cur = [0] * n_slots
+        left = [0] * n_slots
+        spos = [0] * n_slots
+
+        def set_tables(c):
+            # the block table may nest under "attn" (hybrid family)
+            c = dict(c)
+            if "block_tables" in c:
+                c["block_tables"] = jnp.asarray(tables)
+            elif "attn" in c and "block_tables" in c["attn"]:
+                c["attn"] = dict(c["attn"])
+                c["attn"]["block_tables"] = jnp.asarray(tables)
+            return c
+
+        while queue or any(r >= 0 for r in rid):
+            # admit: free slots + page reservations, bounded bypass
+            admit = np.zeros((n_slots,), bool)
+            blocked_need = None
+            pending = []
+            for entry in queue:
+                e_rid, prompt, budget = entry
+                need = self._pages_needed(len(prompt), budget)
+                free_slot = next((s for s in range(n_slots)
+                                  if rid[s] < 0 and not admit[s]), None)
+                bypass_ok = blocked_need is None or need < blocked_need
+                pages = (alloc.alloc(need)
+                         if free_slot is not None and bypass_ok else None)
+                if free_slot is None or (need and pages is None) \
+                        or not bypass_ok:
+                    if blocked_need is None or need < blocked_need:
+                        blocked_need = need
+                    pending.append(entry)
+                    continue
+                s = free_slot
+                rid[s], rem[s], left[s] = e_rid, list(prompt), budget
+                spos[s] = 0
+                slot_pages[s] = pages or []
+                tables[s, :] = self.num_pages
+                tables[s, :len(slot_pages[s])] = slot_pages[s]
+                tables_dirty = tables_dirty or not virtual
+                admit[s] = True
+            queue[:] = pending
+            if admit.any():
+                cache = self._reset(cache, jnp.asarray(admit))
+            if tables_dirty and not virtual:
+                cache = set_tables(cache)
+                tables_dirty = False
+            self.stats.peak_resident_pages = max(
+                self.stats.peak_resident_pages,
+                0 if virtual else alloc.used_pages)
+            self.stats.peak_active_requests = max(
+                self.stats.peak_active_requests,
+                sum(r >= 0 for r in rid))
+
+            key, sub = jax.random.split(key)
+            took = [0] * n_slots
+            rows = [0] * n_slots              # packed rows per slot
+            if any(rid[s] >= 0 and rem[s] for s in range(n_slots)):
+                # packed step: lay out each active slot's rows in slot
+                # order, reserving one row for every active slot after
+                active = [s for s in range(n_slots) if rid[s] >= 0]
+                toks = np.zeros((self.pack_tokens,), np.int32)
+                slot_v = np.full((self.pack_tokens,), n_slots, np.int32)
+                qpos = np.zeros((self.pack_tokens,), np.int32)
+                last = np.zeros((n_slots,), np.int32)
+                cursor = 0
+                for j, s in enumerate(active):
+                    reserve = len(active) - j - 1
+                    if rem[s]:
+                        take = min(len(rem[s]), chunk,
+                                   self.pack_tokens - cursor - reserve)
+                        take = max(take, 1)
+                        took[s] = take
+                        rows[s] = take
+                        toks[cursor:cursor + take] = rem[s][:take]
+                        self.stats.prefill_tokens += take
+                    else:
+                        rows[s] = 1
+                        toks[cursor] = cur[s]
+                    n = rows[s]
+                    slot_v[cursor:cursor + n] = s
+                    qpos[cursor:cursor + n] = np.arange(
+                        spos[s], spos[s] + n)
+                    cursor += n
+                    last[s] = cursor - 1
+                logits, cache = self._packed_step(
+                    self.params, cache, jnp.asarray(toks),
+                    jnp.asarray(slot_v), jnp.asarray(qpos),
+                    jnp.asarray(last))
+                self.stats.prefill_steps += 1
+            else:
+                # pure decode step: the cheap (B, 1) path
+                toks = np.zeros((n_slots, 1), np.int32)
+                for s in range(n_slots):
+                    if rid[s] >= 0:
+                        toks[s, 0] = cur[s]
+                        rows[s] = 1
+                logits, cache = self._step(self.params, cache,
+                                           jnp.asarray(toks))
+            nxt = np.asarray(self._sample(logits, sub))
+            self.stats.steps += 1
+
+            for s in range(n_slots):
+                if rid[s] < 0:
+                    continue
+                self.stats.active_slot_steps += 1
+                spos[s] += rows[s]
+                if took[s]:
+                    rem[s] = rem[s][took[s]:]
+                    if rem[s]:
+                        continue              # still prefilling next step
+                tok = int(nxt[s])
+                self._first_token(rid[s])
+                outputs[rid[s]].append(tok)
+                left[s] -= 1
+                if (left[s] <= 0
+                        or (cfg.eos_token is not None
+                            and tok == cfg.eos_token)
+                        or spos[s] >= cfg.max_len - 1):
+                    rid[s] = -1               # retire: free pages now
+                    alloc.free(slot_pages[s])
+                    slot_pages[s] = []
+                    tables[s, :] = self.num_pages
+                    tables_dirty = tables_dirty or not virtual
                 else:
                     cur[s] = tok
 

@@ -157,22 +157,28 @@ def test_heterogeneous_input_shapes_fold_per_signature():
                                           ev.last_bit_counts_list[i][p])
 
 
-def test_cond_bodies_keep_static_charge():
-    """Governed FLOPs inside cond branches cannot thread a value census
-    out (the branch produces values, but which branch ran is data-
-    dependent); they must be charged the largest branch's static
-    genome-scaled bound — for an app whose governed FLOPs all live in
-    cond branches, dynamic == static exactly, and the host reference
-    agrees."""
+def test_cond_branches_measured_by_index():
+    """Cond branches thread per-branch counters through the switch: the
+    *taken* branch's exact census is selected by branch index (the
+    other branches' union segments stay zero), replacing the old static
+    largest-branch bound. With same-op-class branches the static charge
+    is branch-invariant, so measured dynamic energy is <= it (trailing
+    zeros only shrink the census); inputs taking *different* branches
+    measure different energies (x*2 shifts the exponent and flips no
+    mantissa bits, x*1.5 manipulates them), and the host reference
+    agrees per input. (With *different*-class branches the static model
+    still charges the most-equations branch, so a costlier taken branch
+    may legitimately exceed it — the documented while-style caveat.)"""
     def fn(x):
         with pscope("branch"):
             y = jax.lax.cond(jnp.sum(x) > 0,
                              lambda v: v * jnp.float32(2.0),
-                             lambda v: v + jnp.float32(1.0), x)
+                             lambda v: v * jnp.float32(1.5), x)
         return y
 
     rng = np.random.default_rng(5)
-    inputs = [(jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),)]
+    xpos = jnp.abs(jnp.asarray(rng.standard_normal((8, 16)), jnp.float32))
+    inputs = [(xpos,), (-xpos,)]       # branch 1 vs branch 0
     task = ExplorationTask(name="br", fn=fn, train_inputs=inputs,
                            test_inputs=[])
     prof = profile(task.fn, *inputs[0])
@@ -184,11 +190,54 @@ def test_cond_bodies_keep_static_charge():
     ev.errors_matrix(genomes, inputs, exact)
     dyn = make_estimator("dynamic", prof, "cip", sites, target=task.target)
     stat = make_estimator("static", prof, "cip", sites, target=task.target)
-    df, _ = dyn.population(genomes, evaluator=ev)
+    df = dyn.fpu_matrix(ev, genomes)           # (P, I) per-input energies
     sf, _ = stat.population(genomes)
-    np.testing.assert_allclose(df, sf, rtol=1e-9)
+    # measured census of the taken branch never exceeds its static bound
+    assert np.all(df <= np.asarray(sf)[:, None] * (1 + 1e-12))
+    # the two inputs take different branches -> different measured bits
+    assert not np.allclose(df[:, 0], df[:, 1])
     assert host_device_parity(task, "cip", sites, dyn, ev, genomes,
                               inputs) < 1e-6
+
+
+def test_cond_branch_census_matches_eager_branch():
+    """The union counts vector really carries the taken branch's exact
+    census: evaluating the cond app equals evaluating the taken branch's
+    body as a straight-line function, channel for channel."""
+    def fn(x):
+        with pscope("branch"):
+            return jax.lax.cond(jnp.sum(x) > 0,
+                                lambda v: v * jnp.float32(1.5),
+                                lambda v: v + jnp.float32(1.0), x)
+
+    def taken(x):                      # the branch a positive x selects
+        with pscope("branch"):
+            return x * jnp.float32(1.5)
+
+    rng = np.random.default_rng(7)
+    x = jnp.abs(jnp.asarray(rng.standard_normal((4, 8)), jnp.float32))
+
+    def dyn_energy(f):
+        task = ExplorationTask(name="c", fn=f, train_inputs=[(x,)],
+                               test_inputs=[])
+        prof = profile(task.fn, x)
+        sites = sites_for_family(prof, "cip", 3)
+        # uniform genomes, so site-count differences between the cond
+        # app and the straight-line branch don't matter
+        genomes = [(6,) * len(sites), (24,) * len(sites)]
+        exact = [jax.tree.map(np.asarray, task.fn(x))]
+        ev = PopulationEvaluator(task, "cip", sites, pop_hint=2,
+                                 collect_bits=True)
+        ev.errors_matrix(genomes, [(x,)], exact)
+        est = make_estimator("dynamic", prof, "cip", sites,
+                             target=task.target)
+        return np.asarray(est.fpu_matrix(ev, genomes))
+
+    # the untaken branch's union segment is zero and the taken segment
+    # carries the straight-line census, so the cond app's measured FPU
+    # energy equals the taken branch evaluated as a plain function
+    np.testing.assert_allclose(dyn_energy(fn), dyn_energy(taken),
+                               rtol=1e-9)
 
 
 def test_while_bodies_measured_via_carry():

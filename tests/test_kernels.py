@@ -219,3 +219,100 @@ def test_bf16_flash():
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                atol=3e-2, rtol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# paged flash attention: block-table pool vs the contiguous layouts
+# ---------------------------------------------------------------------------
+
+def _paged_from_contiguous(k, v, page_size, num_pages, seed=0):
+    """Scatter a contiguous (B, Hkv, S, D) K/V pair into a shared pool
+    under a random-but-collision-free block table."""
+    b, hkv, s, d = k.shape
+    max_pages = s // page_size
+    prng = np.random.default_rng(seed)
+    perm = prng.permutation(num_pages)[: b * max_pages]
+    tbl = perm.reshape(b, max_pages)
+    k_pool = np.zeros((num_pages, page_size, hkv, d), np.float32)
+    v_pool = np.zeros((num_pages, page_size, hkv, d), np.float32)
+    for row in range(b):
+        for p in range(max_pages):
+            sl = slice(p * page_size, (p + 1) * page_size)
+            k_pool[tbl[row, p]] = np.asarray(k[row, :, sl]).transpose(
+                1, 0, 2)
+            v_pool[tbl[row, p]] = np.asarray(v[row, :, sl]).transpose(
+                1, 0, 2)
+    return (jnp.asarray(k_pool), jnp.asarray(v_pool),
+            jnp.asarray(tbl, jnp.int32))
+
+
+@pytest.mark.parametrize("window", [None, 9])
+@pytest.mark.parametrize("backend", ["interpret", "ref"])
+def test_paged_flash_matches_contiguous(backend, window):
+    """The block-table gather path is the contiguous kernel on a
+    scattered pool: same q_start/kv_len mask contract, same outputs."""
+    b, hq, hkv, d = 3, 4, 2, 32
+    ps, mp, num_pages = 8, 4, 17
+    s = mp * ps
+    q = jnp.asarray(RNG.standard_normal((b, hq, 6, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    k_pool, v_pool, tbl = _paged_from_contiguous(k, v, ps, num_pages)
+    kv_len = jnp.asarray([s, 17, 5], jnp.int32)
+    q_start = jnp.asarray([s - 6, 11, 4], jnp.int32)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                   kv_len=kv_len, q_start=q_start)
+    got = ops.paged_flash_attention(q, k_pool, v_pool, tbl, causal=True,
+                                    window=window, kv_len=kv_len,
+                                    q_start=q_start, backend=backend)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_paged_flash_sentinel_tables_are_masked():
+    """Table entries past a row's allocation may hold the sentinel (==
+    num_pages): reads are clamped to a valid page and kv_len masks them,
+    so outputs only ever depend on allocated pages."""
+    b, hq, hkv, d = 2, 2, 1, 16
+    ps, mp, num_pages = 4, 4, 9
+    s = mp * ps
+    q = jnp.asarray(RNG.standard_normal((b, hq, 1, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    k_pool, v_pool, tbl = _paged_from_contiguous(k, v, ps, num_pages)
+    kv_len = jnp.asarray([6, 3], jnp.int32)   # <= first two pages
+    q_start = kv_len - 1
+    full = ops.paged_flash_attention(q, k_pool, v_pool, tbl,
+                                     kv_len=kv_len, q_start=q_start,
+                                     backend="interpret")
+    sent = np.asarray(tbl).copy()
+    sent[:, 2:] = num_pages                   # unallocated -> sentinel
+    got = ops.paged_flash_attention(q, k_pool, v_pool,
+                                    jnp.asarray(sent), kv_len=kv_len,
+                                    q_start=q_start, backend="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_paged_flash_packed_decode_rows():
+    """The packed-prefill layout: every packed token is a batch row with
+    Tq == 1, its own table, q_start = its position and kv_len = pos + 1
+    — each row must equal dense attention over its slot's prefix."""
+    hq, hkv, d = 4, 2, 16
+    ps, mp, num_pages = 4, 3, 11
+    s = mp * ps
+    k = jnp.asarray(RNG.standard_normal((1, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, hkv, s, d)), jnp.float32)
+    k_pool, v_pool, tbl = _paged_from_contiguous(k, v, ps, num_pages)
+    n_rows = 5
+    q = jnp.asarray(RNG.standard_normal((n_rows, hq, 1, d)), jnp.float32)
+    qpos = jnp.asarray([0, 3, 7, 10, 11], jnp.int32)
+    rows_tbl = jnp.broadcast_to(tbl, (n_rows, mp))
+    got = ops.paged_flash_attention(q, k_pool, v_pool, rows_tbl,
+                                    kv_len=qpos + 1, q_start=qpos,
+                                    backend="interpret")
+    for i, p in enumerate(np.asarray(qpos)):
+        sl = ref.flash_attention_ref(q[i:i + 1], k[:, :, :p + 1],
+                                     v[:, :, :p + 1], causal=True)
+        np.testing.assert_allclose(np.asarray(got[i:i + 1]),
+                                   np.asarray(sl), atol=3e-5, rtol=1e-4)
