@@ -28,6 +28,13 @@ Reads the ``BENCH_*.json`` files emitted by ``benchmarks.run`` and fails
   >= ``MIN_PAGED_CONCURRENCY`` x the contiguous slot cap concurrently,
   keep resident pages at or below the pool (the memory-ceiling claim),
   and reproduce the rectangle engine's greedy completions exactly.
+* serve-spec: the NEAT reduced-precision drafter must beat the
+  non-speculative paged engine by >= ``MIN_SPEC_SPEEDUP`` tokens/sec at
+  drafter_bits=10 with acceptance >= ``MIN_SPEC_ACCEPTANCE``, greedy
+  completions byte-identical to the non-speculative engine at every
+  bits level AND on tiny models of all five families, and a p99 TTFT
+  tail within ``MAX_SPEC_P99_TTFT_RATIO`` x the non-speculative
+  engine's.
 
 On top of the absolute gates, every artifact with a **committed
 baseline** (``benchmarks/baselines/BENCH_*.json``) is compared against
@@ -55,6 +62,11 @@ MIN_SERVE_SPEEDUP = 1.5
 MIN_TTFT_SPEEDUP = 2.0             # chunked vs streaming prefill
 MIN_PAGED_SPEEDUP = 1.3            # paged+packed vs rectangle, fixed KV
 MIN_PAGED_CONCURRENCY = 2.0        # peak active vs contiguous slot cap
+MIN_SPEC_SPEEDUP = 1.5             # speculative vs paged non-spec, bits=10
+MIN_SPEC_ACCEPTANCE = 0.6          # draft acceptance at bits=10
+MAX_SPEC_P99_TTFT_RATIO = 4.0      # spec p99 TTFT tail vs non-spec (the
+#                                    drafter adds per-window latency; the
+#                                    tail must stay bounded, not shrink)
 MAX_DISPATCH_RATIO = 0.25          # batched <= serial / 4
 MAX_DYNAMIC_EXTRA_DISPATCHES = 2   # dynamic objective <= static + 2
 DYNAMIC_HOST_DEVICE_RTOL = 1e-6
@@ -76,6 +88,7 @@ BASELINE_GATES = {
     "speedup": "ge",
     "ttft_speedup": "ge",
     "concurrency": "ge",
+    "acceptance": "ge",
 }
 
 
@@ -192,6 +205,34 @@ def check_serve_paged(path: str) -> list:
     return errs
 
 
+def check_serve_spec(path: str) -> list:
+    rows = _rows(path)
+    errs = []
+    sp = rows["serve_spec_speedup"]
+    speed = float(_field(sp, "speedup").rstrip("x"))
+    if speed < MIN_SPEC_SPEEDUP:
+        errs.append(f"speculative-serve speedup regression: {speed:.2f}x "
+                    f"< {MIN_SPEC_SPEEDUP}x over the non-speculative "
+                    "paged engine at bits=10")
+    acc = float(_field(sp, "acceptance"))
+    if acc < MIN_SPEC_ACCEPTANCE:
+        errs.append(f"draft acceptance regression: {acc:.3f} < "
+                    f"{MIN_SPEC_ACCEPTANCE} at drafter_bits=10")
+    if _field(sp, "parity") != "True":
+        errs.append("speculative-serve parity regression: spec greedy "
+                    "completions != non-speculative (any bits level)")
+    if _field(sp, "families_parity") != "True":
+        errs.append("speculative-serve family-parity regression: a "
+                    "family's spec completions diverged from its "
+                    "non-speculative engine")
+    ratio = float(_field(sp, "ttft_p99_ratio").rstrip("x"))
+    if ratio > MAX_SPEC_P99_TTFT_RATIO:
+        errs.append(f"speculative-serve p99 TTFT tail regression: "
+                    f"{ratio:.2f}x > {MAX_SPEC_P99_TTFT_RATIO}x the "
+                    "non-speculative engine's tail")
+    return errs
+
+
 def _gate_value(raw: str):
     try:
         return float(raw.rstrip("x"))
@@ -246,7 +287,8 @@ def main() -> None:
               ("BENCH_explorer-dynamic.json", check_explorer_dynamic),
               ("BENCH_serve.json", check_serve),
               ("BENCH_serve-prefill.json", check_serve_prefill),
-              ("BENCH_serve-paged.json", check_serve_paged)]
+              ("BENCH_serve-paged.json", check_serve_paged),
+              ("BENCH_serve-spec.json", check_serve_spec)]
     errs = []
     for fname, fn in checks:
         path = os.path.join(args.json_dir, fname)

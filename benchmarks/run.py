@@ -10,8 +10,20 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import traceback
+
+
+def _git_sha() -> str:
+    """Provenance stamp for the BENCH artifacts; 'unknown' outside git."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 
 def main() -> None:
@@ -22,6 +34,9 @@ def main() -> None:
                     help="comma-separated substring filters on bench names")
     ap.add_argument("--json-dir", default=".",
                     help="directory for the BENCH_<name>.json artifacts")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload seed recorded in the artifacts (the "
+                         "benches are deterministic at a fixed seed)")
     args = ap.parse_args()
     filters = [f for f in (args.only or "").split(",") if f]
 
@@ -34,6 +49,7 @@ def main() -> None:
         ("serve", serve_bench.serve_throughput),
         ("serve-prefill", serve_bench.serve_prefill),
         ("serve-paged", serve_bench.serve_paged),
+        ("serve-spec", serve_bench.serve_spec),
         ("fig04", paper_figs.fig04_flop_breakdown),
         ("fig05_06", paper_figs.fig05_06_wp_vs_cip),
         ("fig07", paper_figs.fig07_memory_savings),
@@ -46,6 +62,7 @@ def main() -> None:
     ]
 
     print("name,us_per_call,derived")
+    sha = _git_sha()
     failed = 0
     for name, fn in benches:
         if filters and not any(f in name for f in filters):
@@ -62,6 +79,7 @@ def main() -> None:
         path = os.path.join(args.json_dir, f"BENCH_{name}.json")
         with open(path, "w") as f:
             json.dump({"name": name, "full": args.full,
+                       "git_sha": sha, "seed": args.seed,
                        "rows": [[r, us, d] for r, us, d in rows]},
                       f, indent=2)
     if failed:

@@ -202,7 +202,10 @@ def serve_paged(full: bool = False) -> List[Tuple[str, float, str]]:
             page_size=page_size, kv_pages=pool, pack_tokens=256)),
     }
     for eng in engines.values():
-        eng.generate(prompts[:8], max_new_tokens=2)   # compile warmup
+        # full-workload warmup: the packed step is width-bucketed, so a
+        # truncated warmup would leave per-bucket compilations inside
+        # the timed run
+        eng.generate(prompts, max_new_tokens=max_new)
 
     results = {}
     for name, eng in engines.items():
@@ -237,7 +240,132 @@ def serve_paged(full: bool = False) -> List[Tuple[str, float, str]]:
     ]
 
 
+def _family_parity(bits: int, k: int) -> bool:
+    """Exact greedy parity spec vs non-spec on tiny models of all five
+    assigned families (dense / ssm / hybrid / encdec / moe)."""
+    import jax
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serve import DecodeEngine, ServeConfig, SpecConfig
+
+    prompts = [[5, 9, 2, 7], [1, 2], [3] * 12, [4, 5, 6], [7], [13, 14]]
+    for arch in ("codeqwen1.5-7b", "xlstm-1.3b", "zamba2-7b",
+                 "seamless-m4t-medium", "granite-moe-1b-a400m"):
+        cfg = get_arch(arch).reduced(n_layers=2, d_model=32, d_ff=64,
+                                     vocab=64)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        base = ServeConfig(max_len=48, batch_slots=2, engine="continuous",
+                          prefill_chunk=4, page_size=8,
+                          debug_invariants=True)
+        ref = DecodeEngine(model, params, base).generate(
+            prompts, max_new_tokens=6)
+        spec_cfg = ServeConfig(max_len=48, batch_slots=2,
+                              engine="continuous", prefill_chunk=4,
+                              page_size=8, debug_invariants=True,
+                              spec=SpecConfig(k=k, drafter_bits=bits))
+        out = DecodeEngine(model, params, spec_cfg).generate(
+            prompts, max_new_tokens=6)
+        if out != ref:
+            return False
+    return True
+
+
+def serve_spec(full: bool = False) -> List[Tuple[str, float, str]]:
+    """Speculative decoding with the NEAT reduced-precision drafter vs
+    the PR-5 paged engine, on a decode-heavy skewed workload.
+
+    The drafter is the serving model itself under a ``WholeProgram
+    (MantissaTrunc(bits))`` rule plus mantissa-truncated weight views: a
+    fused k-step ``lax.scan`` proposes k greedy tokens per decoding slot
+    through the *shared* KV pages, then the target verifies the k+1-row
+    window in one packed chunk-path dispatch — so each accepted window
+    emits up to k+1 tokens for 2 dispatches instead of 1 per dispatch.
+    Greedy completions are byte-identical to the non-speculative engine
+    (the emitted tokens are always the target's own argmax); acceptance
+    degrades as drafter bits shrink, which is the tradeoff
+    ``explore_serving`` searches. Gates (check_smoke): >= 1.5x
+    tokens/sec over the non-speculative paged baseline at bits=10 with
+    acceptance >= 0.6, exact parity on this workload AND on tiny models
+    of all five families, and a bounded p99 TTFT tail.
+    """
+    import time as _t
+
+    import jax
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serve import DecodeEngine, ServeConfig, SpecConfig
+
+    cfg = get_arch("codeqwen1.5-7b").reduced(n_layers=2, d_model=64,
+                                             d_ff=128, vocab=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    n_req = 48 if full else 24
+    max_new = 32                     # decode-heavy: speculation's regime
+    page_size = 16
+    slots, max_len = 8, 160
+    pool = 4 * slots * max_len // page_size
+    spec_k = 4
+    prompts = _skewed_prompts(n_req, cfg.vocab_size)
+
+    def paged_cfg(spec=None):
+        return ServeConfig(max_len=max_len, batch_slots=4 * slots,
+                          engine="continuous", page_size=page_size,
+                          kv_pages=pool, pack_tokens=256, spec=spec)
+
+    arms = {"base": DecodeEngine(model, params, paged_cfg())}
+    for bits in (4, 8, 10):
+        arms[f"b{bits}"] = DecodeEngine(
+            model, params,
+            paged_cfg(SpecConfig(k=spec_k, drafter_bits=bits)))
+    for eng in arms.values():
+        eng.generate(prompts, max_new_tokens=max_new)  # full warmup
+
+    results = {}
+    for name, eng in arms.items():
+        t0 = _t.perf_counter()
+        outs = eng.generate(prompts, max_new_tokens=max_new)
+        dt = _t.perf_counter() - t0
+        st = eng.stats
+        results[name] = dict(
+            outs=outs, us=dt * 1e6, toks_per_s=st.tokens_out / dt,
+            steps=st.steps, acceptance=st.acceptance_rate,
+            windows=st.spec_windows, accepted=st.accepted_tokens,
+            p50_ms=st.p50_ttft_s * 1e3, p99_ms=st.p99_ttft_s * 1e3)
+
+    base = results["base"]
+    best = results["b10"]
+    speedup = best["toks_per_s"] / max(base["toks_per_s"], 1e-9)
+    parity = all(results[a]["outs"] == base["outs"]
+                 for a in ("b4", "b8", "b10"))
+    ttft_ratio = best["p99_ms"] / max(base["p99_ms"], 1e-9)
+    fam_parity = _family_parity(bits=10, k=3)
+
+    rows = [("serve_spec_base", base["us"],
+             f"toks_per_s={base['toks_per_s']:.1f};steps={base['steps']};"
+             f"p50_ttft_ms={base['p50_ms']:.1f};"
+             f"p99_ttft_ms={base['p99_ms']:.1f}")]
+    for bits in (4, 8, 10):
+        r = results[f"b{bits}"]
+        rows.append((f"serve_spec_b{bits}", r["us"],
+                     f"toks_per_s={r['toks_per_s']:.1f};"
+                     f"steps={r['steps']};"
+                     f"acceptance={r['acceptance']:.3f};"
+                     f"windows={r['windows']};"
+                     f"accepted={r['accepted']};"
+                     f"p50_ttft_ms={r['p50_ms']:.1f};"
+                     f"p99_ttft_ms={r['p99_ms']:.1f}"))
+    rows.append(("serve_spec_speedup", 0.0,
+                 f"speedup={speedup:.2f}x;"
+                 f"acceptance={best['acceptance']:.3f};"
+                 f"parity={parity};families_parity={fam_parity};"
+                 f"ttft_p99_ratio={ttft_ratio:.2f}x;"
+                 f"n_requests={n_req};k={spec_k}"))
+    return rows
+
+
 if __name__ == "__main__":
     for name, us, derived in (serve_throughput() + serve_prefill()
-                              + serve_paged()):
+                              + serve_paged() + serve_spec()):
         print(f"{name},{us:.0f},{derived}")

@@ -25,7 +25,7 @@ from repro.core.energy import (
 from repro.core.estimators import (
     EnergyEstimator, StaticEnergyEstimator, DynamicEnergyEstimator,
     make_estimator, register_estimator, channel_scales, fold_bit_counts,
-    host_device_parity,
+    host_device_parity, abstract_step_energy,
 )
 from repro.core.nsga2 import nsga2, NSGA2, NSGA2Result, Evaluated, pareto_front
 from repro.core.pareto import (
@@ -33,6 +33,6 @@ from repro.core.pareto import (
     savings_at_threshold, harmonic_mean, correlation,
 )
 from repro.core.explorer import (
-    ExplorationTask, ExplorationReport, explore, default_error_fn,
-    sites_for_family, PopulationEvaluator,
+    ExplorationTask, ExplorationReport, explore, explore_serving,
+    default_error_fn, sites_for_family, PopulationEvaluator,
 )

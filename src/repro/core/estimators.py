@@ -267,6 +267,27 @@ def make_estimator(kind, prof: Optional[Profile] = None,
     return est
 
 
+def abstract_step_energy(step_fn: Callable, *args,
+                         rule=None,
+                         include_transcendental: bool = True
+                         ) -> EnergyReport:
+    """Static energy of ONE compiled step, profiled **abstractly**.
+
+    ``args`` may be ``jax.ShapeDtypeStruct`` trees — the step is traced,
+    never executed, so this costs zero device dispatches. Exact for the
+    ``MantissaTrunc`` FPI family (the static model's per-FLOP charge is
+    affine in the clamped mantissa width, which is all that family
+    changes); pair with host-side dispatch counts to bill a serving run,
+    e.g. drafter energy = ``abstract_step_energy(decode_cell, ...,
+    rule=draft_rule).total_pj * k * stats.draft_steps``."""
+    from repro.core.energy import static_energy
+    from repro.core.profiler import profile
+
+    prof = profile(step_fn, *args,
+                   include_transcendental=include_transcendental)
+    return static_energy(prof, rule)
+
+
 def host_device_parity(task, family: str, sites: Sequence[str],
                        estimator, evaluator, genomes, inputs, *,
                        include_transcendental: bool = False) -> float:

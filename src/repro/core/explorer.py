@@ -531,3 +531,89 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
 
     report.n_dispatches = ev.n_dispatches
     return report
+
+
+def explore_serving(model, params, prompts, *,
+                    bits_grid: Sequence[int] = (4, 6, 8, 10, 24),
+                    k: int = 4, serve_cfg=None, max_new_tokens: int = 32,
+                    mode: str = "rne") -> ExplorationReport:
+    """Serving-objective exploration: genome = the speculative drafter's
+    mantissa bits, objectives = (draft acceptance, drafter energy).
+
+    Each genome serves the same workload through the continuous engine
+    with a ``SpecConfig(drafter_bits=bits)`` drafter; the error axis is
+    ``1 - acceptance_rate`` (the fraction of drafts the full-precision
+    target rejected — the serving analogue of output error, since every
+    rejection costs a wasted draft row) and the energy axis is the
+    drafter's FPU+mem pJ **per speculation window** (one fused k-cell
+    draft): the (B, 1) decode cell profiled **abstractly**
+    (:func:`~repro.core.estimators.abstract_step_energy` — ``jaxpr``
+    walk on ``ShapeDtypeStruct``s, zero device dispatches beyond the
+    serve steps themselves, and exact for the ``MantissaTrunc`` family)
+    times ``k``. Per-window — not run-total — energy is the genome's
+    *intrinsic* cost: fewer bits cheapen every draft cell but lose
+    acceptance, so the grid traces a genuine acceptance-vs-energy front
+    (a run-total axis would fold the error objective back into energy,
+    since rejections spawn extra windows). The run-level bill,
+    ``energy * stats.draft_steps``, is in ``payload["total_pj"]``.
+    Greedy outputs are byte-identical across genomes (verification is
+    exact), which is why acceptance — not correctness — is the serving
+    error axis.
+
+    Returns the standard :class:`ExplorationReport` (``points`` carry
+    ``payload["bits" | "acceptance" | "tokens_per_s" | "total_pj" |
+    "stats"]``)."""
+    import time as _time
+
+    from repro.core.estimators import abstract_step_energy
+    from repro.core.fpi import MantissaTrunc
+    from repro.core.placement import WholeProgram
+    from repro.serve.engine import DecodeEngine, ServeConfig, SpecConfig
+
+    base_cfg = serve_cfg if serve_cfg is not None else ServeConfig()
+    if base_cfg.engine != "continuous":
+        raise ValueError("explore_serving requires the continuous engine")
+
+    # abstract decode-cell census: one trace, reused for every genome's
+    # static charge (the contiguous cell — the drafter's arithmetic is
+    # layout-independent, only the token plumbing differs)
+    a_params = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), params)
+    a_cache = jax.eval_shape(
+        lambda: model.init_cache(base_cfg.batch_slots, base_cfg.max_len))
+    a_toks = jax.ShapeDtypeStruct((base_cfg.batch_slots, 1), jnp.int32)
+
+    def cell_energy(rule):
+        return abstract_step_energy(
+            lambda p, c, t: model.decode_step(p, c, t),
+            a_params, a_cache, a_toks, rule=rule)
+
+    base_rep = cell_energy(None)
+    points: List[TradeoffPoint] = []
+    for bits in bits_grid:
+        cfg = dataclasses.replace(
+            base_cfg, spec=SpecConfig(k=k, drafter_bits=int(bits),
+                                      mode=mode))
+        eng = DecodeEngine(model, params, cfg)
+        t0 = _time.perf_counter()
+        eng.generate(prompts, max_new_tokens=max_new_tokens)
+        dt = _time.perf_counter() - t0
+        st = eng.stats
+        rule = WholeProgram(fpi=MantissaTrunc(bits=int(bits), mode=mode))
+        rep = cell_energy(rule)
+        points.append(TradeoffPoint(
+            error=1.0 - st.acceptance_rate,
+            energy=rep.total_pj * k,          # one draft window's pJ
+            payload={"genome": (int(bits),), "bits": int(bits),
+                     "mem": rep.mem_pj * k,
+                     "acceptance": st.acceptance_rate,
+                     "tokens_per_s": st.tokens_out / max(dt, 1e-9),
+                     "total_pj": rep.total_pj * k * st.draft_steps,
+                     "stats": st}))
+    return ExplorationReport(
+        task="serving-spec", family="wp", sites=["drafter_bits"],
+        points=points, hull=lower_convex_hull(points),
+        n_evals=len(points),
+        baseline_fpu_pj=base_rep.fpu_pj, baseline_mem_pj=base_rep.mem_pj,
+        flop_coverage=1.0, batched=False,
+        energy_estimator="static-abstract")

@@ -21,6 +21,15 @@ same online-softmax loop, streaming one page per KV step, and the
 ``kv_len``/``q_start`` mask contract is unchanged (logical key position
 ``page_slot * page_size + offset``). Unallocated table entries are
 clamped to a valid page and masked off by ``kv_len``.
+
+Speculative verification (``serve.engine`` draft-and-verify) reuses this
+same ``q_start``/``kv_len`` contract unmodified: the target model scores
+a slot's k+1 candidate rows as a short chunked-prefill window starting
+at ``q_start = committed_len``, and rejected drafts are "rolled back" by
+simply not advancing ``kv_len`` past the accepted prefix — stale KV rows
+beyond it are masked off here and overwritten by the next ingest, so the
+kernel needs no erase path. The drafter's reduced-precision rule rides
+the existing fused ``qk_bits``/``out_bits`` hooks.
 """
 from __future__ import annotations
 

@@ -9,6 +9,12 @@
 The Pallas paths leave ``interpret`` unset (None) so the kernels resolve
 it from ``jax.default_backend()`` themselves (``kernels.runtime``);
 callers never hardcode emulation.
+
+These wrappers are precision-agnostic plumbing: the serving engine's
+reduced-precision drafter does not add kernel variants — it reaches the
+same ``flash_attention``/``paged_flash_attention`` entry points with
+smaller fused ``qk_bits``/``out_bits`` resolved from the ambient NEAT
+rule, and ``mantissa_trunc`` is what builds its truncated weight views.
 """
 from __future__ import annotations
 

@@ -18,7 +18,7 @@ from repro.configs import get_arch, list_archs
 from repro.core.fpi import MantissaTrunc
 from repro.core.placement import WholeProgram
 from repro.models import build_model
-from repro.serve.engine import DecodeEngine, ServeConfig
+from repro.serve.engine import DecodeEngine, ServeConfig, SpecConfig
 
 
 def main() -> None:
@@ -51,6 +51,16 @@ def main() -> None:
     ap.add_argument("--pack-tokens", type=int, default=0,
                     help="packed prefill stream width per step (0 "
                          "derives slots * chunk)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens per slot "
+                         "per step (0 = off); the drafter is the model "
+                         "itself at --drafter-bits mantissa bits")
+    ap.add_argument("--drafter-bits", type=int, default=10,
+                    help="NEAT drafter mantissa bits (incl. implicit; "
+                         "fp32: 1..24, 24 = identity drafter)")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="scale each slot's draft budget by its "
+                         "trailing acceptance rate")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -65,6 +75,14 @@ def main() -> None:
         rule = WholeProgram(fpi=MantissaTrunc(bits), target="single")
         print(f"[serve] NEAT rule: WP mant{bits}")
 
+    spec = None
+    if args.spec_k > 0:
+        spec = SpecConfig(k=args.spec_k, drafter_bits=args.drafter_bits,
+                          adaptive=args.spec_adaptive)
+        print(f"[serve] speculative: k={args.spec_k} "
+              f"drafter=mant{args.drafter_bits}"
+              f"{' adaptive' if args.spec_adaptive else ''}")
+
     engine = DecodeEngine(model, params,
                           ServeConfig(max_len=128, batch_slots=args.slots,
                                       engine=args.engine,
@@ -72,7 +90,8 @@ def main() -> None:
                                       prefill_chunk=args.chunk,
                                       page_size=args.page_size,
                                       kv_pages=args.kv_pages,
-                                      pack_tokens=args.pack_tokens),
+                                      pack_tokens=args.pack_tokens,
+                                      spec=spec),
                           rule=rule)
     prompts = [[(7 * i + 3) % cfg.vocab_size for _ in range(4)]
                for i in range(args.prompts)]
@@ -88,6 +107,15 @@ def main() -> None:
         print(f"[serve] paged: pool={st.pool_pages} pages "
               f"peak_resident={st.peak_resident_pages} "
               f"peak_active={st.peak_active_requests}")
+    if spec is not None:
+        hist = dict(sorted(st.accepted_hist.items()))
+        print(f"[serve] spec: acceptance={st.acceptance_rate:.3f} "
+              f"windows={st.spec_windows} drafted={st.draft_tokens} "
+              f"accepted={st.accepted_tokens} "
+              f"draft_steps={st.draft_steps} "
+              f"verify_steps={st.verify_steps} hist={hist} "
+              f"p50_ttft={st.p50_ttft_s * 1e3:.1f}ms "
+              f"p99_ttft={st.p99_ttft_s * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

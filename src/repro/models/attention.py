@@ -362,7 +362,13 @@ def _ambient_dot_bits() -> Tuple[int, int, str]:
     before its softmax; the chunked path fuses its softmax inside the
     kernel, so the same truncation must ride the kernel's NEAT hooks —
     otherwise chunked prefill and streaming decode diverge under a
-    reduced-precision serving rule. Identity (24 bits) with no rule."""
+    reduced-precision serving rule. Identity (24 bits) with no rule.
+
+    The speculative drafter (``serve.engine``) resolves here too: it
+    traces ``decode_step`` under ``use_rule(WholeProgram(MantissaTrunc))``
+    so its qk/pv truncation lands in this hook, while verification traces
+    with no ambient rule and stays exact — one code path, two
+    precisions."""
     from repro.core.quantize import active_rule
     from repro.core.scope import current_stack
     rule = active_rule()

@@ -146,18 +146,12 @@ def reset_slots(cfg: ModelConfig, cache, mask):
     return new
 
 
-def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig,
-                  memory: jnp.ndarray | None = None):
-    """Chunked decoder prefill: the (B, C) chunk runs batched through
-    each decoder layer — self-attention against the slot's KV prefix via
-    the flash kernel's ``q_start`` path, cross-attention over the cached
-    encoder memory. Returns each slot's last-valid-column logits and the
-    cache advanced by ``n_new`` per slot."""
-    from repro.models.prefill import broadcast_n_new, gather_last_logits
-    memory = cache["memory"] if memory is None else memory
-    b, c = tokens.shape
+def _chunk_logits(params, cache, tokens, n_new, memory,
+                  cfg: ModelConfig):
+    """Shared (B, C)-chunk decoder trunk (self-attn via the ``q_start``
+    path + cross-attn over the cached memory) returning full per-column
+    logits (B, C, V) and the written layer caches."""
     pos = cache["pos"]
-    n_new = broadcast_n_new(n_new, b)
     with pscope("model"), pscope("decoder"):
         x = embedding(params["embed"], tokens, cfg.compute_dtype)
         new_layers = []
@@ -175,8 +169,42 @@ def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig,
                 x = x + mlp(layer["mlp"], h, cfg)
         x = norm(params["final_norm"], x, cfg.norm)
         logits = unembed(params["head"], x, tied=False)
+    return logits, new_layers
+
+
+def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig,
+                  memory: jnp.ndarray | None = None):
+    """Chunked decoder prefill: the (B, C) chunk runs batched through
+    each decoder layer — self-attention against the slot's KV prefix via
+    the flash kernel's ``q_start`` path, cross-attention over the cached
+    encoder memory. Returns each slot's last-valid-column logits and the
+    cache advanced by ``n_new`` per slot."""
+    from repro.models.prefill import broadcast_n_new, gather_last_logits
+    memory = cache["memory"] if memory is None else memory
+    b, c = tokens.shape
+    n_new = broadcast_n_new(n_new, b)
+    logits, new_layers = _chunk_logits(params, cache, tokens, n_new,
+                                       memory, cfg)
     return (gather_last_logits(logits, n_new),
-            {"layers": new_layers, "pos": pos + n_new, "memory": memory})
+            {"layers": new_layers, "pos": cache["pos"] + n_new,
+             "memory": memory})
+
+
+def spec_verify(params, cache, tokens, n_new, draft, spec,
+                cfg: ModelConfig):
+    """Speculative verify on the decoder rectangle — the transformer
+    contract (see ``transformer.spec_verify``) with the cached encoder
+    memory carried through: position commit by accepted advance, the
+    rejected tail's self-attn KV left stale-but-masked."""
+    from repro.models.prefill import broadcast_n_new, spec_acceptance
+    memory = cache["memory"]
+    b, c = tokens.shape
+    n_new = broadcast_n_new(n_new, b)
+    logits, new_layers = _chunk_logits(params, cache, tokens, n_new,
+                                       memory, cfg)
+    greedy, n_acc, adv = spec_acceptance(logits, draft, n_new, spec)
+    return greedy, n_acc, {"layers": new_layers,
+                           "pos": cache["pos"] + adv, "memory": memory}
 
 
 def prefill_packed(params, cache, tokens, slot, qpos, last,
@@ -193,6 +221,22 @@ def prefill_packed(params, cache, tokens, slot, qpos, last,
     slot = slot.astype(jnp.int32)
     qpos = qpos.astype(jnp.int32)
     counts = jnp.zeros((b,), jnp.int32).at[slot].add(1, mode="drop")
+    logits, new_layers = _packed_logits(params, cache, tokens, slot,
+                                        qpos, memory, cfg)
+    t = tokens.shape[0]
+    per_slot = logits[0][jnp.clip(last.astype(jnp.int32), 0, t - 1)]
+    return (per_slot[:, None, :],
+            {"layers": new_layers, "block_tables": bt,
+             "pos": cache["pos"] + counts, "memory": memory})
+
+
+def _packed_logits(params, cache, tokens, slot, qpos, memory,
+                   cfg: ModelConfig):
+    """Shared packed-stream decoder trunk: paged self-attn per row plus
+    per-row cross-attn over each row's own slot's cached memory;
+    returns (1, T, V) per-row logits and the written layer caches."""
+    bt = cache["block_tables"]
+    b = bt.shape[0]
     mem_rows = memory[jnp.clip(slot, 0, b - 1)]      # (T, Tm, D)
     with pscope("model"), pscope("decoder"):
         x = embedding(params["embed"], tokens[None], cfg.compute_dtype)
@@ -215,11 +259,28 @@ def prefill_packed(params, cache, tokens, slot, qpos, last,
                 x = x + mlp(layer["mlp"], h, cfg)
         x = norm(params["final_norm"], x, cfg.norm)
         logits = unembed(params["head"], x, tied=False)   # (1, T, V)
+    return logits, new_layers
+
+
+def spec_verify_packed(params, cache, tokens, slot, qpos, rowidx, n_new,
+                       draft, spec, cfg: ModelConfig, *, cap: int = 0):
+    """Packed-stream speculative verify for the encoder-decoder: the
+    transformer contract (``transformer.spec_verify_packed``) with the
+    cached encoder memory cross-attended per packed row and carried
+    through the committed cache."""
+    del cap
+    from repro.models.prefill import spec_acceptance
+    memory = cache["memory"]
+    bt = cache["block_tables"]
+    slot = slot.astype(jnp.int32)
+    qpos = qpos.astype(jnp.int32)
+    logits, new_layers = _packed_logits(params, cache, tokens, slot,
+                                        qpos, memory, cfg)
     t = tokens.shape[0]
-    per_slot = logits[0][jnp.clip(last.astype(jnp.int32), 0, t - 1)]
-    return (per_slot[:, None, :],
-            {"layers": new_layers, "block_tables": bt,
-             "pos": cache["pos"] + counts, "memory": memory})
+    per = logits[0][jnp.clip(rowidx.astype(jnp.int32), 0, t - 1)]
+    greedy, n_acc, adv = spec_acceptance(per, draft, n_new, spec)
+    return greedy, n_acc, {"layers": new_layers, "block_tables": bt,
+                           "pos": cache["pos"] + adv, "memory": memory}
 
 
 def decode_step(params, cache, tokens, cfg: ModelConfig,

@@ -208,6 +208,33 @@ def prefill_packed(params, cache, tokens, slot, qpos, last,
         slot, batch, cap)
 
 
+def spec_verify(params, cache, tokens, n_new, draft, spec,
+                cfg: ModelConfig):
+    """Speculative verify for the hybrid stack: the decode cell scanned
+    with commit-as-you-accept masking — the Mamba backbone's dense state
+    is merged per accepted column (a recurrent state cannot be
+    position-rewound) while the shared attention block's paged KV
+    self-heals through the pool-leaf rule of ``prefill.merge_slotwise``
+    exactly as in packed prefill."""
+    from repro.models.prefill import spec_scan_verify
+    return spec_scan_verify(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
+        n_new, draft, spec)
+
+
+def spec_verify_packed(params, cache, tokens, slot, qpos, rowidx, n_new,
+                       draft, spec, cfg: ModelConfig, *, cap: int):
+    """Packed-stream speculative verify: unpack into the (B, cap)
+    rectangle and ride the commit-as-you-accept scan (state is dense,
+    the attention block's pool writes self-heal)."""
+    del qpos, rowidx
+    from repro.models.prefill import packed_spec_scan_verify
+    batch = cache["pos"].shape[0]
+    return packed_spec_scan_verify(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
+        slot, batch, cap, n_new, draft, spec)
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig):
     period = max(cfg.attn_period, 1)
     pos = cache["pos"]

@@ -32,6 +32,18 @@ class Model:
     #: is the static per-slot row ceiling (recurrent families unpack
     #: into a (B, cap) rectangle)
     prefill_packed: Callable
+    #: speculative verify, rectangle form: (params, cache, (B, C) window
+    #: tokens, (B,) n_new, (B, K) draft, (B,) spec) -> ((B, C) greedy,
+    #: (B,) n_acc, cache committed by the accepted advance) — the target
+    #: model runs every window row through the chunk path and the cache
+    #: position rewinds past rejected rows (attention families) or the
+    #: scan merge never commits them (recurrent families)
+    spec_verify: Callable = None
+    #: speculative verify, packed ragged form: (params, cache, (T,)
+    #: tokens, (T,) slot, (T,) qpos, (B, C) rowidx, (B,) n_new, (B, K)
+    #: draft, (B,) spec, cap) -> ((B, C) greedy, (B,) n_acc, cache);
+    #: speculation windows ride the same packed stream as prefill chunks
+    spec_verify_packed: Callable = None
     #: True when init_paged_cache really pages KV (block tables present),
     #: i.e. the engine's page allocator governs this family's memory
     paged_kv: bool = False
@@ -63,6 +75,11 @@ def build_model(cfg: ModelConfig) -> Model:
             cfg, b, s, ps, np_),
         prefill_packed=lambda p, c, t, s, q, l, cap: mod.prefill_packed(
             p, c, t, s, q, l, cfg, cap=cap),
+        spec_verify=lambda p, c, tok, n, d, sp: mod.spec_verify(
+            p, c, tok, n, d, sp, cfg),
+        spec_verify_packed=lambda p, c, t, s, q, ri, n, d, sp, cap:
+            mod.spec_verify_packed(p, c, t, s, q, ri, n, d, sp, cfg,
+                                   cap=cap),
         paged_kv=fam != "ssm",
     )
 

@@ -91,6 +91,105 @@ def merge_slotwise(new_cache, old_cache, keep: jnp.ndarray):
     return rec(new_cache, old_cache)
 
 
+def spec_acceptance(logits: jnp.ndarray, draft: jnp.ndarray,
+                    n_new: jnp.ndarray, spec: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Greedy draft-token acceptance for speculative decoding.
+
+    ``logits``: (B, C, V) — column j's logits after ingesting the
+    window's row j (row 0 is the slot's current token, rows 1..k its
+    draft tokens); ``draft``: (B, K) drafted tokens (``K <= C``);
+    ``n_new``: (B,) rows actually ingested this step (``k_s + 1`` for a
+    speculating slot, the chunk take for a prefilling one); ``spec``:
+    (B,) bool — True for slots whose rows are a speculation window.
+
+    Returns ``(greedy, n_acc, adv)``: the (B, C) per-column greedy
+    tokens, the (B,) count of *leading* draft matches (``draft[:, i] ==
+    greedy[:, i]`` — column i's greedy token is the target's next token
+    after draft i-1, i.e. what draft i claims to be), and the (B,)
+    position advance to commit: ``n_acc + 1`` rows for a spec slot (its
+    current token plus the accepted drafts — the bonus token
+    ``greedy[:, n_acc]`` is *not* ingested, it becomes the next step's
+    current token, exactly the non-speculative contract), ``n_new`` for
+    everyone else. Only columns ``0..n_acc`` are ever read by the
+    caller, and those are conditioned exclusively on committed rows —
+    which is what makes verification exact under greedy decoding."""
+    b, c, _ = logits.shape
+    kmax = draft.shape[1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # (B, C)
+    n_new = broadcast_n_new(n_new, b)
+    cols = jnp.arange(kmax, dtype=jnp.int32)[None, :]
+    match = ((draft.astype(jnp.int32) == greedy[:, :kmax])
+             & (cols < (n_new - 1)[:, None]) & spec[:, None])
+    # leading-run length: cumprod kills everything after the first miss
+    n_acc = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    adv = jnp.where(spec, jnp.minimum(n_acc + 1, n_new), n_new)
+    return greedy, n_acc.astype(jnp.int32), adv.astype(jnp.int32)
+
+
+def spec_scan_verify(decode_step: Callable, params, cache,
+                     tokens: jnp.ndarray, n_new: jnp.ndarray,
+                     draft: jnp.ndarray, spec: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """Speculative verify for recurrent/hybrid families: one masked scan
+    of the decode cell that *commits as it accepts*.
+
+    A recurrent state cannot be position-rewound like a KV cache, so the
+    rollback contract is implemented in the scan's merge mask instead:
+    the carry tracks a per-slot ``alive`` flag that drops the moment a
+    draft token mismatches the cell's own greedy prediction, and a
+    column's state update is kept only while ``alive`` — the committed
+    state is therefore exactly the state after ingesting the current
+    token plus the accepted drafts, never the rejected tail. Columns
+    past the first mismatch still *run* (their logits are collected, as
+    in :func:`masked_scan_prefill` their writes are masked), but every
+    column the caller reads (``0..n_acc``) was conditioned purely on
+    committed rows, so verification is exact. Non-spec slots behave as
+    in :func:`masked_scan_prefill` (``alive`` pinned True).
+
+    Returns ``(greedy (B, C), n_acc (B,), cache)`` with the cache
+    advanced by ``adv`` per slot (see :func:`spec_acceptance`)."""
+    b, c = tokens.shape
+    n_new = broadcast_n_new(n_new, b)
+    spec = jnp.asarray(spec, bool)
+    nxt = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+
+    def step(carry, xs):
+        cc, alive = carry
+        tok, ntok, col = xs                      # (B,), (B,), scalar
+        logits, new_cache = decode_step(params, cc, tok[:, None])
+        keep = alive & (col < n_new)
+        merged = merge_slotwise(new_cache, cc, keep)
+        g = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        # next column survives only if this column committed AND the
+        # next token (the following draft) is the cell's own prediction
+        alive = jnp.where(spec, keep & (ntok.astype(jnp.int32) == g),
+                          True)
+        return (merged, alive), logits[:, -1]
+
+    (cache, _), seq = jax.lax.scan(
+        step, (cache, jnp.ones((b,), bool)),
+        (tokens.T, nxt.T, jnp.arange(c, dtype=jnp.int32)))
+    logits = seq.transpose(1, 0, 2)              # (B, C, V)
+    greedy, n_acc, _ = spec_acceptance(logits, draft, n_new, spec)
+    return greedy, n_acc, cache
+
+
+def packed_spec_scan_verify(decode_step: Callable, params, cache,
+                            tokens: jnp.ndarray, slot: jnp.ndarray,
+                            batch: int, cap: int, n_new: jnp.ndarray,
+                            draft: jnp.ndarray, spec: jnp.ndarray
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """Packed-stream speculative verify for recurrent families: unpack
+    the (T,) stream into the (B, cap) rectangle (rows keep stream order,
+    so a speculating slot's rows come out as ``[cur, d_1 .. d_k]``) and
+    ride :func:`spec_scan_verify`."""
+    rect, _ = unpack_stream(tokens, slot, batch, cap)
+    return spec_scan_verify(decode_step, params, cache, rect, n_new,
+                            draft, spec)
+
+
 def masked_scan_prefill(decode_step: Callable, params, cache,
                         tokens: jnp.ndarray, n_new: jnp.ndarray
                         ) -> Tuple[jnp.ndarray, dict]:

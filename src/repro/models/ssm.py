@@ -11,6 +11,12 @@ no sequential T-step scan appears in the HLO hot path.
 ``mlstm`` (xlstm.py) reuses the same engine: its matrix memory
 C_t = f_t C_{t-1} + i_t v_t k_t^T is the identical algebra with
 a = forget gate and v pre-scaled by the input gate.
+
+Recurrent state has no position axis to mask, so speculative rollback
+cannot use the attention trick of freezing ``kv_len``: the recurrent
+families verify via the masked commit-as-you-accept scan in
+``models.prefill.spec_scan_verify``, which folds a draft row's state
+update into the carry only while the row is still accepted.
 """
 from __future__ import annotations
 

@@ -195,19 +195,14 @@ def _prefill_block(layer, lc, x, pos, n_new, cfg: ModelConfig, i: int,
     return x, new_lc
 
 
-def prefill_chunk(params, cache, tokens: jnp.ndarray, n_new: jnp.ndarray,
-                  cfg: ModelConfig, *, moe_impl: str | None = None
-                  ) -> Tuple[jnp.ndarray, dict]:
-    """Chunked prefill: ingest a (B, C) token chunk, each slot writing its
-    first ``n_new[b]`` tokens' K/V at its own position and attending the
-    chunk causally against its cache prefix (the flash kernel's
-    ``q_start`` path). Returns the (B, 1, V) logits of each slot's last
-    valid column and the cache advanced by ``n_new`` per slot."""
-    from repro.models.prefill import broadcast_n_new, gather_last_logits
-    moe_impl = moe_impl or cfg.moe_impl
-    b, c = tokens.shape
+def _chunk_logits(params, cache, tokens, n_new, cfg: ModelConfig,
+                  moe_impl: str):
+    """Shared (B, C)-chunk trunk: run the chunk through every layer's
+    ``q_start`` prefill attention and return the **full per-column**
+    logits (B, C, V) plus the written layer caches — the chunked-prefill
+    entry gathers one column, the speculative verify entry reads every
+    column (each draft token's greedy successor)."""
     pos = cache["pos"]
-    n_new = broadcast_n_new(n_new, b)
     with pscope("model"):
         x = embedding(params["embed"], tokens, cfg.compute_dtype)
         if cfg.scan_layers:
@@ -227,8 +222,52 @@ def prefill_chunk(params, cache, tokens: jnp.ndarray, n_new: jnp.ndarray,
         x = norm(params["final_norm"], x, cfg.norm)
         head = params["embed"] if cfg.tie_embeddings else params["head"]
         logits = unembed(head, x, cfg.tie_embeddings)
+    return logits, new_layers
+
+
+def prefill_chunk(params, cache, tokens: jnp.ndarray, n_new: jnp.ndarray,
+                  cfg: ModelConfig, *, moe_impl: str | None = None
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """Chunked prefill: ingest a (B, C) token chunk, each slot writing its
+    first ``n_new[b]`` tokens' K/V at its own position and attending the
+    chunk causally against its cache prefix (the flash kernel's
+    ``q_start`` path). Returns the (B, 1, V) logits of each slot's last
+    valid column and the cache advanced by ``n_new`` per slot."""
+    from repro.models.prefill import broadcast_n_new, gather_last_logits
+    moe_impl = moe_impl or cfg.moe_impl
+    b, c = tokens.shape
+    n_new = broadcast_n_new(n_new, b)
+    logits, new_layers = _chunk_logits(params, cache, tokens, n_new, cfg,
+                                       moe_impl)
     return (gather_last_logits(logits, n_new),
-            {"layers": new_layers, "pos": pos + n_new})
+            {"layers": new_layers, "pos": cache["pos"] + n_new})
+
+
+def spec_verify(params, cache, tokens: jnp.ndarray, n_new: jnp.ndarray,
+                draft: jnp.ndarray, spec: jnp.ndarray, cfg: ModelConfig,
+                *, moe_impl: str | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """Speculative verify on a (B, C) rectangle: the target model runs
+    the window's rows (current token + drafts for spec slots, ordinary
+    prompt chunks for everyone else) through the same trunk as
+    :func:`prefill_chunk` — no new kernel math — then accepts the
+    leading greedy matches and **commits the position vector by the
+    accepted advance only** (:func:`repro.models.prefill.
+    spec_acceptance`). Rejected rows' K/V stays in the cache beyond the
+    committed position, where the per-slot ``kv_len``/causal masks hide
+    it and the next genuine ingest overwrites it verbatim — the same
+    stale-but-masked self-heal the packed pool writes rely on, which is
+    the entire rollback contract for attention families. Returns
+    ``(greedy (B, C), n_acc (B,), cache)``."""
+    from repro.models.prefill import broadcast_n_new, spec_acceptance
+    moe_impl = moe_impl or cfg.moe_impl
+    b, c = tokens.shape
+    n_new = broadcast_n_new(n_new, b)
+    logits, new_layers = _chunk_logits(params, cache, tokens, n_new, cfg,
+                                       moe_impl)
+    greedy, n_acc, adv = spec_acceptance(logits, draft, n_new, spec)
+    return greedy, n_acc, {"layers": new_layers,
+                           "pos": cache["pos"] + adv}
 
 
 def _packed_block(layer, lc, x, bt, slot, qpos, cfg: ModelConfig, i: int,
@@ -244,6 +283,36 @@ def _packed_block(layer, lc, x, bt, slot, qpos, cfg: ModelConfig, i: int,
         else:
             x = x + mlp(layer["mlp"], h, cfg)
     return x, new_lc
+
+
+def _packed_logits(params, cache, tokens, slot, qpos, cfg: ModelConfig,
+                   moe_impl: str):
+    """Shared packed-stream trunk: run the (T,) stream through every
+    layer's ``packed_attention`` and return the (1, T, V) per-row logits
+    plus written layer caches. The packed-prefill entry gathers each
+    slot's last row; the speculative verify entry gathers each slot's
+    whole window."""
+    bt = cache["block_tables"]
+    with pscope("model"):
+        x = embedding(params["embed"], tokens[None], cfg.compute_dtype)
+        if cfg.scan_layers:
+            def body(y, xs):
+                layer, lc = xs
+                y, new_lc = _packed_block(layer, lc, y, bt, slot, qpos,
+                                          cfg, 0, moe_impl)
+                return y, new_lc
+            x, new_layers = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+        else:
+            new_layers = []
+            for i, layer in enumerate(params["layers"]):
+                x, lc = _packed_block(layer, cache["layers"][i], x, bt,
+                                      slot, qpos, cfg, i, moe_impl)
+                new_layers.append(lc)
+        x = norm(params["final_norm"], x, cfg.norm)
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = unembed(head, x, cfg.tie_embeddings)    # (1, T, V)
+    return logits, new_layers
 
 
 def prefill_packed(params, cache, tokens: jnp.ndarray, slot: jnp.ndarray,
@@ -269,30 +338,47 @@ def prefill_packed(params, cache, tokens: jnp.ndarray, slot: jnp.ndarray,
     slot = slot.astype(jnp.int32)
     qpos = qpos.astype(jnp.int32)
     counts = jnp.zeros((b,), jnp.int32).at[slot].add(1, mode="drop")
-    with pscope("model"):
-        x = embedding(params["embed"], tokens[None], cfg.compute_dtype)
-        if cfg.scan_layers:
-            def body(y, xs):
-                layer, lc = xs
-                y, new_lc = _packed_block(layer, lc, y, bt, slot, qpos,
-                                          cfg, 0, moe_impl)
-                return y, new_lc
-            x, new_layers = jax.lax.scan(
-                body, x, (params["layers"], cache["layers"]))
-        else:
-            new_layers = []
-            for i, layer in enumerate(params["layers"]):
-                x, lc = _packed_block(layer, cache["layers"][i], x, bt,
-                                      slot, qpos, cfg, i, moe_impl)
-                new_layers.append(lc)
-        x = norm(params["final_norm"], x, cfg.norm)
-        head = params["embed"] if cfg.tie_embeddings else params["head"]
-        logits = unembed(head, x, cfg.tie_embeddings)    # (1, T, V)
+    logits, new_layers = _packed_logits(params, cache, tokens, slot,
+                                        qpos, cfg, moe_impl)
     t = tokens.shape[0]
     per_slot = logits[0][jnp.clip(last.astype(jnp.int32), 0, t - 1)]
     return (per_slot[:, None, :],
             {"layers": new_layers, "block_tables": bt,
              "pos": cache["pos"] + counts})
+
+
+def spec_verify_packed(params, cache, tokens: jnp.ndarray,
+                       slot: jnp.ndarray, qpos: jnp.ndarray,
+                       rowidx: jnp.ndarray, n_new: jnp.ndarray,
+                       draft: jnp.ndarray, spec: jnp.ndarray,
+                       cfg: ModelConfig, *, cap: int = 0,
+                       moe_impl: str | None = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """Packed-stream speculative verify: each speculating slot's window
+    (``[cur, d_1 .. d_k]``) packs as ordinary ragged rows next to the
+    prefilling slots' chunks — the mixed step the engine runs while
+    prompts are still streaming in. ``rowidx``: (B, C) stream index of
+    each slot's window row j (``>= T`` / anything for unused columns —
+    the gather clamps and acceptance masks them via ``n_new``). Drafter
+    writes rode the same block tables; this call overwrites the window's
+    positions with the *target's* K/V, commits ``pos`` by the accepted
+    advance, and leaves the rejected tail stale-but-masked in the pool
+    (the packed self-heal property — see
+    ``repro.models.prefill.merge_slotwise``). Returns ``(greedy (B, C),
+    n_acc (B,), cache)``."""
+    del cap
+    from repro.models.prefill import spec_acceptance
+    moe_impl = moe_impl or cfg.moe_impl
+    bt = cache["block_tables"]
+    slot = slot.astype(jnp.int32)
+    qpos = qpos.astype(jnp.int32)
+    logits, new_layers = _packed_logits(params, cache, tokens, slot,
+                                        qpos, cfg, moe_impl)
+    t = tokens.shape[0]
+    per = logits[0][jnp.clip(rowidx.astype(jnp.int32), 0, t - 1)]
+    greedy, n_acc, adv = spec_acceptance(per, draft, n_new, spec)
+    return greedy, n_acc, {"layers": new_layers, "block_tables": bt,
+                           "pos": cache["pos"] + adv}
 
 
 def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,

@@ -372,6 +372,31 @@ def prefill_packed(params, cache, tokens, slot, qpos, last,
         slot, batch, cap)
 
 
+def spec_verify(params, cache, tokens, n_new, draft, spec,
+                cfg: ModelConfig):
+    """Speculative verify for the pure-recurrent stack: the decode cell
+    scanned over the window with commit-as-you-accept state masking —
+    a recurrent state has no position axis to rewind, so rejection is a
+    masked merge, not a rewind (``prefill.spec_scan_verify``)."""
+    from repro.models.prefill import spec_scan_verify
+    return spec_scan_verify(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
+        n_new, draft, spec)
+
+
+def spec_verify_packed(params, cache, tokens, slot, qpos, rowidx, n_new,
+                       draft, spec, cfg: ModelConfig, *, cap: int):
+    """Packed-stream speculative verify: unpack into the (B, cap)
+    rectangle (rows keep stream order, so a window arrives as
+    ``[cur, d_1 .. d_k]``) and ride the commit-as-you-accept scan."""
+    del qpos, rowidx
+    from repro.models.prefill import packed_spec_scan_verify
+    batch = cache["pos"].shape[0]
+    return packed_spec_scan_verify(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, tokens,
+        slot, batch, cap, n_new, draft, spec)
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig):
     kinds = block_kinds(cfg)
     with pscope("model"):

@@ -1,3 +1,5 @@
-from repro.serve.engine import DecodeEngine, ServeConfig, ServeStats
+from repro.serve.engine import (DecodeEngine, ServeConfig, ServeStats,
+                                SpecConfig, drafter_params)
 
-__all__ = ["DecodeEngine", "ServeConfig", "ServeStats"]
+__all__ = ["DecodeEngine", "ServeConfig", "ServeStats", "SpecConfig",
+           "drafter_params"]

@@ -68,6 +68,55 @@ from repro.core.quantize import use_rule
 from repro.models.model_api import Model
 
 
+def drafter_params(params, bits: int, mode: str = "rne"):
+    """Mantissa-truncated weight views for the NEAT drafter: every float
+    leaf reduced to ``bits`` effective mantissa bits (identity at native
+    width), non-float leaves untouched. The drafter is the *same* model
+    under these views plus the ambient drafter rule — no second set of
+    trained weights."""
+    from repro.utils.numerics import truncate_mantissa
+    import jax.numpy as _jnp
+
+    def trunc(w):
+        if hasattr(w, "dtype") and _jnp.issubdtype(w.dtype, _jnp.floating):
+            return truncate_mantissa(w, bits, mode)
+        return w
+
+    return jax.tree.map(trunc, params)
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decoding policy for the continuous engine.
+
+    The drafter is the serving model itself at reduced precision: its
+    weights are mantissa-truncated views (:func:`drafter_params`) and
+    its forward runs under a ``WholeProgram(MantissaTrunc(drafter_bits,
+    mode), target="any")`` rule, which the fused attention path resolves
+    through ``_ambient_dot_bits`` — the paper's genome applied to the
+    draft phase of every request. Each step the drafter proposes ``k``
+    greedy tokens per decoding slot in ONE fused dispatch (a
+    ``lax.scan`` of the decode cell with on-device argmax feedback,
+    reading the *shared* KV prefix through the same block tables); the
+    target model then verifies the whole window in one chunk-path
+    dispatch. Greedy parity with the non-speculative engine is exact by
+    construction — the emitted tokens are always the target's own
+    argmax."""
+    #: draft tokens proposed per slot per step (the window is k+1 rows)
+    k: int = 4
+    #: drafter mantissa bits incl. the implicit bit (fp32: 1..24;
+    #: 24 = identity drafter, acceptance is exactly 1)
+    drafter_bits: int = 10
+    #: rounding mode for weight views + fused truncation
+    mode: str = "rne"
+    #: scale each slot's draft budget by its trailing acceptance EMA
+    #: (deterministic; resets to 1.0 on admission)
+    adaptive: bool = False
+    #: explicit drafter weights (a genuinely different draft model);
+    #: None derives mantissa-truncated views of the serving weights
+    draft_params: Optional[object] = None
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_len: int = 256
@@ -105,8 +154,17 @@ class ServeConfig:
     #: packed-stream width per compiled prefill step (ΣC); 0 derives
     #: ``batch_slots * prefill_chunk`` (the rectangle's token capacity,
     #: so step counts never regress). Must be >= batch_slots so every
-    #: active slot gets at least one row per step.
+    #: active slot gets at least one row per step. The engine rounds
+    #: each step's live row count up to the next power of two <= this
+    #: budget (width buckets — one cached compilation per bucket), so
+    #: mostly-decode steps stop paying the full rectangle's padding.
     pack_tokens: int = 0
+    #: speculative decoding policy; None serves non-speculatively.
+    #: Requires the continuous engine and greedy (temperature 0).
+    spec: Optional[SpecConfig] = None
+    #: assert the page-pool accounting invariant (free + resident ==
+    #: total) after every step — cheap, host-side; meant for tests
+    debug_invariants: bool = False
 
 
 @dataclasses.dataclass
@@ -126,6 +184,16 @@ class ServeStats:
     peak_active_requests: int = 0
     #: per-request time-to-first-token, seconds since generate() started
     ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    #: speculative decoding accounting (zeros outside spec mode)
+    draft_steps: int = 0              # fused k-step drafter dispatches
+    verify_steps: int = 0             # target verify dispatches
+    spec_windows: int = 0             # per-slot speculation windows run
+    draft_tokens: int = 0             # draft tokens actually proposed
+    accepted_tokens: int = 0          # drafts the target accepted
+    #: per-window accepted-draft histogram: {n_accepted: windows}
+    accepted_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: packed-step width-bucket histogram: {width: steps}
+    packed_widths: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def occupancy(self) -> float:
@@ -135,6 +203,27 @@ class ServeStats:
     def mean_ttft_s(self) -> float:
         return (sum(self.ttft_s.values()) / len(self.ttft_s)
                 if self.ttft_s else 0.0)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        return self.accepted_tokens / max(self.draft_tokens, 1)
+
+    def ttft_percentile(self, q: float) -> float:
+        """Nearest-rank TTFT percentile over completed requests,
+        ``q`` in [0, 1]. 0.0 with no requests recorded."""
+        if not self.ttft_s:
+            return 0.0
+        vals = sorted(self.ttft_s.values())
+        return vals[min(len(vals) - 1, int(round(q * (len(vals) - 1))))]
+
+    @property
+    def p50_ttft_s(self) -> float:
+        return self.ttft_percentile(0.50)
+
+    @property
+    def p99_ttft_s(self) -> float:
+        return self.ttft_percentile(0.99)
 
 
 class PageAllocator:
@@ -167,6 +256,38 @@ class PageAllocator:
     def free(self, pages: List[int]) -> None:
         self._free.extend(pages)
 
+    def rollback(self, pages: List[int], committed_tokens: int,
+                 page_size: int) -> int:
+        """Resolve a slot's rejected speculative tail.
+
+        The KV entries themselves are invalidated by the engine
+        rewinding the slot's position vector — entries past the
+        committed position are hidden by the per-slot ``kv_len``/causal
+        masks and overwritten verbatim on the next genuine ingest — so
+        the allocator's side of the contract is bookkeeping: the pages
+        stay with the slot (admission reserved the worst case, so a
+        rewind never shrinks ownership), and this checks the committed
+        prefix still fits the reservation. Returns the number of pages
+        the committed prefix actually references. Must run before the
+        slot's pages can be freed — a retire mid-speculation-window
+        frees pages only after the rollback resolved."""
+        need = -(-committed_tokens // page_size) if committed_tokens else 0
+        if need > len(pages):
+            raise AssertionError(
+                f"rollback: {committed_tokens} committed tokens need "
+                f"{need} pages but the slot holds {len(pages)}")
+        return need
+
+    def assert_invariant(self, resident: int) -> None:
+        """``free + resident == total``: every pool page is exactly one
+        of free or owned by a live slot. A retire that double-freed
+        (e.g. mid-speculation EOS handled twice) or leaked pages trips
+        this."""
+        if len(self._free) + resident != self.num_pages:
+            raise AssertionError(
+                f"page accounting broken: {len(self._free)} free + "
+                f"{resident} resident != {self.num_pages} total")
+
 
 class DecodeEngine:
     def __init__(self, model: Model, params, cfg: ServeConfig,
@@ -197,6 +318,26 @@ class DecodeEngine:
             if self.pack_tokens < cfg.batch_slots:
                 raise ValueError("pack_tokens must be >= batch_slots "
                                  "(every active slot needs one row)")
+        self._spec = cfg.spec
+        if self._spec is not None:
+            if cfg.engine != "continuous":
+                raise ValueError("speculative decoding requires the "
+                                 "continuous engine")
+            if cfg.temperature > 0.0:
+                raise ValueError("speculative decoding is greedy-only "
+                                 "(temperature must be 0)")
+            if self._spec.k < 1:
+                raise ValueError("spec.k must be >= 1")
+            from repro.core.placement import WholeProgram
+            from repro.core.fpi import MantissaTrunc
+            self._draft_rule = WholeProgram(fpi=MantissaTrunc(
+                bits=self._spec.drafter_bits, mode=self._spec.mode))
+            # the drafter's weight views: computed once, device-resident
+            self._draft_params = (
+                self._spec.draft_params if self._spec.draft_params
+                is not None else jax.jit(
+                    lambda p: drafter_params(p, self._spec.drafter_bits,
+                                             self._spec.mode))(params))
         with use_rule(rule):
             self._step = jax.jit(
                 lambda p, c, t: model.decode_step(p, c, t))
@@ -216,6 +357,44 @@ class DecodeEngine:
             # instead of copying every layer's (B, S, KV, Dh) buffers
             self._reset = jax.jit(lambda c, m: model.reset_slots(c, m),
                                   donate_argnums=0)
+            if self._spec is not None:
+                sc = self._spec
+
+                # ONE fused dispatch drafts k greedy tokens per slot: a
+                # lax.scan of the decode cell with on-device argmax
+                # feedback, traced under the drafter rule (use_rule is
+                # thread-local and applies at trace time, so the
+                # reduced-precision fused qk/pv path is baked into this
+                # jit and only this jit). The drafter's cache writes ride
+                # the SAME pools/block tables as the target; the
+                # post-draft cache is simply discarded (JAX functional
+                # semantics = free snapshot), so verification always
+                # starts from the committed prefix.
+                def _draft_fn(p, c, t):
+                    with use_rule(self._draft_rule):
+                        def step(carry, _):
+                            cc, tok = carry
+                            logits, cc = model.decode_step(p, cc, tok)
+                            nxt = jnp.argmax(
+                                logits[:, -1, :],
+                                axis=-1).astype(jnp.int32)[:, None]
+                            return (cc, nxt), nxt[:, 0]
+                        (_, _), seq = jax.lax.scan(step, (c, t), None,
+                                                   length=sc.k)
+                    return seq.T              # (B, k)
+
+                self._draft = jax.jit(_draft_fn)
+                # target verify over the k+1 candidate rows — the
+                # existing chunk path's q_start/kv_len math, full
+                # precision (this jit traces under the serving rule)
+                self._verify = jax.jit(
+                    lambda p, c, tok, n, d, sp: model.spec_verify(
+                        p, c, tok, n, d, sp))
+                vcap = max(cfg.prefill_chunk, sc.k + 1)
+                self._verify_packed = jax.jit(
+                    lambda p, c, t, s, q, ri, n, d, sp:
+                        model.spec_verify_packed(p, c, t, s, q, ri, n,
+                                                 d, sp, vcap))
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         logits = logits[:, -1, :]
@@ -321,6 +500,80 @@ class DecodeEngine:
         if rid not in self.stats.ttft_s:
             self.stats.ttft_s[rid] = time.perf_counter() - self._t0
 
+    # -- speculative-decoding helpers ----------------------------------------
+    def _bucket_width(self, rows: int) -> int:
+        """Packed-step width bucket: the smallest power of two covering
+        the live row count, clamped to ``pack_tokens``. One cached
+        compilation per bucket; mostly-decode steps stop paying the full
+        rectangle's padding."""
+        w = 1
+        while w < rows:
+            w <<= 1
+        w = min(w, self.pack_tokens)
+        self.stats.packed_widths[w] = self.stats.packed_widths.get(w, 0) + 1
+        return w
+
+    def _draft_tokens(self, cache, cur, rid, rem, left, spos, ema):
+        """Run the fused drafter over the decoding slots; returns the
+        per-slot draft budget ``kvec`` and a host-side (n_slots, k)
+        draft-token array. ``kvec[s]`` clamps the window so the emitted
+        tokens can never exceed the slot's completion budget or cache
+        room (the window also emits the target's bonus token, hence the
+        ``- 1``s); adaptive mode scales by the trailing acceptance
+        EMA."""
+        sc = self._spec
+        n_slots = self.cfg.batch_slots
+        kvec = [0] * n_slots
+        for s in range(n_slots):
+            if rid[s] < 0 or rem[s]:
+                continue
+            kb = sc.k
+            if sc.adaptive:
+                kb = max(1, min(sc.k, int(round(sc.k * ema[s]))))
+            kvec[s] = max(0, min(kb, left[s] - 1,
+                                 self.cfg.max_len - 2 - spos[s]))
+        drafts = np.zeros((n_slots, sc.k), np.int32)
+        if any(kvec):
+            cur_t = np.zeros((n_slots, 1), np.int32)
+            for s in range(n_slots):
+                if rid[s] >= 0 and not rem[s]:
+                    cur_t[s, 0] = cur[s]
+            drafts = np.asarray(self._draft(self._draft_params, cache,
+                                            jnp.asarray(cur_t)))
+            self.stats.draft_steps += 1
+        return kvec, drafts
+
+    def _note_window(self, s: int, acc: int, ks: int, ema) -> None:
+        """Account one resolved speculation window and feed the slot's
+        acceptance EMA (adaptive k). ``draft_tokens`` counts the drafts
+        a verify dispatch actually consumed, so ``acceptance_rate`` is
+        exactly accepted / verified."""
+        self.stats.spec_windows += 1
+        self.stats.draft_tokens += ks
+        self.stats.accepted_tokens += acc
+        self.stats.accepted_hist[acc] = (
+            self.stats.accepted_hist.get(acc, 0) + 1)
+        if self._spec.adaptive and ks > 0:
+            ema[s] = 0.5 * ema[s] + 0.5 * (acc / ks)
+
+    def _emit(self, s, rid, left, spos, outputs, toks, rows0) -> bool:
+        """Append accepted+bonus tokens for slot ``s``; True if the slot
+        must retire (budget, EOS, or cache exhaustion). ``rows0`` is the
+        cache rows consumed before the first emitted token (1 for a
+        speculation window whose tokens land one row apart; ``take`` for
+        a prefill-draining slot whose single token rides the chunk)."""
+        cfg = self.cfg
+        for j, tok in enumerate(toks):
+            self._first_token(rid[s])
+            outputs[rid[s]].append(int(tok))
+            left[s] -= 1
+            if (left[s] <= 0
+                    or (cfg.eos_token is not None
+                        and int(tok) == cfg.eos_token)
+                    or spos[s] + rows0 + j >= cfg.max_len - 1):
+                return True
+        return False
+
     # -- continuous scheduler ------------------------------------------------
     def _run_continuous(self, queue, outputs, key):
         """One scheduler loop over the compiled steps: admit the ordered
@@ -338,6 +591,7 @@ class DecodeEngine:
         cur = [0] * n_slots               # next decode token per slot
         left = [0] * n_slots              # completion tokens still owed
         spos = [0] * n_slots              # slot's own cache position
+        ema = [1.0] * n_slots             # trailing acceptance (adaptive k)
 
         while queue or any(r >= 0 for r in rid):
             # admit: reset + refill every free slot from the queue (one
@@ -349,9 +603,87 @@ class DecodeEngine:
                     rem[s] = list(prompt)
                     left[s] = budget
                     spos[s] = 0
+                    ema[s] = 1.0
                     admit[s] = True
             if admit.any():
                 cache = self._reset(cache, jnp.asarray(admit))
+
+            # speculative step: every decoding slot drafts up to k
+            # tokens (one fused reduced-precision dispatch), then the
+            # target verifies all windows in one chunk-path dispatch —
+            # prefilling slots ride the same rectangle as ordinary
+            # chunk rows (mixed step)
+            if self._spec is not None and any(
+                    rid[s] >= 0 and not rem[s] for s in range(n_slots)):
+                sc = self._spec
+                kvec, drafts = self._draft_tokens(cache, cur, rid, rem,
+                                                  left, spos, ema)
+                prefilling = any(rid[s] >= 0 and rem[s]
+                                 for s in range(n_slots))
+                width = max(chunk, sc.k + 1) if prefilling else sc.k + 1
+                toks = np.zeros((n_slots, width), np.int32)
+                n_new = np.ones((n_slots,), np.int32)
+                specv = np.zeros((n_slots,), bool)
+                took = [0] * n_slots
+                for s in range(n_slots):
+                    if rid[s] < 0:
+                        continue
+                    if rem[s]:
+                        take = rem[s][:chunk]
+                        took[s] = len(take)
+                        n_new[s] = len(take)
+                        toks[s, :len(take)] = take
+                        self.stats.prefill_tokens += len(take)
+                    else:
+                        ks = kvec[s]
+                        toks[s, 0] = cur[s]
+                        toks[s, 1:1 + ks] = drafts[s, :ks]
+                        n_new[s] = ks + 1
+                        specv[s] = True
+                greedy, n_acc, cache = self._verify(
+                    self.params, cache, jnp.asarray(toks),
+                    jnp.asarray(n_new), jnp.asarray(drafts),
+                    jnp.asarray(specv))
+                greedy = np.asarray(greedy)
+                n_acc = np.asarray(n_acc)
+                self.stats.steps += 1
+                self.stats.verify_steps += 1
+                if prefilling:
+                    self.stats.prefill_steps += 1
+                for s in range(n_slots):
+                    if rid[s] < 0:
+                        continue
+                    self.stats.active_slot_steps += 1
+                    if took[s]:
+                        rem[s] = rem[s][took[s]:]
+                        adv = int(n_new[s])
+                        if rem[s]:
+                            spos[s] += adv
+                            continue      # still prefilling next step
+                        # prompt just drained: the chunk's last valid
+                        # column produced the first completion token
+                        tok = int(greedy[s, adv - 1])
+                        if self._emit(s, rid, left, spos, outputs,
+                                      [tok], adv):
+                            rid[s] = -1   # retire; refill next step
+                        else:
+                            spos[s] += adv
+                            cur[s] = tok
+                        continue
+                    acc = int(n_acc[s])
+                    if kvec[s] > 0:
+                        self._note_window(s, acc, kvec[s], ema)
+                    # emit the accepted drafts + the target's bonus
+                    # token; the bonus is NOT ingested — it is next
+                    # step's cur, exactly the non-speculative contract
+                    emitted = [int(t) for t in greedy[s, :acc + 1]]
+                    if self._emit(s, rid, left, spos, outputs, emitted,
+                                  1):
+                        rid[s] = -1
+                    else:
+                        spos[s] += acc + 1
+                        cur[s] = emitted[-1]
+                continue
 
             key, sub = jax.random.split(key)
             took = [0] * n_slots
@@ -461,6 +793,7 @@ class DecodeEngine:
         cur = [0] * n_slots
         left = [0] * n_slots
         spos = [0] * n_slots
+        ema = [1.0] * n_slots             # trailing acceptance (adaptive k)
 
         def set_tables(c):
             # the block table may nest under "attn" (hybrid family)
@@ -494,6 +827,7 @@ class DecodeEngine:
                 s = free_slot
                 rid[s], rem[s], left[s] = e_rid, list(prompt), budget
                 spos[s] = 0
+                ema[s] = 1.0
                 slot_pages[s] = pages or []
                 tables[s, :] = self.num_pages
                 tables[s, :len(slot_pages[s])] = slot_pages[s]
@@ -511,6 +845,119 @@ class DecodeEngine:
             self.stats.peak_active_requests = max(
                 self.stats.peak_active_requests,
                 sum(r >= 0 for r in rid))
+
+            # speculative step over the packed stream: decoding slots
+            # contribute k+1-row speculation windows (cur + drafts),
+            # prefilling slots pack their chunk rows alongside; the
+            # drafter reads the shared KV prefix through the same block
+            # tables and its trial cache is discarded
+            if self._spec is not None and any(
+                    rid[s] >= 0 and not rem[s] for s in range(n_slots)):
+                sc = self._spec
+                kvec, drafts = self._draft_tokens(cache, cur, rid, rem,
+                                                  left, spos, ema)
+                cap = max(chunk, sc.k + 1)
+                active = [s for s in range(n_slots) if rid[s] >= 0]
+                prefilling = any(rem[s] for s in active)
+                tok_l: List[int] = []
+                start = [0] * n_slots
+                rows = [0] * n_slots
+                took = [0] * n_slots
+                slot_l: List[int] = []
+                qpos_l: List[int] = []
+                for j, s in enumerate(active):
+                    reserve = len(active) - j - 1
+                    room = self.pack_tokens - len(tok_l) - reserve
+                    start[s] = len(tok_l)
+                    if rem[s]:
+                        take = max(1, min(len(rem[s]), chunk, room))
+                        took[s] = take
+                        rows[s] = take
+                        vals = rem[s][:take]
+                        self.stats.prefill_tokens += take
+                    else:
+                        ks = max(0, min(kvec[s], room - 1))
+                        kvec[s] = ks
+                        rows[s] = ks + 1
+                        vals = [cur[s]] + [int(t) for t in
+                                           drafts[s, :ks]]
+                    tok_l.extend(vals)
+                    slot_l.extend([s] * rows[s])
+                    qpos_l.extend(range(spos[s], spos[s] + rows[s]))
+                width = self._bucket_width(len(tok_l))
+                toks = np.zeros((width,), np.int32)
+                slot_v = np.full((width,), n_slots, np.int32)
+                qpos = np.zeros((width,), np.int32)
+                toks[:len(tok_l)] = tok_l
+                slot_v[:len(slot_l)] = slot_l
+                qpos[:len(qpos_l)] = qpos_l
+                rowidx = np.zeros((n_slots, cap), np.int32)
+                n_new = np.ones((n_slots,), np.int32)
+                specv = np.zeros((n_slots,), bool)
+                for s in active:
+                    n_new[s] = rows[s]
+                    specv[s] = not rem[s]
+                    rowidx[s, :rows[s]] = np.arange(
+                        start[s], start[s] + rows[s])
+                greedy, n_acc, cache = self._verify_packed(
+                    self.params, cache, jnp.asarray(toks),
+                    jnp.asarray(slot_v), jnp.asarray(qpos),
+                    jnp.asarray(rowidx), jnp.asarray(n_new),
+                    jnp.asarray(drafts), jnp.asarray(specv))
+                greedy = np.asarray(greedy)
+                n_acc = np.asarray(n_acc)
+                self.stats.steps += 1
+                self.stats.verify_steps += 1
+                if prefilling:
+                    self.stats.prefill_steps += 1
+                for s in range(n_slots):
+                    if rid[s] < 0:
+                        continue
+                    self.stats.active_slot_steps += 1
+
+                    def _retire_slot(s=s):
+                        alloc.free(slot_pages[s])
+                        slot_pages[s] = []
+                        tables[s, :] = self.num_pages
+
+                    if took[s]:
+                        rem[s] = rem[s][took[s]:]
+                        adv = rows[s]
+                        if rem[s]:
+                            spos[s] += adv
+                            continue      # still prefilling next step
+                        tok = int(greedy[s, adv - 1])
+                        if self._emit(s, rid, left, spos, outputs,
+                                      [tok], adv):
+                            rid[s] = -1
+                            _retire_slot()
+                            tables_dirty = tables_dirty or not virtual
+                        else:
+                            spos[s] += adv
+                            cur[s] = tok
+                        continue
+                    acc = int(n_acc[s])
+                    if kvec[s] > 0:
+                        self._note_window(s, acc, kvec[s], ema)
+                    adv = acc + 1
+                    if not virtual and kvec[s] > acc:
+                        # rejected speculative tail: resolve the
+                        # rollback (position rewind already happened on
+                        # device) BEFORE the slot's pages may be freed
+                        alloc.rollback(slot_pages[s], spos[s] + adv, ps)
+                    emitted = [int(t) for t in greedy[s, :adv]]
+                    if self._emit(s, rid, left, spos, outputs, emitted,
+                                  1):
+                        rid[s] = -1       # retire mid-window: free only
+                        _retire_slot()    # after the rollback resolved
+                        tables_dirty = tables_dirty or not virtual
+                    else:
+                        spos[s] += adv
+                        cur[s] = emitted[-1]
+                if cfg.debug_invariants and not virtual:
+                    alloc.assert_invariant(
+                        sum(len(p) for p in slot_pages))
+                continue
 
             key, sub = jax.random.split(key)
             took = [0] * n_slots
@@ -543,9 +990,13 @@ class DecodeEngine:
                         spos[s], spos[s] + n)
                     cursor += n
                     last[s] = cursor - 1
+                # width bucket: ship the smallest power-of-two prefix
+                # covering the live rows (padding rows carry slot == B
+                # and are masked everywhere)
+                w = self._bucket_width(cursor)
                 logits, cache = self._packed_step(
-                    self.params, cache, jnp.asarray(toks),
-                    jnp.asarray(slot_v), jnp.asarray(qpos),
+                    self.params, cache, jnp.asarray(toks[:w]),
+                    jnp.asarray(slot_v[:w]), jnp.asarray(qpos[:w]),
                     jnp.asarray(last))
                 self.stats.prefill_steps += 1
             else:
@@ -584,6 +1035,8 @@ class DecodeEngine:
                     tables_dirty = tables_dirty or not virtual
                 else:
                     cur[s] = tok
+            if cfg.debug_invariants and not virtual:
+                alloc.assert_invariant(sum(len(p) for p in slot_pages))
 
     # -- wave scheduler (parity reference) -----------------------------------
     def _run_wave(self, wave, outputs, key):

@@ -1,0 +1,200 @@
+"""Speculative decoding with the NEAT reduced-precision drafter: exact
+greedy parity across all five model families and both KV layouts,
+monotone acceptance-vs-bits degradation, rollback/page accounting,
+width buckets, adaptive draft budgets, spec stats, and the serving
+explorer mode."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_arch
+from repro.core import explore_serving, pareto_points
+from repro.models import build_model
+from repro.serve import DecodeEngine, ServeConfig, SpecConfig
+from repro.serve.engine import PageAllocator, ServeStats
+
+# skewed: short and long prompts interleaved, more requests than slots,
+# so speculation windows and mid-flight admits/retires all occur
+PROMPTS = [[5, 9, 2, 7], [1, 2], [3] * 12, [4, 5, 6], [7], [13, 14]]
+
+FAMILIES = ["codeqwen1.5-7b",        # dense transformer
+            "xlstm-1.3b",            # recurrent (ssm)
+            "zamba2-7b",             # hybrid
+            "seamless-m4t-medium",   # encoder-decoder
+            "granite-moe-1b-a400m"]  # mixture-of-experts
+
+
+def _tiny(arch):
+    cfg = get_arch(arch).reduced(n_layers=2, d_model=32, d_ff=64, vocab=64)
+    model = build_model(cfg)
+    return model, model.init(jax.random.key(0))
+
+
+def _cfg(**kw):
+    base = dict(max_len=48, batch_slots=2, engine="continuous",
+                prefill_chunk=4, page_size=8, debug_invariants=True)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _run(model, params, cfg, max_new=6):
+    eng = DecodeEngine(model, params, cfg)
+    outs = eng.generate(PROMPTS, max_new_tokens=max_new)
+    return outs, eng.stats
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_drafter_bits_sweep_parity_and_monotone_acceptance(arch):
+    """Satellite 3: at every drafter-bits level the spec engine's greedy
+    completions are byte-identical to the non-speculative engine (the
+    ambient-rule truncation changes *which* drafts get accepted, never
+    the emitted tokens), acceptance degrades monotonically as drafter
+    bits shrink, and the identity drafter (bits=24) is always
+    accepted."""
+    model, params = _tiny(arch)
+    ref, _ = _run(model, params, _cfg())
+    acc = {}
+    for bits in (4, 10, 24):
+        outs, st = _run(model, params,
+                        _cfg(spec=SpecConfig(k=3, drafter_bits=bits)))
+        assert outs == ref, f"{arch} bits={bits}: spec != non-spec"
+        assert st.spec_windows > 0 and st.draft_tokens > 0
+        acc[bits] = st.acceptance_rate
+    assert acc[24] == pytest.approx(1.0), \
+        "identity drafter must be fully accepted"
+    assert acc[4] <= acc[10] <= acc[24], f"non-monotone acceptance {acc}"
+
+
+def test_spec_parity_contiguous_layout():
+    """The rectangle (page_size=0) path verifies through the chunked
+    q_start/kv_len prefill — parity must hold there too."""
+    model, params = _tiny("codeqwen1.5-7b")
+    ref, _ = _run(model, params, _cfg(page_size=0))
+    outs, st = _run(model, params,
+                    _cfg(page_size=0, spec=SpecConfig(k=4)))
+    assert outs == ref
+    assert st.accepted_tokens > 0
+    assert st.steps < 0.7 * _run(model, params, _cfg(page_size=0))[1].steps
+
+
+def test_spec_parity_adaptive_k():
+    """Adaptive per-slot draft budgets change window sizes, never
+    emitted tokens."""
+    model, params = _tiny("codeqwen1.5-7b")
+    ref, _ = _run(model, params, _cfg())
+    outs, st = _run(model, params,
+                    _cfg(spec=SpecConfig(k=4, drafter_bits=4,
+                                         adaptive=True)))
+    assert outs == ref
+    assert st.spec_windows > 0
+
+
+def test_retire_on_eos_mid_window_keeps_page_accounting():
+    """Satellite 2: a slot hitting EOS inside a speculation window must
+    resolve the rollback before its pages are freed; the allocator
+    invariant (free + resident == total) is asserted after every step
+    via debug_invariants, and completions still match non-spec."""
+    model, params = _tiny("codeqwen1.5-7b")
+    ref, _ = _run(model, params, _cfg(), max_new=10)
+    # pick a token the workload actually emits mid-completion as EOS so
+    # retires genuinely happen inside speculation windows
+    eos = next(tok for out in ref for tok in out[1:])
+    ref_eos, _ = _run(model, params, _cfg(eos_token=eos), max_new=10)
+    outs, st = _run(model, params,
+                    _cfg(eos_token=eos, spec=SpecConfig(k=4)),
+                    max_new=10)
+    assert outs == ref_eos
+    assert any(len(o) < 10 for o in outs), "EOS never fired — test inert"
+    assert st.spec_windows > 0
+
+
+def test_allocator_rollback_and_invariant():
+    alloc = PageAllocator(8)
+    pages = alloc.alloc(4)
+    assert alloc.free_pages == 4
+    # rollback keeps ownership: committed prefix must fit the reservation
+    assert alloc.rollback(pages, committed_tokens=0, page_size=4) == 0
+    assert alloc.rollback(pages, committed_tokens=13, page_size=4) == 4
+    with pytest.raises(AssertionError):
+        alloc.rollback(pages, committed_tokens=17, page_size=4)
+    alloc.assert_invariant(resident=4)
+    with pytest.raises(AssertionError):
+        alloc.assert_invariant(resident=3)   # a page leaked
+    alloc.free(pages)
+    alloc.assert_invariant(resident=0)
+    with pytest.raises(AssertionError):
+        alloc.assert_invariant(resident=4)   # double-free symmetry
+
+
+def test_packed_width_buckets_are_powers_of_two():
+    """Satellite 1: every packed step ships a power-of-two width <=
+    pack_tokens, and a mostly-decode mixed step uses a smaller bucket
+    than the full rectangle budget."""
+    model, params = _tiny("codeqwen1.5-7b")
+    cfg = _cfg(batch_slots=4, pack_tokens=64, prefill_chunk=16)
+    _, st = _run(model, params, cfg, max_new=8)
+    assert st.packed_widths, "no packed steps recorded"
+    for w in st.packed_widths:
+        assert w <= 64 and (w & (w - 1)) == 0, f"width {w} not a bucket"
+    assert min(st.packed_widths) < 64, \
+        "mostly-decode steps never dropped below the full budget"
+
+
+def test_spec_stats_accounting():
+    model, params = _tiny("codeqwen1.5-7b")
+    _, st = _run(model, params, _cfg(spec=SpecConfig(k=3)))
+    assert st.verify_steps > 0 and st.draft_steps > 0
+    assert st.draft_tokens >= st.accepted_tokens
+    assert sum(st.accepted_hist.values()) == st.spec_windows
+    assert sum(a * n for a, n in st.accepted_hist.items()) \
+        == st.accepted_tokens
+    assert 0.0 <= st.acceptance_rate <= 1.0
+    assert st.p50_ttft_s <= st.p99_ttft_s
+
+
+def test_spec_config_validation():
+    model, params = _tiny("codeqwen1.5-7b")
+    with pytest.raises(ValueError):
+        DecodeEngine(model, params,
+                     ServeConfig(engine="wave", spec=SpecConfig()))
+    with pytest.raises(ValueError):
+        DecodeEngine(model, params,
+                     ServeConfig(engine="continuous", temperature=0.7,
+                                 spec=SpecConfig()))
+    with pytest.raises(ValueError):
+        DecodeEngine(model, params,
+                     ServeConfig(engine="continuous",
+                                 spec=SpecConfig(k=0)))
+
+
+def test_serve_stats_ttft_percentiles():
+    st = ServeStats()
+    assert st.p99_ttft_s == 0.0
+    st.ttft_s = {i: float(i) for i in range(1, 101)}   # 1..100
+    assert st.ttft_percentile(0.0) == 1.0
+    assert st.p50_ttft_s == pytest.approx(51.0)        # nearest rank
+    assert st.p99_ttft_s == pytest.approx(99.0)
+    assert st.ttft_percentile(1.0) == 100.0
+
+
+def test_explore_serving_acceptance_energy_front():
+    """The serving objective mode: drafter bits as the genome, an
+    acceptance-vs-energy front with >= 3 distinct non-dominated genomes,
+    energy monotone in bits (the static charge is affine in mantissa
+    width), and the identity drafter at zero error."""
+    model, params = _tiny("codeqwen1.5-7b")
+    rep = explore_serving(
+        model, params, PROMPTS, bits_grid=(2, 3, 4, 8, 24), k=3,
+        serve_cfg=dataclasses.replace(_cfg(), debug_invariants=False),
+        max_new_tokens=6)
+    assert rep.n_evals == 5
+    by_bits = sorted(rep.points, key=lambda p: p.payload["bits"])
+    energies = [p.energy for p in by_bits]
+    assert energies == sorted(energies) and len(set(energies)) == 5
+    ident = by_bits[-1]
+    assert ident.payload["bits"] == 24
+    assert ident.error == pytest.approx(0.0)
+    front = pareto_points(rep.points)
+    assert len({p.payload["genome"] for p in front}) >= 3, \
+        f"degenerate front: {[(p.payload['bits'], p.error) for p in front]}"
