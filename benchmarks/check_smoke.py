@@ -35,6 +35,16 @@ Reads the ``BENCH_*.json`` files emitted by ``benchmarks.run`` and fails
   bits level AND on tiny models of all five families, and a p99 TTFT
   tail within ``MAX_SPEC_P99_TTFT_RATIO`` x the non-speculative
   engine's.
+* serve-policy: a phase/layer-heterogeneous policy from
+  ``explore(objectives="serving")`` must beat the best whole-program
+  uniform drafter (lower estimated pJ/token at equal-or-better
+  acceptance — the per-site placement claim, end to end in the
+  engine), reduce pJ/token by >= ``MIN_POLICY_ENERGY_REDUCTION`` over
+  the PR-6 ``drafter_bits=10`` baseline at acceptance >=
+  ``MIN_POLICY_ACCEPTANCE``, keep every arm's greedy completions
+  byte-identical to non-policy serving (including the tiered engine's
+  exact tier), and hold p99 TTFT within
+  ``MAX_POLICY_P99_TTFT_RATIO`` x the baseline's.
 
 On top of the absolute gates, every artifact with a **committed
 baseline** (``benchmarks/baselines/BENCH_*.json``) is compared against
@@ -67,6 +77,13 @@ MIN_SPEC_ACCEPTANCE = 0.6          # draft acceptance at bits=10
 MAX_SPEC_P99_TTFT_RATIO = 4.0      # spec p99 TTFT tail vs non-spec (the
 #                                    drafter adds per-window latency; the
 #                                    tail must stay bounded, not shrink)
+MIN_POLICY_ENERGY_REDUCTION = 1.01  # explored policy pJ/token vs the
+#                                     uniform drafter_bits=10 baseline
+#                                     (deterministic abstract census)
+MIN_POLICY_ACCEPTANCE = 0.9        # acceptance under the explored policy
+MAX_POLICY_P99_TTFT_RATIO = 2.5    # policy p99 TTFT vs the uniform
+#                                    drafter baseline (same engine shape;
+#                                    observed ~1.3x, wall-clock headroom)
 MAX_DISPATCH_RATIO = 0.25          # batched <= serial / 4
 MAX_DYNAMIC_EXTRA_DISPATCHES = 2   # dynamic objective <= static + 2
 DYNAMIC_HOST_DEVICE_RTOL = 1e-6
@@ -89,6 +106,8 @@ BASELINE_GATES = {
     "ttft_speedup": "ge",
     "concurrency": "ge",
     "acceptance": "ge",
+    "energy_reduction": "ge",
+    "pj_per_tok": "le",
 }
 
 
@@ -233,6 +252,38 @@ def check_serve_spec(path: str) -> list:
     return errs
 
 
+def check_serve_policy(path: str) -> list:
+    rows = _rows(path)
+    errs = []
+    gate = rows["serve_policy_gate"]
+    if _field(gate, "hetero_beats_uniform") != "True":
+        errs.append("policy-serve placement regression: no heterogeneous "
+                    "policy beat the best uniform drafter (lower pJ/token "
+                    "at equal-or-better acceptance)")
+    red = float(_field(gate, "energy_reduction").rstrip("x"))
+    if red < MIN_POLICY_ENERGY_REDUCTION:
+        errs.append(f"policy-serve energy regression: {red:.3f}x < "
+                    f"{MIN_POLICY_ENERGY_REDUCTION}x estimated pJ/token "
+                    "reduction over the uniform drafter_bits=10 baseline")
+    acc = float(_field(gate, "acceptance"))
+    if acc < MIN_POLICY_ACCEPTANCE:
+        errs.append(f"policy-serve acceptance regression: {acc:.3f} < "
+                    f"{MIN_POLICY_ACCEPTANCE} under the explored policy")
+    if _field(gate, "parity") != "True":
+        errs.append("policy-serve parity regression: an arm's greedy "
+                    "completions diverged from non-policy serving (or "
+                    "the turbo tier stopped being cheaper than exact)")
+    if _field(rows["serve_policy_tiered"], "exact_parity") != "True":
+        errs.append("policy-serve tier regression: the exact tier's "
+                    "completions != non-policy serving")
+    ratio = float(_field(gate, "ttft_p99_ratio").rstrip("x"))
+    if ratio > MAX_POLICY_P99_TTFT_RATIO:
+        errs.append(f"policy-serve p99 TTFT tail regression: "
+                    f"{ratio:.2f}x > {MAX_POLICY_P99_TTFT_RATIO}x the "
+                    "uniform-drafter baseline's tail")
+    return errs
+
+
 def _gate_value(raw: str):
     try:
         return float(raw.rstrip("x"))
@@ -288,7 +339,8 @@ def main() -> None:
               ("BENCH_serve.json", check_serve),
               ("BENCH_serve-prefill.json", check_serve_prefill),
               ("BENCH_serve-paged.json", check_serve_paged),
-              ("BENCH_serve-spec.json", check_serve_spec)]
+              ("BENCH_serve-spec.json", check_serve_spec),
+              ("BENCH_serve-policy.json", check_serve_policy)]
     errs = []
     for fname, fn in checks:
         path = os.path.join(args.json_dir, fname)

@@ -365,7 +365,173 @@ def serve_spec(full: bool = False) -> List[Tuple[str, float, str]]:
     return rows
 
 
+def serve_policy(full: bool = False) -> List[Tuple[str, float, str]]:
+    """Phase/layer precision policies as the serving surface, vs the
+    PR-6 uniform-drafter baseline, on the skewed speculative workload.
+
+    Three precision arms over the same paged speculative engine:
+
+    * **base** — the PR-6 entry point, ``SpecConfig(drafter_bits=10)``
+      (a whole-program uniform drafter, now folded into a one-phase
+      policy by the engine);
+    * **uniform** — the best whole-program uniform drafter from an
+      explicit bits grid (``PrecisionPolicy.drafter(b)``, the PR-6
+      grid), best = lowest estimated pJ/token;
+    * **hetero** — the best phase/layer-heterogeneous policy found by
+      ``explore(objectives="serving")`` over the (phase, site [+
+      default]) genome, *re-served from its serialized*
+      ``payload["policy"]`` *artifact* — the exact file
+      ``launch/serve.py --policy`` consumes.
+
+    Headline gates (check_smoke): the hetero policy's estimated
+    pJ/token beats the best grid uniform at equal-or-better acceptance
+    (per-site placement beats the whole-program diagonal, the paper's
+    claim measured end to end in the engine); it beats the PR-6
+    baseline's pJ/token by >= MIN_POLICY_ENERGY_REDUCTION; greedy
+    completions stay byte-identical across every arm (speculative
+    emission is the target's own argmax, so precision only moves
+    acceptance/energy, never outputs); and p99 TTFT stays bounded. A
+    fourth arm serves SLA tiers ({exact: mant24, turbo: hetero} over a
+    split slot budget) and gates that the exact tier is byte-identical
+    to non-policy serving while the turbo tier's pJ/token stays below
+    the exact tier's.
+    """
+    import time as _t
+
+    import jax
+    from repro.configs import get_arch
+    from repro.core import ServingTask, explore
+    from repro.models import build_model
+    from repro.serve import (DecodeEngine, PrecisionPolicy, ServeConfig,
+                             SpecConfig)
+
+    cfg = get_arch("codeqwen1.5-7b").reduced(n_layers=2, d_model=64,
+                                             d_ff=128, vocab=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    n_req = 32 if full else 16
+    max_new = 16
+    page_size = 16
+    slots, max_len = 8, 160
+    spec_k = 4
+    prompts = _skewed_prompts(n_req, cfg.vocab_size)
+
+    def serve_cfg(spec=None, tiers=None, energy=True):
+        return ServeConfig(max_len=max_len, batch_slots=slots,
+                           engine="continuous", page_size=page_size,
+                           spec=spec, tiers=tiers, estimate_energy=energy)
+
+    def timed(eng, tiers=None):
+        eng.generate(prompts, max_new_tokens=max_new, tiers=tiers)
+        t0 = _t.perf_counter()
+        outs = eng.generate(prompts, max_new_tokens=max_new, tiers=tiers)
+        dt = _t.perf_counter() - t0
+        st = eng.stats
+        return dict(outs=outs, us=dt * 1e6,
+                    toks_per_s=st.tokens_out / dt,
+                    acceptance=st.acceptance_rate,
+                    pj_tok=st.est_pj_per_token,
+                    p50_ms=st.p50_ttft_s * 1e3,
+                    p99_ms=st.p99_ttft_s * 1e3, stats=st)
+
+    # -- arm 1: PR-6 baseline, the deprecated uniform-drafter knob
+    base = timed(DecodeEngine(
+        model, params,
+        serve_cfg(spec=SpecConfig(k=spec_k, drafter_bits=10))))
+
+    # -- arm 2: best whole-program uniform from the PR-6 bits grid
+    grid = {}
+    for bits in (4, 6, 8, 10, 24):
+        eng = DecodeEngine(model, params, serve_cfg(SpecConfig(k=spec_k)),
+                           policy=PrecisionPolicy.drafter(bits))
+        eng.generate(prompts, max_new_tokens=max_new)
+        st = eng.stats
+        grid[bits] = dict(acceptance=st.acceptance_rate,
+                          pj_tok=st.est_pj_per_token)
+    best_bits = min(grid, key=lambda b: grid[b]["pj_tok"])
+    best_u = grid[best_bits]
+
+    # -- arm 3: hetero policy from the serving explorer, re-served
+    # from its serialized policy artifact
+    rep = explore(
+        ServingTask(model, params, prompts, serve_cfg(energy=False),
+                    max_new_tokens=max_new, k=spec_k, phases=("draft",),
+                    family="plc", n_sites=4, pop_size=12, n_gen=2,
+                    max_evals=(30 if full else 16), name="serve-policy"),
+        objectives="serving")
+    cands = [p for p in rep.points
+             if not p.payload["uniform"]
+             and p.payload["acceptance"] >= best_u["acceptance"] - 1e-9
+             and p.energy < best_u["pj_tok"]]
+    hetero_beats = bool(cands)
+    best_p = (min(cands, key=lambda p: p.energy) if cands
+              else min(rep.points, key=lambda p: p.energy))
+    hetero_pol = PrecisionPolicy.from_dict(best_p.payload["policy"])
+    hetero = timed(DecodeEngine(model, params,
+                                serve_cfg(SpecConfig(k=spec_k)),
+                                policy=hetero_pol))
+
+    # -- arm 4: SLA tiers — exact requests byte-identical at mant24,
+    # the rest on the explored hetero policy, one engine
+    tier_names = ["exact", "turbo"]
+    tiered_eng = DecodeEngine(
+        model, params,
+        serve_cfg(SpecConfig(k=spec_k),
+                  tiers={"exact": PrecisionPolicy.uniform(24, name="exact"),
+                         "turbo": hetero_pol}))
+    ask = [tier_names[i % 2] for i in range(n_req)]
+    tiered = timed(tiered_eng, tiers=ask)
+    ref = DecodeEngine(model, params,
+                       serve_cfg(spec=None, energy=False)).generate(
+        prompts, max_new_tokens=max_new)
+    exact_parity = all(tiered["outs"][i] == ref[i]
+                       for i in range(n_req) if ask[i] == "exact")
+    tst = tiered["stats"]
+    exact_pj = tst.per_tier["exact"].est_pj_per_token
+    turbo_pj = tst.per_tier["turbo"].est_pj_per_token
+
+    parity = (base["outs"] == ref and hetero["outs"] == ref
+              and exact_parity and turbo_pj < exact_pj)
+    energy_reduction = base["pj_tok"] / max(hetero["pj_tok"], 1e-9)
+    ttft_ratio = hetero["p99_ms"] / max(base["p99_ms"], 1e-9)
+    genome = "-".join(str(b) for b in best_p.payload["genome"])
+
+    return [
+        ("serve_policy_base", base["us"],
+         f"toks_per_s={base['toks_per_s']:.1f};"
+         f"acceptance={base['acceptance']:.3f};"
+         f"pj_per_tok={base['pj_tok']:.4e};"
+         f"p99_ttft_ms={base['p99_ms']:.1f}"),
+        ("serve_policy_uniform", 0.0,
+         f"best_bits={best_bits};"
+         f"acceptance={best_u['acceptance']:.3f};"
+         f"pj_per_tok={best_u['pj_tok']:.4e};"
+         f"grid={'/'.join(str(b) for b in grid)}"),
+        ("serve_policy_hetero", hetero["us"],
+         f"toks_per_s={hetero['toks_per_s']:.1f};"
+         f"acceptance={hetero['acceptance']:.3f};"
+         f"pj_per_tok={hetero['pj_tok']:.4e};"
+         f"genome={genome};n_evals={rep.n_evals};"
+         f"p99_ttft_ms={hetero['p99_ms']:.1f}"),
+        ("serve_policy_tiered", tiered["us"],
+         f"exact_parity={exact_parity};"
+         f"exact_pj_per_tok={exact_pj:.4e};"
+         f"turbo_pj_per_tok={turbo_pj:.4e};"
+         f"downgraded={tst.downgraded};"
+         f"p99_ttft_ms={tiered['p99_ms']:.1f}"),
+        ("serve_policy_gate", 0.0,
+         f"hetero_beats_uniform={hetero_beats};"
+         f"energy_reduction={energy_reduction:.3f}x;"
+         f"acceptance={hetero['acceptance']:.3f};"
+         f"parity={parity};"
+         f"ttft_p99_ratio={ttft_ratio:.2f}x;"
+         f"n_requests={n_req};k={spec_k}"),
+    ]
+
+
 if __name__ == "__main__":
     for name, us, derived in (serve_throughput() + serve_prefill()
-                              + serve_paged() + serve_spec()):
+                              + serve_paged() + serve_spec()
+                              + serve_policy()):
         print(f"{name},{us:.0f},{derived}")

@@ -8,7 +8,14 @@ from repro.core.placement import (
     PlacementRule, WholeProgram, CurrentScope, CallStack, LayerCategory,
     LayerInstance, rule_from_genome, register_fp_selector, selector_registry,
 )
-from repro.core.scope import pscope, current_stack, scope_path
+from repro.core.scope import (
+    pscope, current_stack, scope_path, PHASES, current_phase, phase_scope,
+    tag_phase,
+)
+from repro.core.policy import (
+    PhaseSpec, PrecisionPolicy, PolicyRule, policy_params,
+    uniform_param_views,
+)
 from repro.core.quantize import (
     neat_quantize, quantize_here, use_rule, active_rule, ste_truncate,
 )
@@ -33,6 +40,7 @@ from repro.core.pareto import (
     savings_at_threshold, harmonic_mean, correlation,
 )
 from repro.core.explorer import (
-    ExplorationTask, ExplorationReport, explore, explore_serving,
-    default_error_fn, sites_for_family, PopulationEvaluator,
+    ExplorationTask, ExplorationReport, ServingTask, explore,
+    explore_serving, default_error_fn, sites_for_family,
+    PopulationEvaluator,
 )

@@ -107,6 +107,44 @@ class ExplorationTask:
 
 
 @dataclasses.dataclass
+class ServingTask:
+    """Serving-objective exploration input: a model served through the
+    continuous engine, genomes scored by (1 - draft acceptance) vs
+    estimated pJ/token. ``explore(ServingTask(...))`` — or any task with
+    ``objectives="serving"`` — selects this mode.
+
+    Two search spaces:
+
+    * ``bits_grid`` set — the legacy drafter-bits sweep: genome = one
+      uniform drafter mantissa width, exhaustively enumerated (exactly
+      the deprecated ``explore_serving`` behavior).
+    * ``bits_grid`` None — NSGA-II over the full ``(phase, layer)``
+      grid: genome = one mantissa width per (phase in ``phases``) ×
+      (site of ``family``/``n_sites``, from an abstract profile of the
+      decode cell), each genome compiled into a
+      :class:`~repro.core.policy.PrecisionPolicy` and served end to end
+      with ``estimate_energy=True``. Search budget lives HERE
+      (``pop_size``/``n_gen``/``max_evals``), not on ``explore()``'s
+      offline kwargs — every candidate policy costs an engine
+      compilation, so defaults are deliberately small."""
+    model: object
+    params: object
+    prompts: List[List[int]]
+    serve_cfg: Optional[object] = None       # ServeConfig; None = default
+    max_new_tokens: int = 32
+    k: int = 4                               # speculation window
+    phases: Tuple[str, ...] = ("draft",)     # genome's phase axis
+    family: str = "plc"                      # genome's layer axis
+    n_sites: int = 4
+    mode: str = "rne"
+    bits_grid: Optional[Sequence[int]] = None
+    pop_size: int = 8
+    n_gen: int = 2
+    max_evals: int = 20
+    name: str = "serving"
+
+
+@dataclasses.dataclass
 class ExplorationReport:
     task: str
     family: str
@@ -398,18 +436,39 @@ def _serial_eval(ev: PopulationEvaluator, genomes, inputs, exact,
     return np.asarray(rows) if rows else np.zeros((0, len(inputs)))
 
 
-def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
+def explore(task, *, objectives: str = "error-energy",
+            family: str = "cip", n_sites: int = 10,
             pop_size: int = 40, n_gen: int = 9, max_evals: int = 400,
             seed: int = 0, robustness: bool = True,
             include_transcendental: bool = False,
             batched: bool = True,
             shard: bool | str = "auto",
             energy="static") -> ExplorationReport:
-    """``energy`` selects the energy objective: ``"static"`` (coefficient
-    tensor, input-independent), ``"dynamic"`` (trailing-zero bit census of
-    the actual values, threaded through the same vmapped dispatch — zero
-    extra dispatches per generation), a registered estimator name, or a
-    ready-made :class:`~repro.core.estimators.EnergyEstimator`."""
+    """The one exploration entry point.
+
+    ``objectives`` selects the search mode: ``"error-energy"`` (default)
+    is the paper's offline search over an :class:`ExplorationTask`;
+    ``"serving"`` scores genomes by serving objectives — ``(1 -
+    acceptance, estimated pJ/token)`` — over a :class:`ServingTask`
+    (passing a ``ServingTask`` implies it). Both return the same
+    :class:`ExplorationReport` shape.
+
+    ``energy`` selects the offline energy objective: ``"static"``
+    (coefficient tensor, input-independent), ``"dynamic"`` (trailing-zero
+    bit census of the actual values, threaded through the same vmapped
+    dispatch — zero extra dispatches per generation), a registered
+    estimator name, or a ready-made
+    :class:`~repro.core.estimators.EnergyEstimator`."""
+    if objectives not in ("error-energy", "serving"):
+        raise ValueError(f"unknown objectives {objectives!r}; one of "
+                         "('error-energy', 'serving')")
+    if isinstance(task, ServingTask) or objectives == "serving":
+        if not isinstance(task, ServingTask):
+            raise TypeError('objectives="serving" takes a ServingTask; '
+                            f"got {type(task).__name__}")
+        if task.bits_grid is not None:
+            return _serving_grid(task, seed=seed)
+        return _serving_nsga(task, seed=seed)
     # 1. profile (paper step 1) -- census on the first training input
     prof = profile(task.fn, *task.train_inputs[0])
     sites = sites_for_family(prof, family, n_sites)
@@ -533,12 +592,11 @@ def explore(task: ExplorationTask, *, family: str = "cip", n_sites: int = 10,
     return report
 
 
-def explore_serving(model, params, prompts, *,
-                    bits_grid: Sequence[int] = (4, 6, 8, 10, 24),
-                    k: int = 4, serve_cfg=None, max_new_tokens: int = 32,
-                    mode: str = "rne") -> ExplorationReport:
-    """Serving-objective exploration: genome = the speculative drafter's
-    mantissa bits, objectives = (draft acceptance, drafter energy).
+def _serving_grid(task: ServingTask, *, seed: int = 0
+                  ) -> ExplorationReport:
+    """Serving-objective exploration, drafter-bits grid: genome = the
+    speculative drafter's mantissa bits, objectives = (draft acceptance,
+    drafter energy).
 
     Each genome serves the same workload through the continuous engine
     with a ``SpecConfig(drafter_bits=bits)`` drafter; the error axis is
@@ -568,11 +626,17 @@ def explore_serving(model, params, prompts, *,
     from repro.core.estimators import abstract_step_energy
     from repro.core.fpi import MantissaTrunc
     from repro.core.placement import WholeProgram
+    from repro.core.policy import PrecisionPolicy
     from repro.serve.engine import DecodeEngine, ServeConfig, SpecConfig
 
-    base_cfg = serve_cfg if serve_cfg is not None else ServeConfig()
+    model, params, prompts = task.model, task.params, task.prompts
+    bits_grid, k, mode = task.bits_grid, task.k, task.mode
+    max_new_tokens = task.max_new_tokens
+    base_cfg = (task.serve_cfg if task.serve_cfg is not None
+                else ServeConfig())
     if base_cfg.engine != "continuous":
-        raise ValueError("explore_serving requires the continuous engine")
+        raise ValueError("serving exploration requires the continuous "
+                         "engine")
 
     # abstract decode-cell census: one trace, reused for every genome's
     # static charge (the contiguous cell — the drafter's arithmetic is
@@ -609,6 +673,9 @@ def explore_serving(model, params, prompts, *,
                      "acceptance": st.acceptance_rate,
                      "tokens_per_s": st.tokens_out / max(dt, 1e-9),
                      "total_pj": rep.total_pj * k * st.draft_steps,
+                     "policy": PrecisionPolicy.drafter(
+                         int(bits), mode,
+                         name=f"drafter-{int(bits)}b").to_dict(),
                      "stats": st}))
     return ExplorationReport(
         task="serving-spec", family="wp", sites=["drafter_bits"],
@@ -617,3 +684,162 @@ def explore_serving(model, params, prompts, *,
         baseline_fpu_pj=base_rep.fpu_pj, baseline_mem_pj=base_rep.mem_pj,
         flop_coverage=1.0, batched=False,
         energy_estimator="static-abstract")
+
+
+def _serving_nsga(task: ServingTask, *, seed: int = 0
+                  ) -> ExplorationReport:
+    """Serving-objective exploration over the full ``(phase, layer)``
+    grid: genome = one mantissa width per (phase, site) plus, for scoped
+    families, a per-phase default width for ops outside every named
+    site, compiled into a :class:`~repro.core.policy.PrecisionPolicy`
+    and served end to end.
+
+    Objectives per genome: ``error = 1 - acceptance_rate`` (the serving
+    analogue of output error — greedy completions are byte-identical by
+    construction, rejections are the cost) and ``energy = estimated
+    pJ/token`` from the engine's per-phase row accounting times the
+    abstract decode-cell cost under each phase's rule (zero extra
+    device dispatches). The pJ/token axis — unlike the grid path's
+    per-window axis — *does* fold rejection overhead back in: a genome
+    that drafts cheap but gets rejected re-pays verify rows, which is
+    exactly the serving trade the tiered engine cares about. Heterogen-
+    eous seed genomes (uniform diagonals plus single-site-lowered
+    variants) guarantee the population explores per-layer placement, the
+    paper's core claim, not just the uniform diagonal.
+
+    Every candidate payload carries ``payload["policy"]`` — the policy
+    as a JSON-ready dict (:meth:`PrecisionPolicy.to_dict`), the
+    serializable artifact ``launch/serve.py --policy`` consumes."""
+    from repro.core.estimators import abstract_step_energy
+    from repro.core.policy import PhaseSpec, PrecisionPolicy
+    from repro.core.scope import PHASES
+    from repro.serve.engine import DecodeEngine, ServeConfig, SpecConfig
+
+    for ph in task.phases:
+        if ph not in PHASES:
+            raise ValueError(f"unknown phase {ph!r}; one of {PHASES}")
+    base_cfg = (task.serve_cfg if task.serve_cfg is not None
+                else ServeConfig())
+    if base_cfg.engine != "continuous":
+        raise ValueError("serving exploration requires the continuous "
+                         "engine")
+    if base_cfg.spec is not None:
+        base_cfg = dataclasses.replace(base_cfg, spec=None)
+    model, params = task.model, task.params
+
+    # abstract decode-cell profile: site selection + per-rule energy,
+    # one jaxpr walk each, zero device dispatches
+    a_params = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), params)
+    a_cache = jax.eval_shape(
+        lambda: model.init_cache(base_cfg.batch_slots, base_cfg.max_len))
+    a_toks = jax.ShapeDtypeStruct(
+        (base_cfg.batch_slots, 1), jnp.int32)
+    step = lambda p, c, t: model.decode_step(p, c, t)   # noqa: E731
+    prof = profile(step, a_params, a_cache, a_toks)
+    sites = sites_for_family(prof, task.family, task.n_sites)
+    base_rep = abstract_step_energy(step, a_params, a_cache, a_toks,
+                                    rule=None)
+    # one gene per (phase, site) plus, for scoped families, a per-phase
+    # default width covering ops outside every named site.  Without the
+    # default gene uncovered ops stay at full precision, so no scoped
+    # genome could even match a whole-program uniform's energy, let
+    # alone beat it with per-site placement.
+    has_default = task.family != "wp"
+    stride = len(sites) + (1 if has_default else 0)
+    n_genes = len(task.phases) * stride
+
+    def policy_of(genome) -> PrecisionPolicy:
+        phases = {}
+        for j, ph in enumerate(task.phases):
+            row = tuple(int(b) for b in
+                        genome[j * stride:(j + 1) * stride])
+            site_bits, default = ((row[:-1], row[-1]) if has_default
+                                  else (row, 24))
+            phases[ph] = PhaseSpec(
+                family=task.family, sites=tuple(sites), bits=site_bits,
+                default_bits=default,
+                mode=task.mode, weights=(ph == "draft"))
+        return PrecisionPolicy(
+            phases=phases,
+            name=f"{task.name}-" + "-".join(str(b) for b in genome))
+
+    results: Dict[Tuple[int, ...], Tuple[float, float, Dict]] = {}
+
+    def evaluate(genome) -> Tuple[float, float]:
+        key = tuple(int(b) for b in genome)
+        if key in results:
+            return results[key][:2]
+        pol = policy_of(key)
+        cfg = dataclasses.replace(
+            base_cfg, spec=SpecConfig(k=task.k, mode=task.mode),
+            estimate_energy=True)
+        eng = DecodeEngine(model, params, cfg, policy=pol)
+        eng.generate(task.prompts, max_new_tokens=task.max_new_tokens)
+        st = eng.stats
+        err = 1.0 - st.acceptance_rate
+        pj_tok = st.est_pj_per_token
+        results[key] = (err, pj_tok, {
+            "genome": key, "policy": pol.to_dict(),
+            "acceptance": st.acceptance_rate,
+            "tokens_per_s": st.tokens_per_s,
+            "p50_ttft_s": st.p50_ttft_s, "p99_ttft_s": st.p99_ttft_s,
+            "uniform": len(set(key)) == 1,
+            "mem": pj_tok, "stats": st})
+        return err, pj_tok
+
+    # seeds: the uniform diagonal (so heterogeneous placement strictly
+    # contains the whole-program solutions) plus single-site-lowered
+    # variants off the mid-diagonal uniforms — generation zero already
+    # contains per-(phase, site) heterogeneity near the useful part of
+    # the diagonal, not just at identity
+    diag = sorted(set([4, 8, 12, 24]))
+    seeds = [(b,) * n_genes for b in diag]
+    for b in (8, 12):
+        for i in range(min(n_genes, 10)):
+            if has_default and i % stride == stride - 1:
+                continue          # keep the per-phase default on-diagonal
+            g = [b] * n_genes
+            g[i] = max(1, b - 6)
+            seeds.append(tuple(g))
+
+    opt = NSGA2(n_genes=n_genes, low=1, high=24,
+                pop_size=task.pop_size, n_gen=task.n_gen,
+                max_evals=task.max_evals, seed=seed, seed_genomes=seeds)
+    while not opt.done:
+        batch = opt.ask()
+        opt.tell(batch, [evaluate(g) for g in batch])
+    res: NSGA2Result = opt.result()
+
+    points = [TradeoffPoint(error=e.objectives[0], energy=e.objectives[1],
+                            payload=results[tuple(e.genome)][2])
+              for e in res.evaluated]
+    return ExplorationReport(
+        task=task.name,
+        family=task.family,
+        sites=[f"{ph}:{s}" for ph in task.phases
+               for s in (list(sites) + ["__default__"] if has_default
+                         else list(sites))],
+        points=points, hull=lower_convex_hull(points),
+        n_evals=res.n_evals,
+        baseline_fpu_pj=base_rep.fpu_pj, baseline_mem_pj=base_rep.mem_pj,
+        flop_coverage=1.0, batched=False,
+        energy_estimator="serving-abstract")
+
+
+def explore_serving(model, params, prompts, *,
+                    bits_grid: Sequence[int] = (4, 6, 8, 10, 24),
+                    k: int = 4, serve_cfg=None, max_new_tokens: int = 32,
+                    mode: str = "rne") -> ExplorationReport:
+    """Deprecated alias for ``explore(ServingTask(..., bits_grid=...),
+    objectives="serving")`` — the historical drafter-bits grid sweep.
+    Same report, byte for byte."""
+    import warnings
+    warnings.warn(
+        "explore_serving() is deprecated; use explore(ServingTask(...), "
+        'objectives="serving") — bits_grid selects this exact grid sweep',
+        DeprecationWarning, stacklevel=2)
+    return explore(ServingTask(
+        model=model, params=params, prompts=list(prompts),
+        serve_cfg=serve_cfg, max_new_tokens=max_new_tokens, k=k,
+        mode=mode, bits_grid=tuple(bits_grid)), objectives="serving")

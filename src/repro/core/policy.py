@@ -1,0 +1,390 @@
+"""Precision policies — NEAT genomes as a first-class serving surface.
+
+A :class:`PrecisionPolicy` maps ``(phase, layer) -> (bits, mode)``:
+phases are the engine's step kinds ({prefill, decode, draft, verify},
+``core.scope.PHASES``), layers are addressed through the existing
+placement-rule site machinery (``LayerCategory`` / ``LayerInstance`` /
+``CurrentScope`` / ``CallStack`` / ``WholeProgram`` — the same families
+the explorer searches). One policy therefore carries everything the
+serving engine needs to apply a NEAT genome:
+
+* **activation truncation** — each phase resolves to a
+  :class:`~repro.core.placement.PlacementRule`; the engine installs ONE
+  ambient :class:`PolicyRule` that dispatches on
+  :func:`~repro.core.scope.current_phase` at trace time, so the fused
+  qk/pv kernel hooks (``_ambient_dot_bits``) and every
+  ``quantize_here`` call site resolve per-phase precision with zero new
+  plumbing;
+* **weight views** — a phase marked ``weights=True`` serves through
+  mantissa-truncated per-layer views of the params
+  (:func:`policy_params`), generalizing the PR-6 drafter's uniform
+  ``drafter_params`` to policy-keyed per-site truncation;
+* **serialization** — policies round-trip through JSON
+  (``policy.json`` artifacts the explorer emits and the launchers
+  load), and ``signature()`` is the engine's compilation-cache key: one
+  cached set of compiled step programs per distinct policy tier.
+
+The three historical precision entry points collapse onto constructors
+here: ``PrecisionPolicy.uniform(bits)`` (the launchers' ambient
+``WholeProgram`` rule), ``PrecisionPolicy.drafter(bits)``
+(``SpecConfig.drafter_bits``), and ``PrecisionPolicy.from_genome(report,
+idx)`` (an exploration result applied to serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fpi import IDENTITY, MantissaTrunc
+from repro.core.placement import (PlacementRule, RULE_FAMILIES,
+                                  rule_from_genome, site_index_for_stack)
+from repro.core.scope import PHASES, current_phase
+
+#: full effective mantissa width per optimization target (incl. the
+#: implicit bit) — bits at or above this are the identity
+FULL_BITS = {"single": 24, "double": 53, "half": 8, "any": 24}
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseSpec:
+    """One phase's precision: a placement-family genome.
+
+    ``family`` + ``sites`` + ``bits`` are exactly the explorer's genome
+    layout (``rule_from_genome``); ``default_bits`` covers scopes no
+    site matches (24 = identity). ``weights=True`` additionally serves
+    the phase through mantissa-truncated weight views, each param leaf
+    truncated to the bits of the site its tree path resolves to."""
+    family: str = "wp"
+    sites: Tuple[str, ...] = ("__program__",)
+    bits: Tuple[int, ...] = (24,)
+    default_bits: int = 24
+    mode: str = "rne"
+    target: str = "single"
+    weights: bool = False
+
+    def __post_init__(self):
+        if self.family not in RULE_FAMILIES:
+            raise ValueError(f"unknown placement family {self.family!r}; "
+                             f"one of {RULE_FAMILIES}")
+        if len(self.sites) != len(self.bits):
+            raise ValueError(f"{len(self.sites)} sites vs "
+                             f"{len(self.bits)} bits")
+        object.__setattr__(self, "sites", tuple(self.sites))
+        object.__setattr__(self, "bits",
+                           tuple(int(b) for b in self.bits))
+
+    @property
+    def full_bits(self) -> int:
+        return FULL_BITS.get(self.target, 24)
+
+    def is_identity(self) -> bool:
+        return (all(b >= self.full_bits for b in self.bits)
+                and self.default_bits >= self.full_bits)
+
+    def rule(self) -> Optional[PlacementRule]:
+        """The phase's placement rule; None when identity (so callers
+        can trace with no ambient rule at all — byte-identical to
+        non-policy serving)."""
+        if self.is_identity():
+            return None
+        default = (IDENTITY if self.default_bits >= self.full_bits
+                   else MantissaTrunc(int(self.default_bits), self.mode))
+        return rule_from_genome(self.family, list(self.sites),
+                                list(self.bits), target=self.target,
+                                mode=self.mode, default=default)
+
+    def bits_for_stack(self, stack: Tuple[str, ...]) -> int:
+        """Mantissa bits this spec assigns to a scope stack — the
+        weight-view analogue of rule matching."""
+        site_idx = {s: i for i, s in enumerate(self.sites)}
+        i = site_index_for_stack(self.family, site_idx, stack)
+        return self.bits[i] if i is not None else self.default_bits
+
+    def to_dict(self) -> dict:
+        return {"family": self.family, "sites": list(self.sites),
+                "bits": list(self.bits),
+                "default_bits": self.default_bits, "mode": self.mode,
+                "target": self.target, "weights": self.weights}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PhaseSpec":
+        return cls(family=d.get("family", "wp"),
+                   sites=tuple(d.get("sites", ("__program__",))),
+                   bits=tuple(d.get("bits", (24,))),
+                   default_bits=int(d.get("default_bits", 24)),
+                   mode=d.get("mode", "rne"),
+                   target=d.get("target", "single"),
+                   weights=bool(d.get("weights", False)))
+
+
+IDENTITY_SPEC = PhaseSpec()
+
+
+@dataclasses.dataclass
+class PrecisionPolicy:
+    """(phase, layer) -> (bits, mode): the serving precision surface.
+
+    ``phases`` maps phase names to :class:`PhaseSpec`; a missing phase
+    is the identity (full precision). ``raw_rules`` carries arbitrary
+    :class:`PlacementRule` objects for legacy callers
+    (:meth:`from_rule`) — such policies serve but do not serialize."""
+    phases: Dict[str, PhaseSpec] = dataclasses.field(default_factory=dict)
+    name: str = ""
+    raw_rules: Dict[str, PlacementRule] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def __post_init__(self):
+        for ph in list(self.phases) + list(self.raw_rules):
+            if ph not in PHASES:
+                raise ValueError(f"unknown phase {ph!r}; one of {PHASES}")
+
+    # -- constructors (the collapsed legacy entry points) -------------------
+    @classmethod
+    def uniform(cls, bits: int, mode: str = "rne", *,
+                target: str = "single", weights: bool = False,
+                name: str = "") -> "PrecisionPolicy":
+        """One mantissa width for every FLOP of every phase — the
+        launchers' historical ambient ``WholeProgram(MantissaTrunc)``
+        rule as a policy."""
+        spec = PhaseSpec(family="wp", sites=("__program__",),
+                         bits=(int(bits),), mode=mode, target=target,
+                         weights=weights)
+        return cls(phases={ph: spec for ph in PHASES},
+                   name=name or f"uniform{bits}")
+
+    @classmethod
+    def drafter(cls, bits: int, mode: str = "rne", *,
+                target: str = "single", name: str = "") -> "PrecisionPolicy":
+        """The PR-6 speculative drafter as a policy: the draft phase
+        runs at ``bits`` with truncated weight views, every other phase
+        stays exact (so verification — and therefore the emitted
+        tokens — are byte-identical to non-speculative serving)."""
+        spec = PhaseSpec(family="wp", sites=("__program__",),
+                         bits=(int(bits),), mode=mode, target=target,
+                         weights=True)
+        return cls(phases={"draft": spec}, name=name or f"drafter{bits}")
+
+    @classmethod
+    def from_genome(cls, report, idx: Optional[int] = None, *,
+                    phases: Sequence[str] = PHASES,
+                    name: str = "") -> "PrecisionPolicy":
+        """Lift an exploration result into a serving policy.
+
+        ``report`` is an :class:`~repro.core.explorer.ExplorationReport`;
+        ``idx`` indexes ``report.points`` (None picks the lowest-energy
+        Pareto point). Serving-objective reports carry a ready policy
+        dict in the payload; classic error/energy reports apply the
+        genome's rule to ``phases`` (default: all four — the ambient-rule
+        semantics the legacy launchers had)."""
+        pts = report.points
+        if not pts:
+            raise ValueError("report has no evaluated points")
+        if idx is None:
+            from repro.core.pareto import pareto_points
+            front = pareto_points(pts) or pts
+            point = min(front, key=lambda p: p.energy)
+        else:
+            point = pts[idx]
+        if "policy" in point.payload:
+            pol = cls.from_dict(point.payload["policy"])
+            if name:
+                pol.name = name
+            return pol
+        genome = point.payload["genome"]
+        spec = PhaseSpec(family=report.family,
+                         sites=tuple(report.sites),
+                         bits=tuple(int(b) for b in genome))
+        return cls(phases={ph: spec for ph in phases},
+                   name=name or f"{report.family}-genome")
+
+    @classmethod
+    def from_rule(cls, rule: Optional[PlacementRule], *,
+                  name: str = "") -> "PrecisionPolicy":
+        """Wrap a raw :class:`PlacementRule` (applied at every phase) —
+        the compatibility shim behind ``DecodeEngine(..., rule=...)``.
+        ``WholeProgram(MantissaTrunc)`` rules convert losslessly to a
+        serializable uniform policy; anything else is carried as an
+        opaque raw rule (serves fine, will not ``to_json``)."""
+        from repro.core.placement import WholeProgram
+        if rule is None:
+            return cls(name=name)
+        if (type(rule) is WholeProgram
+                and isinstance(rule.fpi, MantissaTrunc)):
+            spec = PhaseSpec(family="wp", sites=("__program__",),
+                             bits=(rule.fpi.bits,),
+                             mode=getattr(rule.fpi, "mode", "rne"),
+                             target=rule.target)
+            return cls(phases={ph: spec for ph in PHASES},
+                       name=name or f"uniform{rule.fpi.bits}")
+        return cls(raw_rules={ph: rule for ph in PHASES},
+                   name=name or "raw-rule")
+
+    # -- phase resolution ---------------------------------------------------
+    def spec_for(self, phase: Optional[str]) -> PhaseSpec:
+        """The phase's spec; unphased contexts (training, direct model
+        calls) resolve to "decode", the canonical compute phase."""
+        return self.phases.get(phase or "decode", IDENTITY_SPEC)
+
+    def rule_for(self, phase: Optional[str]) -> Optional[PlacementRule]:
+        """The placement rule serving ``phase``; None when identity."""
+        phase = phase or "decode"
+        if phase in self.raw_rules:
+            return self.raw_rules[phase]
+        return self.spec_for(phase).rule()
+
+    def is_identity(self) -> bool:
+        return (not self.raw_rules
+                and all(s.is_identity() for s in self.phases.values()))
+
+    def as_rule(self) -> Optional["PolicyRule"]:
+        """One ambient rule covering every phase (dispatching on
+        :func:`current_phase` at trace time); None for the identity
+        policy, so callers compile with no rule at all."""
+        if self.is_identity():
+            return None
+        return PolicyRule(policy=self)
+
+    def with_phase(self, phase: str, spec: PhaseSpec) -> "PrecisionPolicy":
+        phases = dict(self.phases)
+        phases[phase] = spec
+        return dataclasses.replace(self, phases=phases)
+
+    # -- caching / serialization --------------------------------------------
+    def signature(self) -> tuple:
+        """Hashable key for the engine's compilation cache — equal
+        signatures may share one set of compiled step programs."""
+        parts = []
+        for ph in PHASES:
+            if ph in self.raw_rules:
+                parts.append((ph, "raw", id(self.raw_rules[ph])))
+            elif ph in self.phases:
+                s = self.phases[ph]
+                parts.append((ph, s.family, s.sites, s.bits,
+                              s.default_bits, s.mode, s.target, s.weights))
+        return tuple(parts)
+
+    def to_dict(self) -> dict:
+        if self.raw_rules:
+            raise ValueError(
+                "policy carries raw PlacementRule objects (from_rule on a "
+                "non-WholeProgram rule) and cannot be serialized; rebuild "
+                "it from PhaseSpecs or constructors")
+        return {"name": self.name,
+                "phases": {ph: s.to_dict()
+                           for ph, s in self.phases.items()}}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PrecisionPolicy":
+        return cls(phases={ph: PhaseSpec.from_dict(sd)
+                           for ph, sd in d.get("phases", {}).items()},
+                   name=d.get("name", ""))
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), indent=kw.pop("indent", 2), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PrecisionPolicy":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "PrecisionPolicy":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+@dataclasses.dataclass
+class PolicyRule(PlacementRule):
+    """The ambient rule a policy installs: every ``select`` resolves the
+    active phase first (a trace-time thread-local, like the scope
+    stack), then delegates to that phase's own rule — so one
+    ``use_rule(policy.as_rule())`` context serves all four phases and
+    the per-phase precision is baked into each jitted step at trace
+    time. Unphased FLOPs resolve as "decode"."""
+    policy: Optional[PrecisionPolicy] = None
+
+    def select(self, stack, op_class, dtype):
+        rule = self.policy.rule_for(current_phase())
+        if rule is None:
+            return IDENTITY
+        return rule.select(stack, op_class, dtype)
+
+    def tunable_sites(self):
+        sites = []
+        for ph in PHASES:
+            for s in self.policy.spec_for(ph).sites:
+                sites.append(f"{ph}:{s}")
+        return tuple(sites)
+
+
+# ---------------------------------------------------------------------------
+# Policy-keyed weight views — the per-layer generalization of PR 6's
+# drafter_params.
+# ---------------------------------------------------------------------------
+
+def _stack_from_path(path) -> Tuple[str, ...]:
+    """Map a param-tree path to the pscope stack its layer runs under:
+    ``("layers", 3, "attn", "wq") -> ("model", "layer03", "attn", "wq")``
+    — so weight-view site matching reuses the same family machinery
+    (``site_index_for_stack``) as activation rules."""
+    frames = ["model"]
+    prev = None
+    for k in path:
+        if hasattr(k, "key"):            # DictKey
+            frame = str(k.key)
+        elif hasattr(k, "idx"):          # SequenceKey
+            frame = (f"layer{k.idx:02d}" if prev == "layers"
+                     else str(k.idx))
+        elif hasattr(k, "name"):         # GetAttrKey
+            frame = str(k.name)
+        else:
+            frame = str(k)
+        if frame != "layers":
+            frames.append(frame)
+        prev = frame
+    return tuple(frames)
+
+
+def uniform_param_views(params, bits: int, mode: str = "rne"):
+    """Every float leaf truncated to ``bits`` effective mantissa bits —
+    the PR-6 ``drafter_params`` transform (``serve.drafter_params``
+    delegates here)."""
+    from repro.utils.numerics import truncate_mantissa
+
+    def trunc(w):
+        if hasattr(w, "dtype") and jnp.issubdtype(w.dtype, jnp.floating):
+            return truncate_mantissa(w, bits, mode)
+        return w
+
+    return jax.tree.map(trunc, params)
+
+
+def policy_params(params, spec: PhaseSpec):
+    """Weight views for one phase: each float leaf truncated to the
+    bits its tree path's site resolves to under the spec's family.
+    Identity specs (and ``weights=False``) return ``params`` unchanged;
+    uniform (wp) specs take the exact PR-6 path, so legacy
+    ``SpecConfig.drafter_bits`` views stay byte-identical."""
+    if not spec.weights or spec.is_identity():
+        return params
+    if spec.family == "wp":
+        return uniform_param_views(params, spec.bits[0], spec.mode)
+    from repro.utils.numerics import truncate_mantissa
+    full = spec.full_bits
+
+    def trunc(path, w):
+        if not (hasattr(w, "dtype")
+                and jnp.issubdtype(w.dtype, jnp.floating)):
+            return w
+        b = spec.bits_for_stack(_stack_from_path(path))
+        return truncate_mantissa(w, b, spec.mode) if b < full else w
+
+    return jax.tree_util.tree_map_with_path(trunc, params)

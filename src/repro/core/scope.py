@@ -10,6 +10,7 @@ identical stack via ``eqn.source_info.name_stack``.
 from __future__ import annotations
 
 import contextlib
+import functools
 import threading
 from typing import Iterator, Tuple
 
@@ -37,6 +38,59 @@ def pscope(name: str) -> Iterator[None]:
             yield
     finally:
         _tls.stack = tuple(stack[:-1])
+
+
+# ---------------------------------------------------------------------------
+# Phase tags — the serving-phase axis of PrecisionPolicy addressing.
+# ---------------------------------------------------------------------------
+
+PHASES = ("prefill", "decode", "draft", "verify")
+
+
+def current_phase() -> str | None:
+    """The active serving phase ("prefill" | "decode" | "draft" |
+    "verify"), or None outside any phase scope. Like ``pscope`` this is
+    a thread-local consulted at *trace* time, so a phase baked into a
+    jitted step function governs every FLOP that step dispatches.
+    Deliberately separate from the ``pscope`` stack: phases address the
+    engine's step kind, scopes address the model's layer structure, and
+    a rule family keyed on layer scopes must not see phase frames."""
+    return getattr(_tls, "phase", None)
+
+
+@contextlib.contextmanager
+def phase_scope(name: str, default: bool = False) -> Iterator[None]:
+    """Tag a region with a serving phase.
+
+    ``default=True`` applies the tag only when no phase is already
+    active — model step functions self-tag with their natural phase
+    (``decode_step`` -> "decode") while the engine's wrappers set the
+    authoritative phase explicitly (the drafter traces ``decode_step``
+    under ``phase_scope("draft")`` and must win)."""
+    prev = getattr(_tls, "phase", None)
+    if default and prev is not None:
+        yield
+        return
+    _tls.phase = name
+    try:
+        yield
+    finally:
+        _tls.phase = prev
+
+
+def tag_phase(name: str):
+    """Decorator form of ``phase_scope(name, default=True)``: model step
+    functions self-tag with their natural phase so direct callers (the
+    estimators, ad-hoc scripts) resolve phase-aware policies sensibly,
+    while an engine wrapper's explicit ``phase_scope`` still wins (the
+    drafter traces ``decode_step`` under "draft")."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with phase_scope(name, default=True):
+                return fn(*args, **kwargs)
+        return wrapped
+    return deco
 
 
 def parse_name_stack(name_stack) -> Tuple[str, ...]:

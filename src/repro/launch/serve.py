@@ -4,6 +4,19 @@ placement (the paper's tradeoff, applied to LM inference).
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b --reduced \
       --prompts 6 --max-new 16 --rule mant8 --continuous
 
+Precision flows through ONE surface — a
+:class:`~repro.core.policy.PrecisionPolicy`:
+
+* ``--policy policy.json`` loads an explorer-emitted policy artifact
+  (``explore(objectives="serving")`` writes them; phase/layer bits);
+* ``--rule mantN`` is the deprecated uniform shorthand, now
+  ``PrecisionPolicy.uniform(N)``;
+* ``--tiers gold=exact.json,bronze=cheap.json`` (or
+  ``name=mantN``) serves SLA tiers: the slot budget is partitioned,
+  requests are assigned round-robin across tiers, and admission may
+  downgrade under backlog pressure (``--tier-backlog``, never below
+  ``--tier-floor``).
+
 ``--continuous`` (default) refills slots mid-flight from the queue;
 ``--wave`` keeps the historical wave scheduler (slots refill only
 between waves).
@@ -15,10 +28,17 @@ import argparse
 import jax
 
 from repro.configs import get_arch, list_archs
-from repro.core.fpi import MantissaTrunc
-from repro.core.placement import WholeProgram
+from repro.core.policy import PrecisionPolicy
 from repro.models import build_model
 from repro.serve.engine import DecodeEngine, ServeConfig, SpecConfig
+
+
+def _parse_policy(spec: str) -> PrecisionPolicy:
+    """``mantN`` -> uniform N-bit policy; anything else is a path to a
+    ``policy.json`` artifact."""
+    if spec.startswith("mant") and spec[4:].isdigit():
+        return PrecisionPolicy.uniform(int(spec[4:]), name=spec)
+    return PrecisionPolicy.load(spec)
 
 
 def main() -> None:
@@ -28,7 +48,28 @@ def main() -> None:
     ap.add_argument("--prompts", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--rule", default=None)
+    ap.add_argument("--rule", default=None,
+                    help="DEPRECATED: mantN uniform rule; use --policy")
+    ap.add_argument("--policy", default=None,
+                    help="precision policy: a policy.json artifact from "
+                         "explore(objectives='serving'), or mantN for a "
+                         "uniform policy")
+    ap.add_argument("--tiers", default=None,
+                    help="SLA tiers, best first: comma-separated "
+                         "name=policy pairs where policy is mantN or a "
+                         "policy.json path, e.g. "
+                         "gold=mant24,bronze=cheap.json")
+    ap.add_argument("--tier-floor", default=None,
+                    help="worst tier admission may downgrade to "
+                         "(default: the last tier)")
+    ap.add_argument("--tier-backlog", type=int, default=0,
+                    help="downgrade a request when its tier's backlog "
+                         "reaches this multiple of the tier's slots "
+                         "(0 = never downgrade)")
+    ap.add_argument("--estimate-energy", action="store_true",
+                    help="report estimated pJ/token from the per-phase "
+                         "row accounting (abstract cell census; zero "
+                         "extra dispatches)")
     ap.add_argument("--continuous", dest="engine", action="store_const",
                     const="continuous", default="continuous",
                     help="continuous batching: refill slots mid-flight")
@@ -69,11 +110,28 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
 
-    rule = None
-    if args.rule:
+    policy = None
+    if args.policy and args.rule:
+        ap.error("--rule is the deprecated alias of --policy; pass one")
+    if args.policy:
+        policy = _parse_policy(args.policy)
+        print(f"[serve] precision policy: {policy.name or args.policy}")
+    elif args.rule:
+        # deprecated path: mantN folds into the uniform policy
         bits = int(args.rule.replace("mant", ""))
-        rule = WholeProgram(fpi=MantissaTrunc(bits), target="single")
-        print(f"[serve] NEAT rule: WP mant{bits}")
+        policy = PrecisionPolicy.uniform(bits, name=args.rule)
+        print(f"[serve] NEAT rule: WP mant{bits} (deprecated --rule; "
+              "equals --policy mant{bits})".format(bits=bits))
+
+    tiers = None
+    if args.tiers:
+        tiers = {}
+        for pair in args.tiers.split(","):
+            name, _, spec = pair.partition("=")
+            if not spec:
+                ap.error(f"--tiers entry {pair!r} is not name=policy")
+            tiers[name.strip()] = _parse_policy(spec.strip())
+        print(f"[serve] tiers: {list(tiers)}")
 
     spec = None
     if args.spec_k > 0:
@@ -91,11 +149,19 @@ def main() -> None:
                                       page_size=args.page_size,
                                       kv_pages=args.kv_pages,
                                       pack_tokens=args.pack_tokens,
-                                      spec=spec),
-                          rule=rule)
+                                      spec=spec, tiers=tiers,
+                                      tier_floor=args.tier_floor,
+                                      tier_backlog=args.tier_backlog,
+                                      estimate_energy=args.estimate_energy),
+                          policy=policy)
     prompts = [[(7 * i + 3) % cfg.vocab_size for _ in range(4)]
                for i in range(args.prompts)]
-    outs = engine.generate(prompts, max_new_tokens=args.max_new)
+    tier_of = None
+    if tiers:
+        names = list(tiers)
+        tier_of = [names[i % len(names)] for i in range(args.prompts)]
+    outs = engine.generate(prompts, max_new_tokens=args.max_new,
+                           tiers=tier_of)
     for i, o in enumerate(outs):
         print(f"[serve] prompt {i}: {len(o)} tokens -> {o[:8]}...")
     st = engine.stats
@@ -103,6 +169,17 @@ def main() -> None:
           f"occupancy={st.occupancy:.2f} tokens={st.tokens_out} "
           f"prefill_tokens={st.prefill_tokens} "
           f"mean_ttft={st.mean_ttft_s * 1e3:.1f}ms")
+    if args.estimate_energy:
+        print(f"[serve] energy: {st.est_pj_per_token:.0f} pJ/token "
+              f"(phase_rows={dict(sorted(st.phase_rows.items()))})")
+    if tiers:
+        for name, ts in st.per_tier.items():
+            print(f"[serve] tier {name}: tokens/s={ts.tokens_per_s:.1f} "
+                  f"acceptance={ts.acceptance_rate:.3f} "
+                  f"p50_ttft={ts.p50_ttft_s * 1e3:.1f}ms "
+                  f"p99_ttft={ts.p99_ttft_s * 1e3:.1f}ms "
+                  f"est_pJ/tok={ts.est_pj_per_token:.0f}")
+        print(f"[serve] downgraded={st.downgraded}")
     if args.page_size:
         print(f"[serve] paged: pool={st.pool_pages} pages "
               f"peak_resident={st.peak_resident_pages} "

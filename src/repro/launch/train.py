@@ -13,13 +13,11 @@ Example (the end-to-end driver used by examples/train_100m.py):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 
 from repro.configs import get_arch, list_archs
-from repro.core.fpi import MantissaTrunc
-from repro.core.placement import WholeProgram
+from repro.core.policy import PrecisionPolicy
 from repro.data.synthetic import SyntheticLMDataset
 from repro.models import build_model
 from repro.train.trainer import Trainer, TrainerConfig
@@ -56,9 +54,12 @@ def main() -> None:
 
     rule = None
     if args.rule:
-        rule = WholeProgram(fpi=MantissaTrunc(int(args.rule)),
-                            target="single")
-        print(f"[train] NEAT rule: WP mant{args.rule} (STE QAT)")
+        # deprecated shorthand: mantissa bits fold into the uniform
+        # PrecisionPolicy, whose as_rule() is the trainer's ambient rule
+        rule = PrecisionPolicy.uniform(int(args.rule),
+                                       name=f"mant{args.rule}").as_rule()
+        print(f"[train] NEAT rule: WP mant{args.rule} (STE QAT; "
+              "via PrecisionPolicy.uniform)")
 
     ds = SyntheticLMDataset(cfg.vocab_size, args.seq_len, args.batch)
 

@@ -12,7 +12,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.scope import pscope
+from repro.core.scope import pscope, tag_phase
 from repro.sharding.specs import shard_activations
 from repro.models import attention as attn_mod
 from repro.models.config import ModelConfig
@@ -172,6 +172,7 @@ def _chunk_logits(params, cache, tokens, n_new, memory,
     return logits, new_layers
 
 
+@tag_phase("prefill")
 def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig,
                   memory: jnp.ndarray | None = None):
     """Chunked decoder prefill: the (B, C) chunk runs batched through
@@ -190,6 +191,7 @@ def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig,
              "memory": memory})
 
 
+@tag_phase("verify")
 def spec_verify(params, cache, tokens, n_new, draft, spec,
                 cfg: ModelConfig):
     """Speculative verify on the decoder rectangle — the transformer
@@ -207,6 +209,7 @@ def spec_verify(params, cache, tokens, n_new, draft, spec,
                            "pos": cache["pos"] + adv, "memory": memory}
 
 
+@tag_phase("prefill")
 def prefill_packed(params, cache, tokens, slot, qpos, last,
                    cfg: ModelConfig, *, cap: int = 0,
                    memory: jnp.ndarray | None = None):
@@ -262,6 +265,7 @@ def _packed_logits(params, cache, tokens, slot, qpos, memory,
     return logits, new_layers
 
 
+@tag_phase("verify")
 def spec_verify_packed(params, cache, tokens, slot, qpos, rowidx, n_new,
                        draft, spec, cfg: ModelConfig, *, cap: int = 0):
     """Packed-stream speculative verify for the encoder-decoder: the
@@ -283,6 +287,7 @@ def spec_verify_packed(params, cache, tokens, slot, qpos, rowidx, n_new,
                            "pos": cache["pos"] + adv, "memory": memory}
 
 
+@tag_phase("decode")
 def decode_step(params, cache, tokens, cfg: ModelConfig,
                 memory: jnp.ndarray | None = None):
     """Single-token decode against cached self-attn KV + encoder memory

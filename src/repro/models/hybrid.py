@@ -15,7 +15,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.scope import pscope
+from repro.core.scope import pscope, tag_phase
 from repro.sharding.specs import shard_activations
 from repro.models import attention as attn_mod
 from repro.models.config import ModelConfig
@@ -181,6 +181,7 @@ def reset_slots(cfg: ModelConfig, cache, mask):
     }
 
 
+@tag_phase("prefill")
 def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig):
     """Chunked prefill: the Mamba backbone is stateful per token, so the
     chunk is scanned on-device (one compiled ``lax.scan`` of the decode
@@ -192,6 +193,7 @@ def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig):
         n_new)
 
 
+@tag_phase("prefill")
 def prefill_packed(params, cache, tokens, slot, qpos, last,
                    cfg: ModelConfig, *, cap: int):
     """Packed-stream prefill: the stream is unpacked into a (B, cap)
@@ -208,6 +210,7 @@ def prefill_packed(params, cache, tokens, slot, qpos, last,
         slot, batch, cap)
 
 
+@tag_phase("verify")
 def spec_verify(params, cache, tokens, n_new, draft, spec,
                 cfg: ModelConfig):
     """Speculative verify for the hybrid stack: the decode cell scanned
@@ -222,6 +225,7 @@ def spec_verify(params, cache, tokens, n_new, draft, spec,
         n_new, draft, spec)
 
 
+@tag_phase("verify")
 def spec_verify_packed(params, cache, tokens, slot, qpos, rowidx, n_new,
                        draft, spec, cfg: ModelConfig, *, cap: int):
     """Packed-stream speculative verify: unpack into the (B, cap)
@@ -235,6 +239,7 @@ def spec_verify_packed(params, cache, tokens, slot, qpos, rowidx, n_new,
         slot, batch, cap, n_new, draft, spec)
 
 
+@tag_phase("decode")
 def decode_step(params, cache, tokens, cfg: ModelConfig):
     period = max(cfg.attn_period, 1)
     pos = cache["pos"]

@@ -10,7 +10,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.scope import pscope
+from repro.core.scope import pscope, tag_phase
 from repro.sharding.specs import shard_activations
 from repro.models import attention as attn_mod
 from repro.models.config import ModelConfig
@@ -225,6 +225,7 @@ def _chunk_logits(params, cache, tokens, n_new, cfg: ModelConfig,
     return logits, new_layers
 
 
+@tag_phase("prefill")
 def prefill_chunk(params, cache, tokens: jnp.ndarray, n_new: jnp.ndarray,
                   cfg: ModelConfig, *, moe_impl: str | None = None
                   ) -> Tuple[jnp.ndarray, dict]:
@@ -243,6 +244,7 @@ def prefill_chunk(params, cache, tokens: jnp.ndarray, n_new: jnp.ndarray,
             {"layers": new_layers, "pos": cache["pos"] + n_new})
 
 
+@tag_phase("verify")
 def spec_verify(params, cache, tokens: jnp.ndarray, n_new: jnp.ndarray,
                 draft: jnp.ndarray, spec: jnp.ndarray, cfg: ModelConfig,
                 *, moe_impl: str | None = None
@@ -315,6 +317,7 @@ def _packed_logits(params, cache, tokens, slot, qpos, cfg: ModelConfig,
     return logits, new_layers
 
 
+@tag_phase("prefill")
 def prefill_packed(params, cache, tokens: jnp.ndarray, slot: jnp.ndarray,
                    qpos: jnp.ndarray, last: jnp.ndarray,
                    cfg: ModelConfig, *, cap: int = 0,
@@ -347,6 +350,7 @@ def prefill_packed(params, cache, tokens: jnp.ndarray, slot: jnp.ndarray,
              "pos": cache["pos"] + counts})
 
 
+@tag_phase("verify")
 def spec_verify_packed(params, cache, tokens: jnp.ndarray,
                        slot: jnp.ndarray, qpos: jnp.ndarray,
                        rowidx: jnp.ndarray, n_new: jnp.ndarray,
@@ -381,6 +385,7 @@ def spec_verify_packed(params, cache, tokens: jnp.ndarray,
                            "pos": cache["pos"] + adv}
 
 
+@tag_phase("decode")
 def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
                 *, moe_impl: str | None = None) -> Tuple[jnp.ndarray, dict]:
     """One decode step. tokens: (B, 1) -> (logits (B, 1, V), new cache).

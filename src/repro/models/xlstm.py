@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import quantize_here
-from repro.core.scope import pscope
+from repro.core.scope import pscope, tag_phase
 from repro.models.config import ModelConfig
 from repro.models.layers import (init_linear, init_norm, linear,
                                  maybe_remat, norm)
@@ -347,6 +347,7 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
     return init_cache(cfg, batch, max_len)
 
 
+@tag_phase("prefill")
 def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig):
     """Chunked prefill for the recurrent stack: no parallel form exists
     for the streaming cells (sLSTM's R h_{t-1} term forbids it), so the
@@ -359,6 +360,7 @@ def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig):
         n_new)
 
 
+@tag_phase("prefill")
 def prefill_packed(params, cache, tokens, slot, qpos, last,
                    cfg: ModelConfig, *, cap: int):
     """Packed-stream prefill: unpack the (ΣC,) stream into a (B, cap)
@@ -372,6 +374,7 @@ def prefill_packed(params, cache, tokens, slot, qpos, last,
         slot, batch, cap)
 
 
+@tag_phase("verify")
 def spec_verify(params, cache, tokens, n_new, draft, spec,
                 cfg: ModelConfig):
     """Speculative verify for the pure-recurrent stack: the decode cell
@@ -384,6 +387,7 @@ def spec_verify(params, cache, tokens, n_new, draft, spec,
         n_new, draft, spec)
 
 
+@tag_phase("verify")
 def spec_verify_packed(params, cache, tokens, slot, qpos, rowidx, n_new,
                        draft, spec, cfg: ModelConfig, *, cap: int):
     """Packed-stream speculative verify: unpack into the (B, cap)
@@ -397,6 +401,7 @@ def spec_verify_packed(params, cache, tokens, slot, qpos, rowidx, n_new,
         slot, batch, cap, n_new, draft, spec)
 
 
+@tag_phase("decode")
 def decode_step(params, cache, tokens, cfg: ModelConfig):
     kinds = block_kinds(cfg)
     with pscope("model"):

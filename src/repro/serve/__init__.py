@@ -1,5 +1,6 @@
-from repro.serve.engine import (DecodeEngine, ServeConfig, ServeStats,
-                                SpecConfig, drafter_params)
+from repro.core.policy import PrecisionPolicy
+from repro.serve.engine import (DecodeEngine, KVConfig, ServeConfig,
+                                ServeStats, SpecConfig, drafter_params)
 
-__all__ = ["DecodeEngine", "ServeConfig", "ServeStats", "SpecConfig",
-           "drafter_params"]
+__all__ = ["DecodeEngine", "KVConfig", "PrecisionPolicy", "ServeConfig",
+           "ServeStats", "SpecConfig", "drafter_params"]

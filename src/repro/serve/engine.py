@@ -1,6 +1,31 @@
 """Decode engine: prefill + greedy/temperature decode against the model's
 KV cache, with NEAT placement support for reduced-precision serving.
 
+Precision is a first-class policy surface: every engine carries ONE
+:class:`~repro.core.policy.PrecisionPolicy` mapping ``(phase, layer) ->
+(bits, mode)`` — phases are the engine's step kinds ({prefill, decode,
+draft, verify}), layers the placement-rule site families. Each compiled
+step program is traced under ``use_rule(policy.as_rule())`` plus a
+``phase_scope`` naming its step kind, so the fused qk/pv hooks
+(``_ambient_dot_bits``) and every ``quantize_here`` site resolve the
+phase's own rule at trace time; phases marked ``weights=True``
+additionally serve through policy-keyed truncated weight views
+(:func:`~repro.core.policy.policy_params`). The legacy ``rule=`` kwarg
+and ``SpecConfig.drafter_bits`` fold into a policy via
+:meth:`PrecisionPolicy.from_rule` — byte-identical serving output.
+
+``ServeConfig.tiers`` makes policies request-scoped: an ordered
+``{tier_name: PrecisionPolicy}`` map (best first) partitions the slot
+budget into per-tier sub-engines that share one compilation cache keyed
+on ``policy.signature()`` (one set of compiled step programs per
+distinct policy tier). ``generate(..., tiers=[...])`` assigns each
+request an SLA class; admission may downgrade a request to a cheaper
+tier under backlog pressure (``tier_backlog``), never below
+``tier_floor``. ``ServeStats.per_tier`` reports per-tier tokens/sec,
+acceptance, p50/p99 TTFT and (``estimate_energy=True``) estimated pJ
+from the per-phase row counts times an abstractly-profiled decode-cell
+cost — zero extra device dispatches.
+
 Two schedulers share one compiled (batch, 1)-token decode step; the
 continuous scheduler additionally runs a compiled **chunked-prefill**
 step — and, with ``page_size > 0``, switches to the **paged** memory
@@ -51,7 +76,9 @@ continuous engine, the raw tail length for the streaming wave
 scheduler) — and every request carries its own ``max_new`` budget
 (``generate(prompts, max_new_tokens=[...])``; an int broadcasts).
 ``ServeStats`` tracks per-request time-to-first-token alongside the
-step/occupancy accounting.
+step/occupancy accounting. Internally each scheduler is a *generator*
+yielding once per compiled step, which is what lets the tiered engine
+round-robin several sub-engines through one wall clock.
 """
 from __future__ import annotations
 
@@ -64,7 +91,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.placement import PlacementRule
+from repro.core.policy import (PhaseSpec, PrecisionPolicy, policy_params,
+                               uniform_param_views)
 from repro.core.quantize import use_rule
+from repro.core.scope import PHASES, phase_scope
 from repro.models.model_api import Model
 
 
@@ -73,16 +103,12 @@ def drafter_params(params, bits: int, mode: str = "rne"):
     leaf reduced to ``bits`` effective mantissa bits (identity at native
     width), non-float leaves untouched. The drafter is the *same* model
     under these views plus the ambient drafter rule — no second set of
-    trained weights."""
-    from repro.utils.numerics import truncate_mantissa
-    import jax.numpy as _jnp
+    trained weights.
 
-    def trunc(w):
-        if hasattr(w, "dtype") and _jnp.issubdtype(w.dtype, _jnp.floating):
-            return truncate_mantissa(w, bits, mode)
-        return w
-
-    return jax.tree.map(trunc, params)
+    Deprecated thin wrapper over
+    :func:`repro.core.policy.uniform_param_views` (the ``weights=True``
+    phase of a :class:`PrecisionPolicy` supersedes it)."""
+    return uniform_param_views(params, bits, mode)
 
 
 @dataclasses.dataclass
@@ -90,24 +116,30 @@ class SpecConfig:
     """Speculative-decoding policy for the continuous engine.
 
     The drafter is the serving model itself at reduced precision: its
-    weights are mantissa-truncated views (:func:`drafter_params`) and
-    its forward runs under a ``WholeProgram(MantissaTrunc(drafter_bits,
-    mode), target="any")`` rule, which the fused attention path resolves
-    through ``_ambient_dot_bits`` — the paper's genome applied to the
-    draft phase of every request. Each step the drafter proposes ``k``
-    greedy tokens per decoding slot in ONE fused dispatch (a
+    weights are mantissa-truncated views and its forward traces under
+    the policy's "draft"-phase rule, which the fused attention path
+    resolves through ``_ambient_dot_bits`` — the paper's genome applied
+    to the draft phase of every request. Each step the drafter proposes
+    ``k`` greedy tokens per decoding slot in ONE fused dispatch (a
     ``lax.scan`` of the decode cell with on-device argmax feedback,
     reading the *shared* KV prefix through the same block tables); the
     target model then verifies the whole window in one chunk-path
     dispatch. Greedy parity with the non-speculative engine is exact by
     construction — the emitted tokens are always the target's own
-    argmax."""
+    argmax.
+
+    ``drafter_bits``/``mode`` are the *deprecated* precision knobs: they
+    apply only when no explicit ``policy=`` is passed to the engine
+    (the legacy surface), folding into the policy's draft phase via
+    ``PrecisionPolicy.drafter(bits, mode)`` semantics. New callers set
+    the draft phase on the policy instead."""
     #: draft tokens proposed per slot per step (the window is k+1 rows)
     k: int = 4
-    #: drafter mantissa bits incl. the implicit bit (fp32: 1..24;
-    #: 24 = identity drafter, acceptance is exactly 1)
+    #: DEPRECATED drafter mantissa bits incl. the implicit bit (fp32:
+    #: 1..24; 24 = identity drafter, acceptance is exactly 1); ignored
+    #: when the engine is given an explicit PrecisionPolicy
     drafter_bits: int = 10
-    #: rounding mode for weight views + fused truncation
+    #: DEPRECATED rounding mode for weight views + fused truncation
     mode: str = "rne"
     #: scale each slot's draft budget by its trailing acceptance EMA
     #: (deterministic; resets to 1.0 on admission)
@@ -115,6 +147,30 @@ class SpecConfig:
     #: explicit drafter weights (a genuinely different draft model);
     #: None derives mantissa-truncated views of the serving weights
     draft_params: Optional[object] = None
+
+
+@dataclasses.dataclass
+class KVConfig:
+    """KV-cache memory layout for the continuous engine.
+
+    ``page_size == 0`` keeps the contiguous per-slot ``(B, max_len)``
+    strips; ``> 0`` switches to the paged pool + block tables + packed
+    ragged prefill. ``ServeConfig`` still accepts the historical flat
+    ``page_size=/kv_pages=/pack_tokens=`` kwargs as a shim — they fold
+    into (and must agree with) this nested config."""
+    #: KV page size in tokens; 0 = contiguous (B, max_len) strips.
+    #: Must divide ``max_len`` so the paged logical length equals the
+    #: contiguous S axis (keeps the attention reductions identical).
+    page_size: int = 0
+    #: total pool pages; 0 derives ``batch_slots * ceil(max_len /
+    #: page_size)`` — the same token capacity as the contiguous layout.
+    #: Smaller pools trade concurrency headroom for memory; admission
+    #: blocks (backpressure) rather than overcommitting.
+    pages: int = 0
+    #: packed-stream width per compiled prefill step (ΣC); 0 derives
+    #: ``batch_slots * prefill_chunk``. Must be >= batch_slots so every
+    #: active slot gets at least one row per step.
+    pack_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -140,31 +196,135 @@ class ServeConfig:
     #: tokens each prefilling slot ingests per compiled step (continuous
     #: engine only; 1 = legacy streaming prefill, token by token)
     prefill_chunk: int = 32
-    #: KV page size in tokens; 0 = contiguous per-slot (B, max_len)
-    #: strips (the PR-4 rectangle path). > 0 switches the continuous
-    #: engine to the paged pool + block tables + packed ragged prefill.
-    #: Pick ``page_size | max_len`` so the paged logical length equals
-    #: the contiguous S axis (keeps the attention reductions identical).
-    page_size: int = 0
-    #: total pool pages; 0 derives ``batch_slots * ceil(max_len /
-    #: page_size)`` — the same token capacity as the contiguous layout.
-    #: Smaller pools trade concurrency headroom for memory; admission
-    #: blocks (backpressure) rather than overcommitting.
-    kv_pages: int = 0
-    #: packed-stream width per compiled prefill step (ΣC); 0 derives
-    #: ``batch_slots * prefill_chunk`` (the rectangle's token capacity,
-    #: so step counts never regress). Must be >= batch_slots so every
-    #: active slot gets at least one row per step. The engine rounds
-    #: each step's live row count up to the next power of two <= this
-    #: budget (width buckets — one cached compilation per bucket), so
-    #: mostly-decode steps stop paying the full rectangle's padding.
-    pack_tokens: int = 0
+    #: DEPRECATED flat paging kwargs — the shim for the nested ``kv``
+    #: config below. None defers to ``kv``; setting both to conflicting
+    #: values is an error.
+    page_size: Optional[int] = None
+    kv_pages: Optional[int] = None
+    pack_tokens: Optional[int] = None
+    #: nested KV/paging layout; None derives from the flat kwargs (or
+    #: all-contiguous defaults). After ``__post_init__`` the flat fields
+    #: are plain ints kept in sync with this, so both surfaces read the
+    #: same truth.
+    kv: Optional[KVConfig] = None
     #: speculative decoding policy; None serves non-speculatively.
     #: Requires the continuous engine and greedy (temperature 0).
     spec: Optional[SpecConfig] = None
     #: assert the page-pool accounting invariant (free + resident ==
     #: total) after every step — cheap, host-side; meant for tests
     debug_invariants: bool = False
+    #: SLA precision tiers: ordered {name: PrecisionPolicy}, best
+    #: (most exact / most expensive) first. Non-None partitions
+    #: ``batch_slots`` (and the page pool / pack budget) into per-tier
+    #: sub-engines; ``generate(..., tiers=...)`` routes requests.
+    tiers: Optional[Dict[str, PrecisionPolicy]] = None
+    #: slots per tier; None splits ``batch_slots`` evenly (earlier tiers
+    #: take the remainder). Must sum to <= batch_slots, each >= 1.
+    tier_slots: Optional[Dict[str, int]] = None
+    #: the worst tier admission may downgrade a request to; None = the
+    #: last (cheapest) tier.
+    tier_floor: Optional[str] = None
+    #: backlog-pressure downgrade threshold: at submit time a request
+    #: whose tier already has >= tier_backlog * tier_slots requests
+    #: assigned in this batch walks down to the next tier (never past
+    #: the floor). 0 disables downgrading.
+    tier_backlog: int = 0
+    #: fill ``ServeStats.est_pj`` after generate: per-phase row counts
+    #: times an abstractly-profiled decode-cell cost under that phase's
+    #: rule (jaxpr walk on ShapeDtypeStructs — zero device dispatches).
+    estimate_energy: bool = False
+
+    def __post_init__(self):
+        # -- KV/paging: nested KVConfig with the flat-kwarg shim
+        flats = (("page_size", self.page_size, "page_size"),
+                 ("kv_pages", self.kv_pages, "pages"),
+                 ("pack_tokens", self.pack_tokens, "pack_tokens"))
+        if self.kv is None:
+            self.kv = KVConfig(page_size=self.page_size or 0,
+                               pages=self.kv_pages or 0,
+                               pack_tokens=self.pack_tokens or 0)
+        else:
+            for flat_name, flat_val, kv_name in flats:
+                kv_val = getattr(self.kv, kv_name)
+                if flat_val is not None and int(flat_val) != kv_val:
+                    raise ValueError(
+                        f"conflicting paging config: {flat_name}="
+                        f"{flat_val} but kv.{kv_name}={kv_val}; set the "
+                        "paging layout through KVConfig (or the flat "
+                        "kwargs) — not both")
+        self.page_size = self.kv.page_size
+        self.kv_pages = self.kv.pages
+        self.pack_tokens = self.kv.pack_tokens
+        # -- validation: catch implicit invalid combos at construction
+        if self.engine not in ("continuous", "wave"):
+            raise ValueError(f"unknown engine {self.engine!r}; one of "
+                             "('continuous', 'wave')")
+        if self.admission not in ("fifo", "sjf"):
+            raise ValueError(f"unknown admission policy "
+                             f"{self.admission!r}; one of ('fifo', 'sjf')")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if self.page_size < 0 or self.kv_pages < 0 or self.pack_tokens < 0:
+            raise ValueError("page_size/kv_pages/pack_tokens must be >= 0")
+        if self.page_size and self.engine != "continuous":
+            raise ValueError("paged KV (page_size > 0) requires the "
+                             "continuous engine; got engine="
+                             f"{self.engine!r}")
+        if self.page_size and self.max_len % self.page_size != 0:
+            raise ValueError(
+                f"page_size={self.page_size} must divide max_len="
+                f"{self.max_len} so the paged logical length equals the "
+                "contiguous S axis; pick e.g. page_size="
+                f"{self._suggest_page_size()}")
+        if self.page_size and self.pack_tokens \
+                and self.pack_tokens < self.batch_slots:
+            raise ValueError(
+                f"pack_tokens={self.pack_tokens} < batch_slots="
+                f"{self.batch_slots}: every active slot needs at least "
+                "one packed row per step; raise pack_tokens (or leave it "
+                "0 to derive batch_slots * prefill_chunk)")
+        if self.spec is not None:
+            if self.engine != "continuous":
+                raise ValueError(
+                    "speculative decoding requires the continuous "
+                    f"engine; got engine={self.engine!r}")
+            if self.temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only; got "
+                    f"temperature={self.temperature} (set it to 0 or "
+                    "drop spec)")
+            if self.spec.k < 1:
+                raise ValueError(f"spec.k must be >= 1; got {self.spec.k}")
+        if self.tiers is not None:
+            names = list(self.tiers)
+            if not names:
+                raise ValueError("tiers must name at least one tier")
+            if self.tier_slots is not None:
+                unknown = set(self.tier_slots) - set(names)
+                if unknown:
+                    raise ValueError(f"tier_slots names unknown tiers "
+                                     f"{sorted(unknown)}")
+                if any(v < 1 for v in self.tier_slots.values()):
+                    raise ValueError("every tier needs >= 1 slot")
+                if sum(self.tier_slots.values()) > self.batch_slots:
+                    raise ValueError(
+                        f"tier_slots sum to "
+                        f"{sum(self.tier_slots.values())} > batch_slots="
+                        f"{self.batch_slots}")
+            elif len(names) > self.batch_slots:
+                raise ValueError(f"{len(names)} tiers need at least "
+                                 f"{len(names)} batch_slots")
+            if self.tier_floor is not None and self.tier_floor not in names:
+                raise ValueError(f"tier_floor {self.tier_floor!r} is not "
+                                 f"a configured tier {names}")
+            if self.tier_backlog < 0:
+                raise ValueError("tier_backlog must be >= 0")
+
+    def _suggest_page_size(self) -> int:
+        for cand in range(min(self.page_size, self.max_len), 0, -1):
+            if self.max_len % cand == 0:
+                return cand
+        return 1
 
 
 @dataclasses.dataclass
@@ -194,6 +354,23 @@ class ServeStats:
     accepted_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
     #: packed-step width-bucket histogram: {width: steps}
     packed_widths: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: valid rows dispatched per serving phase (billed to the phase of
+    #: the compiled program that processed them — a prefill chunk riding
+    #: a verify dispatch bills as "verify"); the draft phase bills the
+    #: full ``batch_slots * k`` rows its fused scan computes
+    phase_rows: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: wall-clock seconds generate() ran
+    wall_s: float = 0.0
+    #: estimated energy (picojoules) for the run: per-phase row counts
+    #: times the abstract decode-cell cost under each phase's rule;
+    #: 0.0 unless ``ServeConfig.estimate_energy``
+    est_pj: float = 0.0
+    #: tiered serving: per-tier stats, request -> tier assignment, and
+    #: how many requests admission downgraded below their asked tier
+    per_tier: Dict[str, "ServeStats"] = dataclasses.field(
+        default_factory=dict)
+    tier_of: Dict[int, str] = dataclasses.field(default_factory=dict)
+    downgraded: int = 0
 
     @property
     def occupancy(self) -> float:
@@ -208,6 +385,14 @@ class ServeStats:
     def acceptance_rate(self) -> float:
         """Fraction of proposed draft tokens the target accepted."""
         return self.accepted_tokens / max(self.draft_tokens, 1)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def est_pj_per_token(self) -> float:
+        return self.est_pj / max(self.tokens_out, 1)
 
     def ttft_percentile(self, q: float) -> float:
         """Nearest-rank TTFT percentile over completed requests,
@@ -289,19 +474,92 @@ class PageAllocator:
                 f"{resident} resident != {self.num_pages} total")
 
 
+def _phase_programs(model: Model, cfg: ServeConfig,
+                    ambient: Optional[PlacementRule],
+                    spec: Optional[SpecConfig]) -> dict:
+    """Compile the engine's step programs, each traced under the policy
+    ambient rule plus its authoritative phase tag. ``use_rule`` /
+    ``phase_scope`` are thread-local and consulted at *trace* time, so
+    wrapping inside the to-be-jitted callable (not around ``jax.jit``)
+    keeps lazy retraces — new shapes, new width buckets — under the
+    same rule. Closures deliberately capture only ``model``/``cfg``
+    values (never an engine), so tiers with equal policy signatures can
+    share one program set."""
+    chunk = cfg.prefill_chunk
+
+    def phased(phase, fn):
+        def run(*args):
+            with use_rule(ambient), phase_scope(phase):
+                return fn(*args)
+        return run
+
+    progs = {
+        "step": jax.jit(phased(
+            "decode", lambda p, c, t: model.decode_step(p, c, t))),
+        # the chunked-prefill step: (B, C) tokens + per-slot n_new in
+        # one dispatch (mixed prefill/decode); compiled lazily, so
+        # wave engines never pay for it
+        "chunk_step": jax.jit(phased(
+            "prefill", lambda p, c, t, n: model.prefill_chunk(p, c, t, n))),
+        # the packed-prefill step: one (ΣC,) ragged stream + per-row
+        # slot/position vectors; per-slot rows are capped at
+        # prefill_chunk (static, for the recurrent unpack rectangle)
+        "packed_step": jax.jit(phased(
+            "prefill", lambda p, c, t, s, q, l: model.prefill_packed(
+                p, c, t, s, q, l, chunk))),
+        # donate the cache: the reset runs on the admit hot path and
+        # the caller always rebinds, so XLA may update it in place
+        # instead of copying every layer's (B, S, KV, Dh) buffers
+        "reset": jax.jit(phased(
+            "decode", lambda c, m: model.reset_slots(c, m)),
+            donate_argnums=0),
+    }
+    if spec is not None:
+        k = spec.k
+
+        # ONE fused dispatch drafts k greedy tokens per slot: a
+        # lax.scan of the decode cell with on-device argmax feedback,
+        # traced under the policy's "draft" phase (thread-local, applies
+        # at trace time, so the reduced-precision fused qk/pv path is
+        # baked into this jit and only this jit). The drafter's cache
+        # writes ride the SAME pools/block tables as the target; the
+        # post-draft cache is simply discarded (JAX functional
+        # semantics = free snapshot), so verification always starts
+        # from the committed prefix.
+        def _draft_fn(p, c, t):
+            def step(carry, _):
+                cc, tok = carry
+                logits, cc = model.decode_step(p, cc, tok)
+                nxt = jnp.argmax(
+                    logits[:, -1, :],
+                    axis=-1).astype(jnp.int32)[:, None]
+                return (cc, nxt), nxt[:, 0]
+            (_, _), seq = jax.lax.scan(step, (c, t), None, length=k)
+            return seq.T              # (B, k)
+
+        progs["draft"] = jax.jit(phased("draft", _draft_fn))
+        # target verify over the k+1 candidate rows — the existing
+        # chunk path's q_start/kv_len math under the "verify" phase
+        # (identity unless the policy says otherwise)
+        progs["verify"] = jax.jit(phased(
+            "verify", lambda p, c, tok, n, d, sp: model.spec_verify(
+                p, c, tok, n, d, sp)))
+        vcap = max(cfg.prefill_chunk, k + 1)
+        progs["verify_packed"] = jax.jit(phased(
+            "verify", lambda p, c, t, s, q, ri, n, d, sp:
+                model.spec_verify_packed(p, c, t, s, q, ri, n,
+                                         d, sp, vcap)))
+    return progs
+
+
 class DecodeEngine:
     def __init__(self, model: Model, params, cfg: ServeConfig,
-                 rule: Optional[PlacementRule] = None):
-        if cfg.engine not in ("continuous", "wave"):
-            raise ValueError(f"unknown engine {cfg.engine!r}")
-        if cfg.admission not in ("fifo", "sjf"):
-            raise ValueError(f"unknown admission policy {cfg.admission!r}")
-        if cfg.prefill_chunk < 1:
-            raise ValueError("prefill_chunk must be >= 1")
-        if cfg.page_size < 0 or cfg.kv_pages < 0 or cfg.pack_tokens < 0:
-            raise ValueError("page_size/kv_pages/pack_tokens must be >= 0")
-        if cfg.page_size and cfg.engine != "continuous":
-            raise ValueError("paged KV requires the continuous engine")
+                 rule: Optional[PlacementRule] = None,
+                 policy: Optional[PrecisionPolicy] = None,
+                 _programs: Optional[dict] = None):
+        if rule is not None and policy is not None:
+            raise ValueError("pass either rule= (deprecated) or policy=, "
+                             "not both")
         from repro.models.attention import max_pages_for
         self.model = model
         self.params = params
@@ -319,82 +577,117 @@ class DecodeEngine:
                 raise ValueError("pack_tokens must be >= batch_slots "
                                  "(every active slot needs one row)")
         self._spec = cfg.spec
+        self._row_pj_cache: Dict[object, float] = {}
+
+        # -- resolve the precision policy: the one surface every legacy
+        #    entry point (rule=, SpecConfig.drafter_bits) folds into
+        pol = (policy if policy is not None
+               else PrecisionPolicy.from_rule(rule))
+        if self._spec is not None and policy is None:
+            # legacy SpecConfig drafter knobs → the policy's draft phase
+            # (an explicit policy= owns its draft phase and wins)
+            dspec = PhaseSpec(family="wp", sites=("__program__",),
+                              bits=(int(self._spec.drafter_bits),),
+                              mode=self._spec.mode, weights=True)
+            phases = dict(pol.phases)
+            phases["draft"] = dspec
+            raw = {k: v for k, v in pol.raw_rules.items() if k != "draft"}
+            pol = PrecisionPolicy(phases=phases, name=pol.name,
+                                  raw_rules=raw)
+        self._policy = pol
+        self._ambient = pol.as_rule()     # None for the identity policy
+
+        # -- tiered serving: partition slots into per-tier sub-engines
+        self._tiered = cfg.tiers is not None
+        if self._tiered:
+            self._build_tiers(_programs if _programs is not None else {})
+            return
+
+        # -- per-phase weight views (policy-keyed generalization of the
+        #    PR-6 drafter_params); identical specs share one view
+        views: Dict[PhaseSpec, object] = {}
+
+        def view_for(ph: str):
+            if (ph == "draft" and self._spec is not None
+                    and self._spec.draft_params is not None):
+                return self._spec.draft_params
+            spec = pol.spec_for(ph)
+            if (ph in pol.raw_rules or not spec.weights
+                    or spec.is_identity()):
+                return params
+            if spec not in views:
+                views[spec] = jax.jit(
+                    lambda p, s=spec: policy_params(p, s))(params)
+            return views[spec]
+
+        self._phase_params = {ph: view_for(ph) for ph in PHASES}
+        self._draft_params = self._phase_params["draft"]
+
+        # -- compiled step programs: one cached set per distinct policy
+        #    tier (signature) — tiers with equal policies share jits
+        key = (id(model), pol.signature(), cfg.prefill_chunk,
+               None if self._spec is None else self._spec.k)
+        progs = None if _programs is None else _programs.get(key)
+        if progs is None:
+            progs = _phase_programs(model, cfg, self._ambient, self._spec)
+            if _programs is not None:
+                _programs[key] = progs
+        self._step = progs["step"]
+        self._chunk_step = progs["chunk_step"]
+        self._packed_step = progs["packed_step"]
+        self._reset = progs["reset"]
         if self._spec is not None:
-            if cfg.engine != "continuous":
-                raise ValueError("speculative decoding requires the "
-                                 "continuous engine")
-            if cfg.temperature > 0.0:
-                raise ValueError("speculative decoding is greedy-only "
-                                 "(temperature must be 0)")
-            if self._spec.k < 1:
-                raise ValueError("spec.k must be >= 1")
-            from repro.core.placement import WholeProgram
-            from repro.core.fpi import MantissaTrunc
-            self._draft_rule = WholeProgram(fpi=MantissaTrunc(
-                bits=self._spec.drafter_bits, mode=self._spec.mode))
-            # the drafter's weight views: computed once, device-resident
-            self._draft_params = (
-                self._spec.draft_params if self._spec.draft_params
-                is not None else jax.jit(
-                    lambda p: drafter_params(p, self._spec.drafter_bits,
-                                             self._spec.mode))(params))
-        with use_rule(rule):
-            self._step = jax.jit(
-                lambda p, c, t: model.decode_step(p, c, t))
-            # the chunked-prefill step: (B, C) tokens + per-slot n_new in
-            # one dispatch (mixed prefill/decode); compiled lazily, so
-            # wave engines never pay for it
-            self._chunk_step = jax.jit(
-                lambda p, c, t, n: model.prefill_chunk(p, c, t, n))
-            # the packed-prefill step: one (ΣC,) ragged stream + per-row
-            # slot/position vectors; per-slot rows are capped at
-            # prefill_chunk (static, for the recurrent unpack rectangle)
-            self._packed_step = jax.jit(
-                lambda p, c, t, s, q, l: model.prefill_packed(
-                    p, c, t, s, q, l, cfg.prefill_chunk))
-            # donate the cache: the reset runs on the admit hot path and
-            # the caller always rebinds, so XLA may update it in place
-            # instead of copying every layer's (B, S, KV, Dh) buffers
-            self._reset = jax.jit(lambda c, m: model.reset_slots(c, m),
-                                  donate_argnums=0)
-            if self._spec is not None:
-                sc = self._spec
+            self._draft = progs["draft"]
+            self._verify = progs["verify"]
+            self._verify_packed = progs["verify_packed"]
 
-                # ONE fused dispatch drafts k greedy tokens per slot: a
-                # lax.scan of the decode cell with on-device argmax
-                # feedback, traced under the drafter rule (use_rule is
-                # thread-local and applies at trace time, so the
-                # reduced-precision fused qk/pv path is baked into this
-                # jit and only this jit). The drafter's cache writes ride
-                # the SAME pools/block tables as the target; the
-                # post-draft cache is simply discarded (JAX functional
-                # semantics = free snapshot), so verification always
-                # starts from the committed prefix.
-                def _draft_fn(p, c, t):
-                    with use_rule(self._draft_rule):
-                        def step(carry, _):
-                            cc, tok = carry
-                            logits, cc = model.decode_step(p, cc, tok)
-                            nxt = jnp.argmax(
-                                logits[:, -1, :],
-                                axis=-1).astype(jnp.int32)[:, None]
-                            return (cc, nxt), nxt[:, 0]
-                        (_, _), seq = jax.lax.scan(step, (c, t), None,
-                                                   length=sc.k)
-                    return seq.T              # (B, k)
+    # -- tiered construction -------------------------------------------------
+    def _build_tiers(self, programs: dict) -> None:
+        """Partition ``batch_slots`` (and the page pool / pack budget)
+        into one sub-engine per tier. Sub-engines share ``programs``
+        (compilation cache keyed on policy signature), the parent's
+        params, and — during generate — one wall clock, interleaved one
+        compiled step at a time."""
+        cfg = self.cfg
+        names = list(cfg.tiers)
+        slots = dict(cfg.tier_slots or {})
+        if not slots:
+            base, extra = divmod(cfg.batch_slots, len(names))
+            for i, n in enumerate(names):
+                slots[n] = base + (1 if i < extra else 0)
+        total = sum(slots.values())
+        self._programs = programs
+        self._tier_names = names
+        self._tier_slots = slots
+        self._floor_idx = (names.index(cfg.tier_floor)
+                           if cfg.tier_floor is not None else len(names) - 1)
+        self._sub: Dict[str, DecodeEngine] = {}
+        for n in names:
+            frac = slots[n] / max(total, 1)
+            sub_cfg = dataclasses.replace(
+                cfg, tiers=None, tier_slots=None, tier_floor=None,
+                batch_slots=slots[n], kv=None,
+                page_size=cfg.page_size,
+                kv_pages=(max(1, round(cfg.kv_pages * frac))
+                          if cfg.kv_pages else 0),
+                pack_tokens=(max(slots[n], round(cfg.pack_tokens * frac))
+                             if cfg.pack_tokens else 0))
+            self._sub[n] = DecodeEngine(self.model, self.params, sub_cfg,
+                                        policy=cfg.tiers[n],
+                                        _programs=programs)
 
-                self._draft = jax.jit(_draft_fn)
-                # target verify over the k+1 candidate rows — the
-                # existing chunk path's q_start/kv_len math, full
-                # precision (this jit traces under the serving rule)
-                self._verify = jax.jit(
-                    lambda p, c, tok, n, d, sp: model.spec_verify(
-                        p, c, tok, n, d, sp))
-                vcap = max(cfg.prefill_chunk, sc.k + 1)
-                self._verify_packed = jax.jit(
-                    lambda p, c, t, s, q, ri, n, d, sp:
-                        model.spec_verify_packed(p, c, t, s, q, ri, n,
-                                                 d, sp, vcap))
+    def _admit_tier(self, asked: str, backlog: Dict[str, int]) -> str:
+        """Submit-time tier assignment: walk down from the asked tier
+        while its backlog exceeds ``tier_backlog`` times its slots,
+        never past the floor."""
+        names = self._tier_names
+        i = names.index(asked)
+        if self.cfg.tier_backlog > 0:
+            while (i < self._floor_idx
+                   and backlog[names[i]] >= self.cfg.tier_backlog
+                   * self._tier_slots[names[i]]):
+                i += 1
+        return names[i]
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         logits = logits[:, -1, :]
@@ -464,35 +757,169 @@ class DecodeEngine:
                 self._pages_needed(len(e[1]), e[2])))
         return list(queue)
 
+    # -- energy accounting ---------------------------------------------------
+    def _phase_row_pj(self, phase: str) -> float:
+        """Estimated pJ one valid row costs under ``phase``'s rule: the
+        (B, 1) decode cell profiled abstractly (jaxpr walk over
+        ShapeDtypeStructs — zero device dispatches), divided by B.
+        Cached per distinct phase rule."""
+        pol = self._policy
+        key = (("raw", id(pol.raw_rules[phase]))
+               if phase in pol.raw_rules else pol.spec_for(phase))
+        if key in self._row_pj_cache:
+            return self._row_pj_cache[key]
+        from repro.core.estimators import abstract_step_energy
+        B, L = self.cfg.batch_slots, self.cfg.max_len
+        a_params = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
+            self.params)
+        a_cache = jax.eval_shape(lambda: self.model.init_cache(B, L))
+        a_toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        rep = abstract_step_energy(
+            lambda p, c, t: self.model.decode_step(p, c, t),
+            a_params, a_cache, a_toks, rule=pol.rule_for(phase))
+        val = rep.total_pj / max(B, 1)
+        self._row_pj_cache[key] = val
+        return val
+
+    def _estimate_energy(self) -> float:
+        return sum(rows * self._phase_row_pj(ph)
+                   for ph, rows in self.stats.phase_rows.items() if rows)
+
+    def _note_rows(self, phase: str, n: int) -> None:
+        pr = self.stats.phase_rows
+        pr[phase] = pr.get(phase, 0) + int(n)
+
+    # -- generate ------------------------------------------------------------
     def generate(self, prompts: List[List[int]],
-                 max_new_tokens: Union[int, Sequence[int]] = 32
+                 max_new_tokens: Union[int, Sequence[int]] = 32,
+                 tiers: Union[None, str, Sequence[str]] = None
                  ) -> List[List[int]]:
         """Serve a list of token prompts; returns completions per prompt.
         ``max_new_tokens`` is a global ceiling (int) or one budget per
-        request. ``self.stats`` holds step/occupancy/TTFT accounting."""
+        request. ``tiers`` (tiered engines only) names each request's
+        asked SLA class (a str broadcasts; default = the best tier).
+        ``self.stats`` holds step/occupancy/TTFT accounting."""
+        if self._tiered:
+            return self._generate_tiered(prompts, max_new_tokens, tiers)
+        if tiers is not None:
+            raise ValueError("tiers= requires ServeConfig.tiers")
         self.stats = ServeStats(n_requests=len(prompts))
         self._t0 = time.perf_counter()
         outputs: dict[int, List[int]] = {i: [] for i in range(len(prompts))}
         budgets = self._budgets(prompts, max_new_tokens)
         key = jax.random.key(self.cfg.seed)
-        with use_rule(self.rule):
-            # both schedulers admit the cache-truncated prompt tails, so
-            # the sjf sort key is computed on the length actually prefilled
-            queue = self._admission_order(
-                [(rid, self._prompt_tail(p, budgets[rid]), budgets[rid])
-                 for rid, p in enumerate(prompts)])
-            if self.cfg.engine == "continuous" and self.paged:
-                self._run_packed(queue, outputs, key)
-            elif self.cfg.engine == "continuous":
-                self._run_continuous(queue, outputs, key)
-            else:
-                while queue:
-                    wave = [queue.pop(0) for _ in
-                            range(min(self.cfg.batch_slots, len(queue)))]
-                    key = self._run_wave(wave, outputs, key)
+        # both schedulers admit the cache-truncated prompt tails, so
+        # the sjf sort key is computed on the length actually prefilled
+        queue = self._admission_order(
+            [(rid, self._prompt_tail(p, budgets[rid]), budgets[rid])
+             for rid, p in enumerate(prompts)])
+        for _ in self._scheduler(queue, outputs, key):
+            pass
+        self._finish_stats(outputs)
+        return [outputs[i] for i in range(len(prompts))]
+
+    def _scheduler(self, queue, outputs, key):
+        """The engine's scheduler as a generator yielding once per
+        compiled step — the unit the tiered engine round-robins."""
+        if self.cfg.engine == "continuous" and self.paged:
+            return self._run_packed(queue, outputs, key)
+        if self.cfg.engine == "continuous":
+            return self._run_continuous(queue, outputs, key)
+        return self._run_waves(queue, outputs, key)
+
+    def _finish_stats(self, outputs) -> None:
         self.stats.slot_steps = self.stats.steps * self.cfg.batch_slots
         self.stats.tokens_out = sum(len(o) for o in outputs.values())
+        self.stats.wall_s = time.perf_counter() - self._t0
+        if self.cfg.estimate_energy:
+            self.stats.est_pj = self._estimate_energy()
+
+    def _generate_tiered(self, prompts, max_new_tokens, tiers
+                         ) -> List[List[int]]:
+        names = self._tier_names
+        if tiers is None:
+            asked = [names[0]] * len(prompts)
+        elif isinstance(tiers, str):
+            asked = [tiers] * len(prompts)
+        else:
+            asked = list(tiers)
+        if len(asked) != len(prompts):
+            raise ValueError(f"{len(asked)} tier names for "
+                             f"{len(prompts)} prompts")
+        unknown = set(asked) - set(names)
+        if unknown:
+            raise ValueError(f"unknown tiers {sorted(unknown)}; "
+                             f"configured: {names}")
+        budgets = self._budgets(prompts, max_new_tokens)
+        stats = ServeStats(n_requests=len(prompts))
+        # submit-time tier assignment (downgrade under backlog pressure)
+        backlog = {n: 0 for n in names}
+        for rid, t in enumerate(asked):
+            got = self._admit_tier(t, backlog)
+            if got != t:
+                stats.downgraded += 1
+            backlog[got] += 1
+            stats.tier_of[rid] = got
+        by_tier = {n: [r for r in range(len(prompts))
+                       if stats.tier_of[r] == n] for n in names}
+        outputs: dict[int, List[int]] = {i: [] for i in range(len(prompts))}
+        t0 = time.perf_counter()
+        self._t0 = t0
+        gens = []
+        for i, n in enumerate(names):
+            sub = self._sub[n]
+            sub.stats = ServeStats(n_requests=len(by_tier[n]))
+            sub._t0 = t0
+            if not by_tier[n]:
+                continue
+            queue = sub._admission_order(
+                [(r, sub._prompt_tail(prompts[r], budgets[r]), budgets[r])
+                 for r in by_tier[n]])
+            gens.append(sub._scheduler(
+                queue, outputs, jax.random.key(self.cfg.seed + i)))
+        # round-robin: one compiled step per live tier per turn, so all
+        # tiers share the wall clock instead of running serially
+        while gens:
+            alive = []
+            for g in gens:
+                try:
+                    next(g)
+                    alive.append(g)
+                except StopIteration:
+                    pass
+            gens = alive
+        wall = time.perf_counter() - t0
+        for n in names:
+            sub = self._sub[n]
+            st = sub.stats
+            st.slot_steps = st.steps * sub.cfg.batch_slots
+            st.tokens_out = sum(len(outputs[r]) for r in by_tier[n])
+            st.wall_s = wall
+            if self.cfg.estimate_energy:
+                st.est_pj = sub._estimate_energy()
+            stats.per_tier[n] = st
+            self._merge_stats(stats, st)
+        stats.wall_s = wall
+        stats.n_requests = len(prompts)
+        self.stats = stats
         return [outputs[i] for i in range(len(prompts))]
+
+    @staticmethod
+    def _merge_stats(dst: ServeStats, src: ServeStats) -> None:
+        for f in ("steps", "active_slot_steps", "slot_steps", "tokens_out",
+                  "prefill_steps", "prefill_tokens", "pool_pages",
+                  "draft_steps", "verify_steps", "spec_windows",
+                  "draft_tokens", "accepted_tokens", "est_pj"):
+            setattr(dst, f, getattr(dst, f) + getattr(src, f))
+        dst.peak_resident_pages += src.peak_resident_pages
+        dst.peak_active_requests += src.peak_active_requests
+        dst.ttft_s.update(src.ttft_s)
+        for d_dst, d_src in ((dst.accepted_hist, src.accepted_hist),
+                             (dst.packed_widths, src.packed_widths),
+                             (dst.phase_rows, src.phase_rows)):
+            for k, v in d_src.items():
+                d_dst[k] = d_dst.get(k, 0) + v
 
     def _first_token(self, rid: int) -> None:
         """Record time-to-first-token the moment a request's first
@@ -541,6 +968,9 @@ class DecodeEngine:
             drafts = np.asarray(self._draft(self._draft_params, cache,
                                             jnp.asarray(cur_t)))
             self.stats.draft_steps += 1
+            # the fused scan computes all B slots for k cells regardless
+            # of the per-slot clamps — bill what was dispatched
+            self._note_rows("draft", n_slots * sc.k)
         return kvec, drafts
 
     def _note_window(self, s: int, acc: int, ks: int, ema) -> None:
@@ -581,7 +1011,7 @@ class DecodeEngine:
         slot's remaining prompt in ``prefill_chunk``-token blocks (mixed
         with single-token decodes for slots already past prefill), retire
         on EOS/budget and refill mid-flight while other slots keep
-        working."""
+        working. Yields once per compiled step."""
         cfg = self.cfg
         n_slots = cfg.batch_slots
         chunk = cfg.prefill_chunk
@@ -641,13 +1071,15 @@ class DecodeEngine:
                         n_new[s] = ks + 1
                         specv[s] = True
                 greedy, n_acc, cache = self._verify(
-                    self.params, cache, jnp.asarray(toks),
+                    self._phase_params["verify"], cache, jnp.asarray(toks),
                     jnp.asarray(n_new), jnp.asarray(drafts),
                     jnp.asarray(specv))
                 greedy = np.asarray(greedy)
                 n_acc = np.asarray(n_acc)
                 self.stats.steps += 1
                 self.stats.verify_steps += 1
+                self._note_rows("verify", sum(
+                    int(n_new[s]) for s in range(n_slots) if rid[s] >= 0))
                 if prefilling:
                     self.stats.prefill_steps += 1
                 for s in range(n_slots):
@@ -683,6 +1115,7 @@ class DecodeEngine:
                     else:
                         spos[s] += acc + 1
                         cur[s] = emitted[-1]
+                yield
                 continue
 
             key, sub = jax.random.split(key)
@@ -704,9 +1137,11 @@ class DecodeEngine:
                     else:
                         toks[s, 0] = cur[s]
                 logits, cache = self._chunk_step(
-                    self.params, cache, jnp.asarray(toks),
+                    self._phase_params["prefill"], cache, jnp.asarray(toks),
                     jnp.asarray(n_new))
                 self.stats.prefill_steps += 1
+                self._note_rows("prefill", sum(
+                    int(n_new[s]) for s in range(n_slots) if rid[s] >= 0))
             else:
                 # pure decode step: the cheap (B, 1) path
                 toks = np.zeros((n_slots, 1), np.int32)
@@ -714,8 +1149,10 @@ class DecodeEngine:
                 for s in range(n_slots):
                     if rid[s] >= 0:
                         toks[s, 0] = cur[s]
-                logits, cache = self._step(self.params, cache,
-                                           jnp.asarray(toks))
+                logits, cache = self._step(self._phase_params["decode"],
+                                           cache, jnp.asarray(toks))
+                self._note_rows("decode",
+                                sum(1 for r in rid if r >= 0))
             nxt = np.asarray(self._sample(logits, sub))
             self.stats.steps += 1
 
@@ -742,6 +1179,7 @@ class DecodeEngine:
                     rid[s] = -1               # retire; refill next step
                 else:
                     cur[s] = tok
+            yield
 
     # -- paged scheduler (packed ragged prefill) -----------------------------
     def _run_packed(self, queue, outputs, key):
@@ -764,6 +1202,7 @@ class DecodeEngine:
         prefilling slots up to ``prefill_chunk`` rows as the budget
         allows, and the remainder is padding (slot index B, masked
         everywhere). Pure-decode steps drop to the (B, 1) path.
+        Yields once per compiled step.
         """
         cfg = self.cfg
         n_slots = cfg.batch_slots
@@ -900,7 +1339,7 @@ class DecodeEngine:
                     rowidx[s, :rows[s]] = np.arange(
                         start[s], start[s] + rows[s])
                 greedy, n_acc, cache = self._verify_packed(
-                    self.params, cache, jnp.asarray(toks),
+                    self._phase_params["verify"], cache, jnp.asarray(toks),
                     jnp.asarray(slot_v), jnp.asarray(qpos),
                     jnp.asarray(rowidx), jnp.asarray(n_new),
                     jnp.asarray(drafts), jnp.asarray(specv))
@@ -908,6 +1347,7 @@ class DecodeEngine:
                 n_acc = np.asarray(n_acc)
                 self.stats.steps += 1
                 self.stats.verify_steps += 1
+                self._note_rows("verify", len(tok_l))
                 if prefilling:
                     self.stats.prefill_steps += 1
                 for s in range(n_slots):
@@ -957,6 +1397,7 @@ class DecodeEngine:
                 if cfg.debug_invariants and not virtual:
                     alloc.assert_invariant(
                         sum(len(p) for p in slot_pages))
+                yield
                 continue
 
             key, sub = jax.random.split(key)
@@ -995,10 +1436,12 @@ class DecodeEngine:
                 # and are masked everywhere)
                 w = self._bucket_width(cursor)
                 logits, cache = self._packed_step(
-                    self.params, cache, jnp.asarray(toks[:w]),
+                    self._phase_params["prefill"], cache,
+                    jnp.asarray(toks[:w]),
                     jnp.asarray(slot_v[:w]), jnp.asarray(qpos[:w]),
                     jnp.asarray(last))
                 self.stats.prefill_steps += 1
+                self._note_rows("prefill", cursor)
             else:
                 # pure decode step: the cheap (B, 1) path
                 toks = np.zeros((n_slots, 1), np.int32)
@@ -1006,8 +1449,10 @@ class DecodeEngine:
                     if rid[s] >= 0:
                         toks[s, 0] = cur[s]
                         rows[s] = 1
-                logits, cache = self._step(self.params, cache,
-                                           jnp.asarray(toks))
+                logits, cache = self._step(self._phase_params["decode"],
+                                           cache, jnp.asarray(toks))
+                self._note_rows("decode",
+                                sum(1 for r in rid if r >= 0))
             nxt = np.asarray(self._sample(logits, sub))
             self.stats.steps += 1
 
@@ -1037,8 +1482,16 @@ class DecodeEngine:
                     cur[s] = tok
             if cfg.debug_invariants and not virtual:
                 alloc.assert_invariant(sum(len(p) for p in slot_pages))
+            yield
 
     # -- wave scheduler (parity reference) -----------------------------------
+    def _run_waves(self, queue, outputs, key):
+        """Drive the wave scheduler wave by wave (generator form)."""
+        while queue:
+            wave = [queue.pop(0) for _ in
+                    range(min(self.cfg.batch_slots, len(queue)))]
+            key = yield from self._run_wave(wave, outputs, key)
+
     def _run_wave(self, wave, outputs, key):
         """Serve one wave of (rid, prompt, budget) requests (<= batch_slots)
         from a fresh cache.
@@ -1046,6 +1499,7 @@ class DecodeEngine:
         Streams each slot's prompt through the compiled step token by
         token (prefill), then keeps stepping to decode; a slot flips from
         prefill to decode independently once its prompt is exhausted.
+        Yields once per compiled step.
         """
         cfg = self.cfg
         n_slots = cfg.batch_slots
@@ -1061,10 +1515,12 @@ class DecodeEngine:
         pos = 0                        # step index (slots move in lockstep)
         while not all(done):
             key, sub = jax.random.split(key)
-            logits, cache = self._step(self.params, cache, jnp.asarray(cur))
+            logits, cache = self._step(self._phase_params["decode"],
+                                       cache, jnp.asarray(cur))
             nxt = np.asarray(self._sample(logits, sub))
             self.stats.steps += 1
             self.stats.active_slot_steps += sum(not d for d in done)
+            self._note_rows("decode", sum(not d for d in done))
             for s in range(len(wave)):
                 if done[s]:
                     continue
@@ -1083,6 +1539,7 @@ class DecodeEngine:
                 else:
                     cur[s, 0] = tok
             pos += 1
+            yield
             if pos >= cfg.max_len - 1:
                 break
         return key

@@ -9,7 +9,7 @@ import jax
 import pytest
 
 from repro.configs import get_arch
-from repro.core import explore_serving, pareto_points
+from repro.core import ServingTask, explore, pareto_points
 from repro.models import build_model
 from repro.serve import DecodeEngine, ServeConfig, SpecConfig
 from repro.serve.engine import PageAllocator, ServeStats
@@ -184,10 +184,12 @@ def test_explore_serving_acceptance_energy_front():
     energy monotone in bits (the static charge is affine in mantissa
     width), and the identity drafter at zero error."""
     model, params = _tiny("codeqwen1.5-7b")
-    rep = explore_serving(
-        model, params, PROMPTS, bits_grid=(2, 3, 4, 8, 24), k=3,
-        serve_cfg=dataclasses.replace(_cfg(), debug_invariants=False),
-        max_new_tokens=6)
+    rep = explore(
+        ServingTask(model, params, PROMPTS,
+                    serve_cfg=dataclasses.replace(_cfg(),
+                                                  debug_invariants=False),
+                    max_new_tokens=6, k=3, bits_grid=(2, 3, 4, 8, 24)),
+        objectives="serving")
     assert rep.n_evals == 5
     by_bits = sorted(rep.points, key=lambda p: p.payload["bits"])
     energies = [p.energy for p in by_bits]
