@@ -37,14 +37,26 @@ Reads the ``BENCH_*.json`` files emitted by ``benchmarks.run`` and fails
   engine's.
 * serve-policy: a phase/layer-heterogeneous policy from
   ``explore(objectives="serving")`` must beat the best whole-program
-  uniform drafter (lower estimated pJ/token at equal-or-better
-  acceptance — the per-site placement claim, end to end in the
-  engine), reduce pJ/token by >= ``MIN_POLICY_ENERGY_REDUCTION`` over
-  the PR-6 ``drafter_bits=10`` baseline at acceptance >=
-  ``MIN_POLICY_ACCEPTANCE``, keep every arm's greedy completions
-  byte-identical to non-policy serving (including the tiered engine's
-  exact tier), and hold p99 TTFT within
-  ``MAX_POLICY_P99_TTFT_RATIO`` x the baseline's.
+  uniform drafter (lower *measured* fused-census pJ/token, both
+  holding the ``MIN_POLICY_ACCEPTANCE`` SLA floor — the per-site
+  placement claim, end to end in the engine), reduce measured
+  pJ/token by >=
+  ``MIN_POLICY_ENERGY_REDUCTION`` over the PR-6 ``drafter_bits=10``
+  baseline at acceptance >= ``MIN_POLICY_ACCEPTANCE``, explore a
+  non-degenerate measured front (>= 2 distinct positive token-stream
+  census energies), keep every arm's greedy completions byte-identical
+  to non-policy serving (including the tiered engine's exact tier),
+  and hold p99 TTFT within ``MAX_POLICY_P99_TTFT_RATIO`` x the
+  baseline's.
+* kernels-paged: the multi-page paged-attention blocking must fill the
+  MXU tile at small page sizes (KV grid trips at ``page_size=8 x
+  pages_per_block=16`` == the ``page_size=128`` reference; paged serve
+  steps at ``page_size=8`` no worse than the wide-page layout, with
+  identical completions), the fused kernel-epilogue census must match
+  the host ``bit_census_ref`` within ``DYNAMIC_HOST_DEVICE_RTOL``, and
+  a census-collecting serve may issue at most
+  ``MAX_DYNAMIC_EXTRA_DISPATCHES`` extra compiled steps over the same
+  run with the census off while folding a nonzero measured census.
 
 On top of the absolute gates, every artifact with a **committed
 baseline** (``benchmarks/baselines/BENCH_*.json``) is compared against
@@ -55,8 +67,8 @@ fields (us, tokens/sec) are never baseline-gated — CI runners differ —
 only ratios of two same-run measurements and exact counts are. Refresh
 the baselines in the same PR as an intentional perf change:
 
-  PYTHONPATH=src python -m benchmarks.run --only explorer,serve \
-      --json-dir benchmarks/baselines
+  PYTHONPATH=src python -m benchmarks.run \
+      --only explorer,serve,kernels-paged --json-dir benchmarks/baselines
 
   python -m benchmarks.check_smoke [--json-dir .]
       [--baseline-dir benchmarks/baselines]
@@ -258,13 +270,18 @@ def check_serve_policy(path: str) -> list:
     gate = rows["serve_policy_gate"]
     if _field(gate, "hetero_beats_uniform") != "True":
         errs.append("policy-serve placement regression: no heterogeneous "
-                    "policy beat the best uniform drafter (lower pJ/token "
-                    "at equal-or-better acceptance)")
+                    "policy beat the best uniform drafter (lower measured "
+                    "pJ/token at the acceptance SLA floor)")
     red = float(_field(gate, "energy_reduction").rstrip("x"))
     if red < MIN_POLICY_ENERGY_REDUCTION:
         errs.append(f"policy-serve energy regression: {red:.3f}x < "
-                    f"{MIN_POLICY_ENERGY_REDUCTION}x estimated pJ/token "
+                    f"{MIN_POLICY_ENERGY_REDUCTION}x measured pJ/token "
                     "reduction over the uniform drafter_bits=10 baseline")
+    if _field(gate, "measured_front") != "True":
+        errs.append("policy-serve measured-front regression: the "
+                    "explored points' fused-census energies are "
+                    "degenerate (fewer than 2 distinct positive values) "
+                    "— the serving energy axis stopped measuring")
     acc = float(_field(gate, "acceptance"))
     if acc < MIN_POLICY_ACCEPTANCE:
         errs.append(f"policy-serve acceptance regression: {acc:.3f} < "
@@ -281,6 +298,43 @@ def check_serve_policy(path: str) -> list:
         errs.append(f"policy-serve p99 TTFT tail regression: "
                     f"{ratio:.2f}x > {MAX_POLICY_P99_TTFT_RATIO}x the "
                     "uniform-drafter baseline's tail")
+    return errs
+
+
+def check_kernels_paged(path: str) -> list:
+    rows = _rows(path)
+    errs = []
+    blk = rows["kernels_paged_blocking"]
+    small = int(_field(blk, "small_page_kv_steps"))
+    wide = int(_field(blk, "full_tile_kv_steps"))
+    if small > wide:
+        errs.append(f"multi-page blocking regression: page_size=8 x "
+                    f"ppb=16 takes {small} KV grid trips vs {wide} at "
+                    "page_size=128 — small pages cost grid steps again")
+    sm = int(_field(rows["kernels_paged_serve_small"], "steps"))
+    wd = int(_field(rows["kernels_paged_serve_wide"], "steps"))
+    if sm > wd:
+        errs.append(f"paged-serve blocking regression: page_size=8 "
+                    f"(ppb=8) took {sm} engine steps vs {wd} at the "
+                    "wide-page layout")
+    rel = float(_field(rows["kernels_paged_census"], "max_rel_diff"))
+    if not rel <= DYNAMIC_HOST_DEVICE_RTOL:
+        errs.append(f"fused-census host/device divergence: max rel diff "
+                    f"{rel:.3e} > {DYNAMIC_HOST_DEVICE_RTOL} vs "
+                    "bit_census_ref of the kernel output")
+    cen = rows["kernels_paged_serve_census"]
+    extra = int(_field(cen, "extra_dispatches"))
+    if extra > MAX_DYNAMIC_EXTRA_DISPATCHES:
+        errs.append(f"serving-census dispatch regression: census-on "
+                    f"serve took {extra} extra compiled steps (allowed "
+                    f"+{MAX_DYNAMIC_EXTRA_DISPATCHES})")
+    if _field(cen, "census_nonzero") != "True":
+        errs.append("serving-census regression: estimate_energy=True "
+                    "folded no measured census on a dense paged serve")
+    if _field(cen, "parity") != "True":
+        errs.append("paged-serve blocking parity regression: "
+                    "completions diverged across page_size/"
+                    "pages_per_block layouts or with the census on")
     return errs
 
 
@@ -340,13 +394,14 @@ def main() -> None:
               ("BENCH_serve-prefill.json", check_serve_prefill),
               ("BENCH_serve-paged.json", check_serve_paged),
               ("BENCH_serve-spec.json", check_serve_spec),
-              ("BENCH_serve-policy.json", check_serve_policy)]
+              ("BENCH_serve-policy.json", check_serve_policy),
+              ("BENCH_kernels-paged.json", check_kernels_paged)]
     errs = []
     for fname, fn in checks:
         path = os.path.join(args.json_dir, fname)
         if not os.path.exists(path):
             errs.append(f"missing artifact {fname} — did benchmarks.run "
-                        "--only explorer,serve succeed?")
+                        "--only explorer,serve,kernels-paged succeed?")
             continue
         errs.extend(fn(path))
         base = os.path.join(args.baseline_dir, fname)
@@ -359,7 +414,8 @@ def main() -> None:
         raise SystemExit(1)
     print("[check_smoke] OK: dispatch counts, Pareto parity, dynamic-"
           "energy host/device agreement, serve/chunked-prefill/paged "
-          "speedups and the baseline comparison within bounds")
+          "speedups, multi-page blocking + fused-census gates and the "
+          "baseline comparison within bounds")
 
 
 if __name__ == "__main__":

@@ -40,12 +40,14 @@ def main() -> None:
     args = ap.parse_args()
     filters = [f for f in (args.only or "").split(",") if f]
 
-    from benchmarks import (explorer_bench, lenet_bench, lm_precision,
-                            paper_figs, roofline_table, serve_bench)
+    from benchmarks import (explorer_bench, kernels_paged, lenet_bench,
+                            lm_precision, paper_figs, roofline_table,
+                            serve_bench)
 
     benches = [
         ("explorer_pop", explorer_bench.explorer_population),
         ("explorer-dynamic", explorer_bench.explorer_dynamic),
+        ("kernels-paged", kernels_paged.kernels_paged),
         ("serve", serve_bench.serve_throughput),
         ("serve-prefill", serve_bench.serve_prefill),
         ("serve-paged", serve_bench.serve_paged),

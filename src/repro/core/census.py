@@ -1,0 +1,93 @@
+"""Trace-time bit-census tape: the side channel that carries the fused
+kernel epilogues' per-tile censuses up to whatever jitted program is
+being traced, without threading an extra return value through every
+layer of the model stack.
+
+The serving engine opens a :func:`census_scope` around each phase
+program's trace (``serve.engine._phase_programs``); the attention /
+matmul call sites (``models/attention.py``, ``kernels/ops.py`` callers)
+:func:`note_count` the census scalar their kernel epilogue produced; the
+engine folds the tape's total into one extra int32 output of the
+*existing* compiled step — zero additional dispatches versus the static
+path.
+
+The tape is a trace-time construct, so ``lax.scan`` bodies need care:
+an entry appended inside a scan body is an inner tracer and must not be
+folded outside the scan. Such bodies shield themselves with
+:func:`collect` — run under a local nested scope, emit the folded total
+as a scan output, and the caller re-notes the summed totals to the
+enclosing tape (see ``models/prefill.py`` and the ``scan_layers``
+bodies in ``models/transformer.py``).
+
+Counts are exact int32 and match ``kernels.ref.bit_census_ref`` of the
+tensors the kernels actually stored — the measured-census parity gate in
+``benchmarks/check_smoke.py`` holds them to the host reference exactly.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+
+_tls = threading.local()
+
+
+class CensusTape:
+    """Accumulates int32 census scalars noted while its scope is open."""
+
+    __slots__ = ("entries",)
+
+    def __init__(self) -> None:
+        self.entries: list = []
+
+    def total(self) -> jnp.ndarray:
+        """Fold the noted scalars into one int32 scalar (0 if none)."""
+        tot = jnp.zeros((), jnp.int32)
+        for e in self.entries:
+            tot = tot + e
+        return tot
+
+
+@contextmanager
+def census_scope():
+    """Open a fresh tape; :func:`note_count` calls inside the block land
+    on it. Scopes nest — the innermost open tape receives the notes —
+    which is what lets a ``lax.scan`` body shield its entries from the
+    enclosing trace (see :func:`collect`)."""
+    prev = getattr(_tls, "tape", None)
+    tape = CensusTape()
+    _tls.tape = tape
+    try:
+        yield tape
+    finally:
+        _tls.tape = prev
+
+
+def census_active() -> bool:
+    """True when some census scope is open (checked at trace time, so
+    call sites can skip the census arithmetic entirely when nobody is
+    listening)."""
+    return getattr(_tls, "tape", None) is not None
+
+
+def note_count(count) -> None:
+    """Add one census scalar (int32 array or tracer) to the innermost
+    open tape; a no-op when no scope is open."""
+    tape = getattr(_tls, "tape", None)
+    if tape is not None:
+        tape.entries.append(jnp.asarray(count, jnp.int32))
+
+
+def collect(fn: Callable) -> Tuple[object, jnp.ndarray]:
+    """Run ``fn()`` under a local tape; return ``(result, total)``.
+
+    The scan-body shield: entries noted inside a ``lax.scan`` body are
+    inner tracers, so the body collects locally, threads the total out
+    as a per-iteration scan output, and the caller re-notes the folded
+    sum to the enclosing tape."""
+    with census_scope() as tape:
+        out = fn()
+        tot = tape.total()
+    return out, tot

@@ -267,6 +267,16 @@ def make_estimator(kind, prof: Optional[Profile] = None,
     return est
 
 
+def census_energy_pj(bits: int) -> float:
+    """Measured dynamic FPU energy of a serving run: the fused §III-C
+    trailing-zero census (total *active* mantissa bits over every stored
+    kernel tile) converted at the fp32 dot-op energy per full-width
+    mantissa bit. The serving analogue of ``dynamic_fpu_energy`` —
+    input-dependent where :func:`abstract_step_energy` is the
+    width-affine static bound."""
+    return float(bits) * _epi("dot", "float32") / _full_bits("float32")
+
+
 def abstract_step_energy(step_fn: Callable, *args,
                          rule=None,
                          include_transcendental: bool = True

@@ -778,13 +778,22 @@ def _serving_nsga(task: ServingTask, *, seed: int = 0
         eng.generate(task.prompts, max_new_tokens=task.max_new_tokens)
         st = eng.stats
         err = 1.0 - st.acceptance_rate
-        pj_tok = st.est_pj_per_token
+        # energy axis: the *measured* token-stream census (the fused
+        # kernel-epilogue §III-C counts — input-dependent, zero extra
+        # dispatches), falling back to the abstract width-affine
+        # estimate for families whose serving path has no censused
+        # kernels (pure-recurrent decode)
+        measured = st.measured_pj_per_token
+        pj_tok = (measured if any(st.phase_census.values())
+                  else st.est_pj_per_token)
         results[key] = (err, pj_tok, {
             "genome": key, "policy": pol.to_dict(),
             "acceptance": st.acceptance_rate,
             "tokens_per_s": st.tokens_per_s,
             "p50_ttft_s": st.p50_ttft_s, "p99_ttft_s": st.p99_ttft_s,
             "uniform": len(set(key)) == 1,
+            "measured_pj_per_token": measured,
+            "est_pj_per_token": st.est_pj_per_token,
             "mem": pj_tok, "stats": st})
         return err, pj_tok
 
@@ -792,16 +801,20 @@ def _serving_nsga(task: ServingTask, *, seed: int = 0
     # contains the whole-program solutions) plus single-site-lowered
     # variants off the mid-diagonal uniforms — generation zero already
     # contains per-(phase, site) heterogeneity near the useful part of
-    # the diagonal, not just at identity
+    # the diagonal, not just at identity. Two lowering depths: the
+    # measured energy axis prices rejection overhead, so the winning
+    # placements often shave one site *mildly* (acceptance held) rather
+    # than crater it — a delta-6 drop alone would skip that region.
     diag = sorted(set([4, 8, 12, 24]))
     seeds = [(b,) * n_genes for b in diag]
     for b in (8, 12):
         for i in range(min(n_genes, 10)):
             if has_default and i % stride == stride - 1:
                 continue          # keep the per-phase default on-diagonal
-            g = [b] * n_genes
-            g[i] = max(1, b - 6)
-            seeds.append(tuple(g))
+            for delta in (2, 6):
+                g = [b] * n_genes
+                g[i] = max(1, b - delta)
+                seeds.append(tuple(g))
 
     opt = NSGA2(n_genes=n_genes, low=1, high=24,
                 pop_size=task.pop_size, n_gen=task.n_gen,
@@ -824,7 +837,7 @@ def _serving_nsga(task: ServingTask, *, seed: int = 0
         n_evals=res.n_evals,
         baseline_fpu_pj=base_rep.fpu_pj, baseline_mem_pj=base_rep.mem_pj,
         flop_coverage=1.0, batched=False,
-        energy_estimator="serving-abstract")
+        energy_estimator="serving-census")
 
 
 def explore_serving(model, params, prompts, *,

@@ -15,12 +15,29 @@ accumulator scratch.
 shared physical pool ``(num_pages, page_size, Hkv, D)`` and each batch
 row owns a ``(max_pages,)`` block table mapping its logical prefix onto
 pool pages. The table rides as a scalar-prefetch argument
-(``pltpu.PrefetchScalarGridSpec``) so the KV BlockSpec's index map
-resolves the *physical* page per grid step — the kernel body is the
-same online-softmax loop, streaming one page per KV step, and the
-``kv_len``/``q_start`` mask contract is unchanged (logical key position
-``page_slot * page_size + offset``). Unallocated table entries are
-clamped to a valid page and masked off by ``kv_len``.
+(``pltpu.PrefetchScalarGridSpec``) so the KV BlockSpecs' index maps
+resolve the *physical* pages per grid step. One KV grid step streams
+``pages_per_block`` table entries — the kernel concatenates the
+sub-page tiles into one ``(pages_per_block * page_size, D)`` KV block,
+so small pool pages (8/16/32 rows) still fill the (8, 128) MXU tile.
+The ``kv_len``/``q_start`` mask contract is unchanged in *logical*
+coordinates (key position ``page_slot * page_size + offset``), which is
+also what masks sentinel sub-pages mid-block: an unallocated table
+entry is clamped to a valid page and its keys sit at logical positions
+``>= kv_len``, so the existing prefix mask discards them. Tables whose
+``max_pages`` is not a multiple of ``pages_per_block`` are padded with
+sentinel columns; the padded tail is masked the same way.
+
+**Census epilogue** (``collect_census=True``): the final KV step already
+holds the output tile in VMEM, so the kernel runs the §III-C
+trailing-zero bit census on the tile *as stored* (post-cast, padded
+query rows masked) and accumulates it into a (1, 1) SMEM scalar across
+the whole grid — the same accumulator channel as
+``bit_census.bit_census_pallas``. The scalar is exactly
+``bit_census_ref(<returned output>)``, which is what makes the
+measured-vs-host parity gate exact. Census accumulation is cross-program
+state, so the grid switches to all-"arbitrary" dimension semantics when
+it is on.
 
 Speculative verification (``serve.engine`` draft-and-verify) reuses this
 same ``q_start``/``kv_len`` contract unmodified: the target model scores
@@ -40,6 +57,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.bit_census import _census_block
 from repro.kernels.mantissa_trunc import _trunc_block
 from repro.kernels.runtime import default_interpret
 from repro.utils.jax_compat import CompilerParams as _CompilerParams
@@ -47,9 +65,14 @@ from repro.utils.jax_compat import CompilerParams as _CompilerParams
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, kvl_ref, qs_ref, o_ref, m_ref, l_ref,
-            acc_ref, *, scale, causal, window, kv_steps, block_q, block_k,
-            pad_k, qk_bits, pv_bits, mode):
+def _attn_step(q, k, v, kvl_ref, qs_ref, o_ref, c_ref, m_ref, l_ref,
+               acc_ref, *, scale, causal, window, kv_steps, block_q,
+               block_k, pad_k, qk_bits, pv_bits, mode, q_rows):
+    """One online-softmax KV step over an assembled (block_k, d) KV tile
+    (the paged entry concatenates ``pages_per_block`` sub-page tiles
+    before calling in here). ``c_ref`` is the optional census SMEM
+    scalar; ``q_rows`` the valid (unpadded) query-row count it masks to.
+    """
     kv_i = pl.program_id(2)
 
     @pl.when(kv_i == 0)
@@ -58,9 +81,21 @@ def _kernel(q_ref, k_ref, v_ref, kvl_ref, qs_ref, o_ref, m_ref, l_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)            # (bq, d)
-    k = k_ref[0].astype(jnp.float32)            # (bk, d)
-    v = v_ref[0].astype(jnp.float32)            # (bk, d)
+    if c_ref is not None:
+        first = ((pl.program_id(0) == 0) & (pl.program_id(1) == 0)
+                 & (kv_i == 0))
+        # hoisted: program_id is unavailable inside a pl.when body under
+        # the interpret-mode evaluator
+        census_row = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, 1), 0)
+
+        @pl.when(first)
+        def _census_init():
+            c_ref[0, 0] = jnp.int32(0)
+
+    q = q.astype(jnp.float32)                   # (bq, d)
+    k = k.astype(jnp.float32)                   # (bk, d)
+    v = v.astype(jnp.float32)                   # (bk, d)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -104,17 +139,37 @@ def _kernel(q_ref, k_ref, v_ref, kvl_ref, qs_ref, o_ref, m_ref, l_ref,
         out = acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
         if pv_bits < 24:
             out = _trunc_block(out, pv_bits, mode)   # NEAT: truncated PV
-        o_ref[0] = out.astype(o_ref.dtype)
+        stored = out.astype(o_ref.dtype)
+        o_ref[0] = stored
+        if c_ref is not None:
+            # census the tile exactly as stored; query rows the caller
+            # slices off are masked, so the accumulated scalar equals
+            # bit_census_ref(<returned output>) bit-for-bit
+            bits = _census_block(stored)
+            bits = jnp.where(census_row < q_rows, bits, 0)
+            c_ref[0, 0] += jnp.sum(bits, dtype=jnp.int32)
+
+
+def _kernel(q_ref, k_ref, v_ref, kvl_ref, qs_ref, o_ref, *rest,
+            collect_census, **kw):
+    if collect_census:
+        c_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        c_ref, (m_ref, l_ref, acc_ref) = None, rest
+    _attn_step(q_ref[0], k_ref[0], v_ref[0], kvl_ref, qs_ref, o_ref,
+               c_ref, m_ref, l_ref, acc_ref, **kw)
 
 
 @functools.partial(
     jax.jit, static_argnames=("causal", "window", "qk_bits", "pv_bits",
-                              "mode", "block_q", "block_k", "interpret"))
+                              "mode", "block_q", "block_k",
+                              "collect_census", "interpret"))
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            window: int | None = None,
                            kv_len=None, q_start=None, qk_bits: int = 24,
                            pv_bits: int = 24, mode: str = "rne",
                            block_q: int = 128, block_k: int = 128,
+                           collect_census: bool = False,
                            interpret: bool | None = None):
     """q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D). Returns (B, Hq, Tq, D).
     ``kv_len`` ((B,) int32) optionally limits row b's attention to its
@@ -123,6 +178,9 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     position ``q_start[b]`` (query i sits at ``q_start[b] + i``) instead
     of the default right alignment — the chunked-prefill contract where a
     (B, C, D) chunk attends causally against each slot's KV-cache prefix.
+    ``collect_census=True`` additionally returns the fused §III-C bit
+    census of the output (scalar int32 ==
+    ``bit_census_ref(<the returned tensor>)``) at zero extra dispatches.
     ``interpret=None`` resolves from the backend (compiled on TPU)."""
     interpret = default_interpret(interpret)
     b, hq, tq, d = q.shape
@@ -157,11 +215,22 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
           else q_start.astype(jnp.int32))
     qs3 = jnp.repeat(qs + pk, hq).reshape(b * hq, 1)
 
-    out = pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0))]
+    out_shape = [jax.ShapeDtypeStruct((b * hq, tqp, d), q.dtype)]
+    if collect_census:
+        # every program adds into the same SMEM cell -> sequential grid
+        out_specs.append(pl.BlockSpec((1, 1), lambda h, qi, ki: (0, 0),
+                                      memory_space=pltpu.SMEM))
+        out_shape.append(jax.ShapeDtypeStruct((1, 1), jnp.int32))
+        semantics = ("arbitrary", "arbitrary", "arbitrary")
+    else:
+        semantics = ("parallel", "parallel", "arbitrary")
+    res = pl.pallas_call(
         functools.partial(
             _kernel, scale=scale, causal=causal, window=window,
             kv_steps=kv_steps, block_q=block_q, block_k=block_k,
-            pad_k=pk, qk_bits=qk_bits, pv_bits=pv_bits, mode=mode),
+            pad_k=pk, qk_bits=qk_bits, pv_bits=pv_bits, mode=mode,
+            q_rows=tq, collect_census=collect_census),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
@@ -172,38 +241,54 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             pl.BlockSpec((1, 1), lambda h, qi, ki: (h, 0)),
             pl.BlockSpec((1, 1), lambda h, qi, ki: (h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda h, qi, ki: (h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * hq, tqp, d), q.dtype),
+        out_specs=out_specs if collect_census else out_specs[0],
+        out_shape=out_shape if collect_census else out_shape[0],
         scratch_shapes=[
             pltpu.VMEM((block_q, 128), jnp.float32),   # running max
             pltpu.VMEM((block_q, 128), jnp.float32),   # denominator
             pltpu.VMEM((block_q, d), jnp.float32),     # accumulator
         ],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=_CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
     )(q3, k3, v3, kvl3, qs3)
+    out, census = res if collect_census else (res, None)
     out = out.reshape(b, hq, tqp, d)[:, :, :tq]
+    if collect_census:
+        return out, census[0, 0]
     return out
 
 
-def _paged_kernel(tbl_ref, q_ref, k_ref, v_ref, kvl_ref, qs_ref, o_ref,
-                  m_ref, l_ref, acc_ref, **kw):
-    # the block table only steers the KV BlockSpec index maps; the body
-    # is the same online-softmax loop as the contiguous kernel
-    _kernel(q_ref, k_ref, v_ref, kvl_ref, qs_ref, o_ref, m_ref, l_ref,
-            acc_ref, **kw)
+def _paged_kernel(tbl_ref, q_ref, *refs, ppb, collect_census, **kw):
+    # the block table only steers the KV BlockSpecs' index maps; the
+    # body is the same online-softmax loop as the contiguous kernel,
+    # over a KV tile assembled from ``ppb`` sub-page blocks
+    k_refs, v_refs = refs[:ppb], refs[ppb:2 * ppb]
+    kvl_ref, qs_ref, o_ref = refs[2 * ppb:2 * ppb + 3]
+    rest = refs[2 * ppb + 3:]
+    if collect_census:
+        c_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        c_ref, (m_ref, l_ref, acc_ref) = None, rest
+    k = (k_refs[0][0] if ppb == 1
+         else jnp.concatenate([r[0] for r in k_refs], axis=0))
+    v = (v_refs[0][0] if ppb == 1
+         else jnp.concatenate([r[0] for r in v_refs], axis=0))
+    _attn_step(q_ref[0], k, v, kvl_ref, qs_ref, o_ref, c_ref, m_ref,
+               l_ref, acc_ref, **kw)
 
 
 @functools.partial(
     jax.jit, static_argnames=("causal", "window", "qk_bits", "pv_bits",
-                              "mode", "block_q", "interpret"))
+                              "mode", "block_q", "pages_per_block",
+                              "collect_census", "interpret"))
 def paged_flash_attention_pallas(q, k_pool, v_pool, block_tables, *,
                                  causal: bool = True,
                                  window: int | None = None,
                                  kv_len=None, q_start=None,
                                  qk_bits: int = 24, pv_bits: int = 24,
                                  mode: str = "rne", block_q: int = 128,
+                                 pages_per_block: int = 1,
+                                 collect_census: bool = False,
                                  interpret: bool | None = None):
     """Flash attention over a paged KV pool.
 
@@ -214,14 +299,24 @@ def paged_flash_attention_pallas(q, k_pool, v_pool, block_tables, *,
     contiguous kernel's contract in *logical* coordinates. Table entries
     past a row's allocation may hold any value (the canonical sentinel
     is ``num_pages``): the index map clamps them to a valid page and the
-    ``kv_len`` mask discards whatever is read. One KV grid step streams
-    one page (``block_k == page_size``), so the pool is never gathered
-    into a contiguous (B, S, ...) buffer.
+    ``kv_len`` mask discards whatever is read.
+
+    One KV grid step streams ``pages_per_block`` table entries and
+    concatenates their tiles into a ``block_k = pages_per_block *
+    page_size`` KV block, so small pool pages still fill the MXU tile;
+    the pool is never gathered into a contiguous (B, S, ...) buffer.
+    Sentinel entries *inside* a block need no special casing — their
+    keys land at logical positions ``>= kv_len`` and the prefix mask
+    already discards them. ``collect_census=True`` additionally returns
+    the fused bit census of the output (scalar int32 ==
+    ``bit_census_ref(<the returned tensor>)``).
     """
     interpret = default_interpret(interpret)
     b, hq, tq, d = q.shape
     num_pages, page_size, hkv, _ = k_pool.shape
     max_pages = block_tables.shape[1]
+    ppb = int(pages_per_block)
+    assert ppb >= 1, pages_per_block
     assert hq % hkv == 0
     group = hq // hkv
     scale = 1.0 / (d ** 0.5)
@@ -236,6 +331,10 @@ def paged_flash_attention_pallas(q, k_pool, v_pool, block_tables, *,
                                               page_size, d)
     v3 = v_pool.transpose(0, 2, 1, 3).reshape(num_pages * hkv,
                                               page_size, d)
+    # logical length keeps the ORIGINAL table width: sentinel columns
+    # added below to round max_pages up to a pages_per_block multiple
+    # sit at logical positions >= logical and are masked like any
+    # unallocated entry
     logical = max_pages * page_size
     kvl = (jnp.full((b,), logical, jnp.int32) if kv_len is None
            else kv_len.astype(jnp.int32))
@@ -243,41 +342,69 @@ def paged_flash_attention_pallas(q, k_pool, v_pool, block_tables, *,
     qs = (jnp.full((b,), logical - tq, jnp.int32) if q_start is None
           else q_start.astype(jnp.int32))
     qs3 = jnp.repeat(qs, hq).reshape(b * hq, 1)
-    tbl = jnp.clip(block_tables.astype(jnp.int32), 0, num_pages - 1)
+    tbl = block_tables.astype(jnp.int32)
+    pad_pages = (-max_pages) % ppb
+    if pad_pages:
+        tbl = jnp.pad(tbl, ((0, 0), (0, pad_pages)),
+                      constant_values=num_pages)
+    tbl = jnp.clip(tbl, 0, num_pages - 1)
+    kv_steps = (max_pages + pad_pages) // ppb
+    block_k = ppb * page_size
 
-    grid = (b * hq, tqp // block_q, max_pages)
+    grid = (b * hq, tqp // block_q, kv_steps)
 
-    def kv_map(h, qi, ki, tbl_ref, g=group, nh=hq, u=hkv):
-        return (tbl_ref[h // nh, ki] * u + (h % nh) // g, 0, 0)
+    def kv_map(j):
+        def m(h, qi, ki, tbl_ref, j=j, g=group, nh=hq, u=hkv, p=ppb):
+            return (tbl_ref[h // nh, ki * p + j] * u + (h % nh) // g, 0, 0)
+        return m
+
+    in_specs = [pl.BlockSpec((1, block_q, d),
+                             lambda h, qi, ki, tbl_ref: (h, qi, 0))]
+    in_specs += [pl.BlockSpec((1, page_size, d), kv_map(j))
+                 for j in range(ppb)]                            # K pages
+    in_specs += [pl.BlockSpec((1, page_size, d), kv_map(j))
+                 for j in range(ppb)]                            # V pages
+    in_specs += [
+        pl.BlockSpec((1, 1), lambda h, qi, ki, tbl_ref: (h, 0)),
+        pl.BlockSpec((1, 1), lambda h, qi, ki, tbl_ref: (h, 0)),
+    ]
+    out_specs = [pl.BlockSpec((1, block_q, d),
+                              lambda h, qi, ki, tbl_ref: (h, qi, 0))]
+    out_shape = [jax.ShapeDtypeStruct((b * hq, tqp, d), q.dtype)]
+    if collect_census:
+        out_specs.append(
+            pl.BlockSpec((1, 1), lambda h, qi, ki, tbl_ref: (0, 0),
+                         memory_space=pltpu.SMEM))
+        out_shape.append(jax.ShapeDtypeStruct((1, 1), jnp.int32))
+        semantics = ("arbitrary", "arbitrary", "arbitrary")
+    else:
+        semantics = ("parallel", "parallel", "arbitrary")
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, d),
-                         lambda h, qi, ki, tbl_ref: (h, qi, 0)),
-            pl.BlockSpec((1, page_size, d), kv_map),
-            pl.BlockSpec((1, page_size, d), kv_map),
-            pl.BlockSpec((1, 1), lambda h, qi, ki, tbl_ref: (h, 0)),
-            pl.BlockSpec((1, 1), lambda h, qi, ki, tbl_ref: (h, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, d),
-                               lambda h, qi, ki, tbl_ref: (h, qi, 0)),
+        in_specs=in_specs,
+        out_specs=out_specs if collect_census else out_specs[0],
         scratch_shapes=[
             pltpu.VMEM((block_q, 128), jnp.float32),   # running max
             pltpu.VMEM((block_q, 128), jnp.float32),   # denominator
             pltpu.VMEM((block_q, d), jnp.float32),     # accumulator
         ],
     )
-    out = pl.pallas_call(
+    res = pl.pallas_call(
         functools.partial(
-            _paged_kernel, scale=scale, causal=causal, window=window,
-            kv_steps=max_pages, block_q=block_q, block_k=page_size,
-            pad_k=0, qk_bits=qk_bits, pv_bits=pv_bits, mode=mode),
+            _paged_kernel, ppb=ppb, collect_census=collect_census,
+            scale=scale, causal=causal, window=window,
+            kv_steps=kv_steps, block_q=block_q, block_k=block_k,
+            pad_k=0, qk_bits=qk_bits, pv_bits=pv_bits, mode=mode,
+            q_rows=tq),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b * hq, tqp, d), q.dtype),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        out_shape=out_shape if collect_census else out_shape[0],
+        compiler_params=_CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
-    )(tbl, q3, k3, v3, kvl3, qs3)
-    return out.reshape(b, hq, tqp, d)[:, :, :tq]
+    )(tbl, q3, *([k3] * ppb), *([v3] * ppb), kvl3, qs3)
+    out, census = res if collect_census else (res, None)
+    out = out.reshape(b, hq, tqp, d)[:, :, :tq]
+    if collect_census:
+        return out, census[0, 0]
+    return out

@@ -50,12 +50,19 @@ def mantissa_trunc(x: jnp.ndarray, bits: int, mode: str = "rne",
 
 def quant_matmul(a: jnp.ndarray, b: jnp.ndarray, *, a_bits: int = 24,
                  b_bits: int = 24, out_bits: int = 24, mode: str = "rne",
-                 backend: str = "auto") -> jnp.ndarray:
+                 collect_census: bool = False, backend: str = "auto"):
+    """``collect_census=True`` returns ``(out, census)`` where ``census``
+    is the fused §III-C bit census of ``out`` (scalar int32, exactly
+    ``ref.bit_census_ref(out)`` on every backend)."""
     be = _resolve(backend)
     if be == "ref":
-        return _ref.quant_matmul_ref(a, b, a_bits, b_bits, out_bits, mode)
+        out = _ref.quant_matmul_ref(a, b, a_bits, b_bits, out_bits, mode)
+        if collect_census:
+            return out, _ref.bit_census_ref(out)
+        return out
     return quant_matmul_pallas(a, b, a_bits=a_bits, b_bits=b_bits,
                                out_bits=out_bits, mode=mode,
+                               collect_census=collect_census,
                                interpret=_interp(be))
 
 
@@ -64,24 +71,30 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     kv_len: jnp.ndarray | None = None,
                     q_start: jnp.ndarray | None = None, qk_bits: int = 24,
                     pv_bits: int = 24, mode: str = "rne",
-                    backend: str = "auto"):
+                    collect_census: bool = False, backend: str = "auto"):
     """``kv_len`` ((B,) int32, optional) masks each batch row to its first
     ``kv_len[b]`` keys — the ragged-slot prefix mask for continuous
     batching (rows must not query beyond their own valid prefix).
     ``q_start`` ((B,) int32, optional) places row b's queries at absolute
     key positions ``q_start[b] + i`` — the chunked-prefill layout where a
     (B, C, D) query chunk attends causally against each slot's KV-cache
-    prefix (pair it with ``kv_len = q_start + n_new``)."""
+    prefix (pair it with ``kv_len = q_start + n_new``).
+    ``collect_census=True`` returns ``(out, census)`` with the fused bit
+    census of ``out`` (== ``ref.bit_census_ref(out)`` exactly)."""
     be = _resolve(backend)
     if be == "ref":
-        return _ref.flash_attention_ref(q, k, v, causal=causal,
-                                        window=window, kv_len=kv_len,
-                                        q_start=q_start, qk_bits=qk_bits,
-                                        pv_bits=pv_bits, mode=mode)
+        out = _ref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window, kv_len=kv_len,
+                                       q_start=q_start, qk_bits=qk_bits,
+                                       pv_bits=pv_bits, mode=mode)
+        if collect_census:
+            return out, _ref.bit_census_ref(out)
+        return out
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   kv_len=kv_len, q_start=q_start,
                                   qk_bits=qk_bits, pv_bits=pv_bits,
-                                  mode=mode, interpret=_interp(be))
+                                  mode=mode, collect_census=collect_census,
+                                  interpret=_interp(be))
 
 
 def paged_flash_attention(q, k_pool, v_pool, block_tables, *,
@@ -89,25 +102,58 @@ def paged_flash_attention(q, k_pool, v_pool, block_tables, *,
                           kv_len: jnp.ndarray | None = None,
                           q_start: jnp.ndarray | None = None,
                           qk_bits: int = 24, pv_bits: int = 24,
-                          mode: str = "rne", backend: str = "auto"):
+                          mode: str = "rne", pages_per_block: int = 1,
+                          block_k: int | None = None,
+                          collect_census: bool = False,
+                          backend: str = "auto"):
     """Flash attention over a paged KV pool: ``k_pool``/``v_pool`` are
     ``(num_pages, page_size, Hkv, D)`` and ``block_tables`` ((B,
     max_pages) int32) maps each row's logical prefix onto physical
     pages. ``kv_len``/``q_start`` keep the contiguous entry's contract
     in logical coordinates. On the Pallas path the table rides as a
-    scalar-prefetch argument so one KV grid step streams one page; the
-    ref path gathers the logical prefix and reuses the contiguous
-    oracle."""
+    scalar-prefetch argument and one KV grid step streams
+    ``pages_per_block`` pages as a single ``pages_per_block * page_size``
+    KV block; the ref path gathers the logical prefix and reuses the
+    contiguous oracle. ``block_k``, if given, must be an exact page
+    multiple consistent with ``pages_per_block`` — mismatches are a hard
+    error (the old path silently clamped to one page), and a lone
+    ``block_k`` is routed to ``pages_per_block = block_k / page_size``.
+    ``collect_census=True`` returns ``(out, census)`` with the fused bit
+    census of ``out``."""
+    page_size = k_pool.shape[1]
+    if pages_per_block < 1:
+        raise ValueError(
+            f"pages_per_block must be >= 1, got {pages_per_block}")
+    if block_k is not None:
+        if block_k < page_size or block_k % page_size:
+            raise ValueError(
+                f"block_k={block_k} is not a positive multiple of "
+                f"page_size={page_size}: the paged kernel streams whole "
+                f"pool pages, so block_k must equal pages_per_block * "
+                f"page_size (e.g. pages_per_block="
+                f"{max(1, block_k // page_size)})")
+        if pages_per_block != 1 and block_k != pages_per_block * page_size:
+            raise ValueError(
+                f"block_k={block_k} conflicts with pages_per_block="
+                f"{pages_per_block} at page_size={page_size}: block_k "
+                f"must equal pages_per_block * page_size = "
+                f"{pages_per_block * page_size}. Pass only one of the "
+                f"two knobs, or make them agree")
+        pages_per_block = block_k // page_size
     be = _resolve(backend)
     if be == "ref":
-        return _ref.paged_flash_attention_ref(
+        out = _ref.paged_flash_attention_ref(
             q, k_pool, v_pool, block_tables, causal=causal, window=window,
             kv_len=kv_len, q_start=q_start, qk_bits=qk_bits,
-            pv_bits=pv_bits, mode=mode)
+            pv_bits=pv_bits, mode=mode, pages_per_block=pages_per_block)
+        if collect_census:
+            return out, _ref.bit_census_ref(out)
+        return out
     return paged_flash_attention_pallas(
         q, k_pool, v_pool, block_tables, causal=causal, window=window,
         kv_len=kv_len, q_start=q_start, qk_bits=qk_bits, pv_bits=pv_bits,
-        mode=mode, interpret=_interp(be))
+        mode=mode, pages_per_block=pages_per_block,
+        collect_census=collect_census, interpret=_interp(be))
 
 
 def bit_census(x: jnp.ndarray, *, backend: str = "auto") -> jnp.ndarray:

@@ -10,6 +10,14 @@ traffic.
 
 Tiling: (block_m x block_k) @ (block_k x block_n) with a K-innermost grid
 and an fp32 VMEM accumulator; MXU-aligned blocks (multiples of 128).
+
+``collect_census=True`` reuses the final K step — the output tile is
+already in VMEM — to run the §III-C trailing-zero bit census on the
+tile as stored (padding rows/cols masked) and accumulate it into a
+(1, 1) SMEM scalar across the grid, exactly
+``bit_census_ref(<the returned M x N output>)`` at zero extra
+dispatches. The grid goes all-"arbitrary" when census is on (the SMEM
+cell is cross-program state).
 """
 from __future__ import annotations
 
@@ -20,16 +28,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.bit_census import _census_block
 from repro.kernels.mantissa_trunc import _trunc_block
 from repro.kernels.runtime import default_interpret
 from repro.utils.jax_compat import CompilerParams as _CompilerParams
 
 
-def _kernel(a_ref, b_ref, o_ref, acc_ref, *, a_bits, b_bits, out_bits,
-            mode, k_steps):
+def _kernel(a_ref, b_ref, o_ref, *rest, a_bits, b_bits, out_bits,
+            mode, k_steps, block_m, block_n, m_valid, n_valid,
+            collect_census):
+    if collect_census:
+        c_ref, acc_ref = rest
+    else:
+        c_ref, (acc_ref,) = None, rest
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if c_ref is not None:
+        first = ((pl.program_id(0) == 0) & (pl.program_id(1) == 0)
+                 & (pl.program_id(2) == 0))
+        # hoisted: program_id is unavailable inside a pl.when body under
+        # the interpret-mode evaluator
+        row = pl.program_id(0) * block_m + jax.lax.broadcasted_iota(
+            jnp.int32, (block_m, 1), 0)
+        col = pl.program_id(1) * block_n + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_n), 1)
+        census_mask = (row < m_valid) & (col < n_valid)
+
+        @pl.when(first)
+        def _census_init():
+            c_ref[0, 0] = jnp.int32(0)
 
     a = _trunc_block(a_ref[...], a_bits, mode)   # VMEM-resident truncation
     b = _trunc_block(b_ref[...], b_bits, mode)
@@ -39,21 +69,32 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, a_bits, b_bits, out_bits,
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _done():
         out = _trunc_block(acc_ref[...], out_bits, mode)
-        o_ref[...] = out.astype(o_ref.dtype)
+        stored = out.astype(o_ref.dtype)
+        o_ref[...] = stored
+        if c_ref is not None:
+            # census the stored tile; rows/cols past the unpadded (M, N)
+            # are sliced off by the caller and masked here, so the
+            # scalar equals bit_census_ref(<returned output>)
+            bits = _census_block(stored)
+            bits = jnp.where(census_mask, bits, 0)
+            c_ref[0, 0] += jnp.sum(bits, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("a_bits", "b_bits", "out_bits", "mode",
                                     "block_m", "block_n", "block_k",
-                                    "interpret"))
+                                    "collect_census", "interpret"))
 def quant_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
                         a_bits: int = 24, b_bits: int = 24,
                         out_bits: int = 24, mode: str = "rne",
                         block_m: int = 128, block_n: int = 128,
                         block_k: int = 128,
-                        interpret: bool | None = None) -> jnp.ndarray:
+                        collect_census: bool = False,
+                        interpret: bool | None = None):
     """(M, K) @ (K, N) with NEAT truncation fused into the MXU pipeline.
-    ``interpret=None`` resolves from the backend (compiled on TPU)."""
+    ``collect_census=True`` additionally returns the fused bit census of
+    the output (scalar int32). ``interpret=None`` resolves from the
+    backend (compiled on TPU)."""
     interpret = default_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
@@ -73,19 +114,32 @@ def quant_matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
     k_steps = kp // block_k
     grid = (mp // block_m, np_ // block_n, k_steps)
 
-    out = pl.pallas_call(
+    out_specs = [pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))]
+    out_shape = [jax.ShapeDtypeStruct((mp, np_), a.dtype)]
+    if collect_census:
+        out_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0),
+                                      memory_space=pltpu.SMEM))
+        out_shape.append(jax.ShapeDtypeStruct((1, 1), jnp.int32))
+        semantics = ("arbitrary", "arbitrary", "arbitrary")
+    else:
+        semantics = ("parallel", "parallel", "arbitrary")
+    res = pl.pallas_call(
         functools.partial(_kernel, a_bits=a_bits, b_bits=b_bits,
-                          out_bits=out_bits, mode=mode, k_steps=k_steps),
+                          out_bits=out_bits, mode=mode, k_steps=k_steps,
+                          block_m=block_m, block_n=block_n, m_valid=m,
+                          n_valid=n, collect_census=collect_census),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
         ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        out_specs=out_specs if collect_census else out_specs[0],
+        out_shape=out_shape if collect_census else out_shape[0],
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=_CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
     )(ap, bp)
+    out, census = res if collect_census else (res, None)
+    if collect_census:
+        return out[:m, :n], census[0, 0]
     return out[:m, :n]

@@ -113,13 +113,21 @@ def paged_flash_attention_ref(q, k_pool, v_pool, block_tables, *,
                               kv_len: jnp.ndarray | None = None,
                               q_start: jnp.ndarray | None = None,
                               qk_bits: int = 24, pv_bits: int = 24,
-                              mode: str = "rne") -> jnp.ndarray:
+                              mode: str = "rne",
+                              pages_per_block: int = 1) -> jnp.ndarray:
     """Oracle for kernels.paged_flash_attention: gather the logical
     K/V prefix per row, then run the contiguous oracle with the same
     ``kv_len``/``q_start`` mask contract.
 
     q: (B, Hq, Tq, D); k_pool/v_pool: (num_pages, page_size, Hkv, D);
-    block_tables: (B, max_pages) int32."""
+    block_tables: (B, max_pages) int32. ``pages_per_block`` is the
+    kernel's KV-block grouping knob; the gathered oracle is blocking-
+    agnostic (attention in logical coordinates does not depend on how
+    physical pages are tiled), so it is validated and otherwise inert —
+    which is exactly the invariant the kernel sweep tests pin down."""
+    if int(pages_per_block) < 1:
+        raise ValueError(
+            f"pages_per_block must be >= 1, got {pages_per_block}")
     kk = gather_pages(k_pool, block_tables)   # (B, S_log, Hkv, D)
     vv = gather_pages(v_pool, block_tables)
     return flash_attention_ref(q, kk.transpose(0, 2, 1, 3),

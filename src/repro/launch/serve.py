@@ -30,7 +30,8 @@ import jax
 from repro.configs import get_arch, list_archs
 from repro.core.policy import PrecisionPolicy
 from repro.models import build_model
-from repro.serve.engine import DecodeEngine, ServeConfig, SpecConfig
+from repro.serve.engine import (DecodeEngine, KVConfig, ServeConfig,
+                                SpecConfig)
 
 
 def _parse_policy(spec: str) -> PrecisionPolicy:
@@ -92,6 +93,12 @@ def main() -> None:
     ap.add_argument("--pack-tokens", type=int, default=0,
                     help="packed prefill stream width per step (0 "
                          "derives slots * chunk)")
+    ap.add_argument("--pages-per-block", type=int, default=1,
+                    help="block-table entries the paged flash kernel "
+                         "streams per KV grid step (block_k = "
+                         "pages-per-block * page-size; fills the MXU "
+                         "tile at small page sizes; requires "
+                         "--page-size > 0)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: draft tokens per slot "
                          "per step (0 = off); the drafter is the model "
@@ -146,9 +153,11 @@ def main() -> None:
                                       engine=args.engine,
                                       admission=args.admission,
                                       prefill_chunk=args.chunk,
-                                      page_size=args.page_size,
-                                      kv_pages=args.kv_pages,
-                                      pack_tokens=args.pack_tokens,
+                                      kv=KVConfig(
+                                          page_size=args.page_size,
+                                          pages=args.kv_pages,
+                                          pack_tokens=args.pack_tokens,
+                                          pages_per_block=args.pages_per_block),
                                       spec=spec, tiers=tiers,
                                       tier_floor=args.tier_floor,
                                       tier_backlog=args.tier_backlog,
@@ -172,13 +181,16 @@ def main() -> None:
     if args.estimate_energy:
         print(f"[serve] energy: {st.est_pj_per_token:.0f} pJ/token "
               f"(phase_rows={dict(sorted(st.phase_rows.items()))})")
+        print(f"[serve] measured: {st.measured_pj_per_token:.0f} pJ/token "
+              f"(phase_census={dict(sorted(st.phase_census.items()))})")
     if tiers:
         for name, ts in st.per_tier.items():
             print(f"[serve] tier {name}: tokens/s={ts.tokens_per_s:.1f} "
                   f"acceptance={ts.acceptance_rate:.3f} "
                   f"p50_ttft={ts.p50_ttft_s * 1e3:.1f}ms "
                   f"p99_ttft={ts.p99_ttft_s * 1e3:.1f}ms "
-                  f"est_pJ/tok={ts.est_pj_per_token:.0f}")
+                  f"est_pJ/tok={ts.est_pj_per_token:.0f} "
+                  f"measured_pJ/tok={ts.measured_pj_per_token:.0f}")
         print(f"[serve] downgraded={st.downgraded}")
     if args.page_size:
         print(f"[serve] paged: pool={st.pool_pages} pages "

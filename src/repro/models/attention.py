@@ -8,6 +8,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import census as _census
 from repro.core.quantize import quantize_here
 from repro.core.scope import pscope
 from repro.kernels import ops as kops
@@ -15,6 +16,25 @@ from repro.models.config import ModelConfig
 from repro.models.layers import init_linear, init_norm, linear, norm, rotary
 
 NEG_INF = -1e30
+
+
+def _noted(res, collect: bool):
+    """Unpack a kernel result that may carry a fused census scalar and
+    hand the scalar to the open census tape (``core.census``)."""
+    if collect:
+        out, count = res
+        _census.note_count(count)
+        return out
+    return res
+
+
+def _note_host_census(out) -> None:
+    """Census fallback for paths with no kernel epilogue (the jnp scan,
+    the decode einsum): the host oracle over the same stored output —
+    identical contract, ``bit_census_ref(<returned tensor>)``."""
+    if _census.census_active():
+        from repro.kernels.ref import bit_census_ref
+        _census.note_count(bit_census_ref(out))
 
 
 def _sdpa_scan(q, k, v, *, causal: bool, window, block_q: int, kv_len=None,
@@ -90,20 +110,23 @@ def _sdpa(q, k, v, cfg: ModelConfig, *, causal: bool, kv_len=None,
           mode: str = "rne"):
     backend = cfg.kernel_backend
     bits = dict(qk_bits=qk_bits, pv_bits=pv_bits, mode=mode)
+    collect = _census.census_active()
     if backend in ("pallas", "interpret"):
-        return kops.flash_attention(q, k, v, causal=causal,
-                                    window=cfg.sliding_window,
-                                    kv_len=kv_len, q_start=q_start,
-                                    backend=backend, **bits)
+        return _noted(kops.flash_attention(
+            q, k, v, causal=causal, window=cfg.sliding_window,
+            kv_len=kv_len, q_start=q_start, backend=backend,
+            collect_census=collect, **bits), collect)
     tq, tk = q.shape[2], k.shape[2]
     if max(tq, tk) <= 2 * cfg.attn_block_q:
-        return kops.flash_attention(q, k, v, causal=causal,
-                                    window=cfg.sliding_window,
-                                    kv_len=kv_len, q_start=q_start,
-                                    backend="ref", **bits)
-    return _sdpa_scan(q, k, v, causal=causal, window=cfg.sliding_window,
-                      block_q=cfg.attn_block_q, kv_len=kv_len,
-                      q_start=q_start, **bits)
+        return _noted(kops.flash_attention(
+            q, k, v, causal=causal, window=cfg.sliding_window,
+            kv_len=kv_len, q_start=q_start, backend="ref",
+            collect_census=collect, **bits), collect)
+    out = _sdpa_scan(q, k, v, causal=causal, window=cfg.sliding_window,
+                     block_q=cfg.attn_block_q, kv_len=kv_len,
+                     q_start=q_start, **bits)
+    _note_host_census(out)
+    return out
 
 
 def init_attention(key, cfg: ModelConfig):
@@ -349,6 +372,7 @@ def decode_attention(p, x, cfg: ModelConfig, layer_cache, pos,
             w = jax.nn.softmax(scores, axis=-1)
             out = jnp.einsum("bkgs,bskd->bkgd", w, vv.astype(jnp.float32))
             out = quantize_here(out, "dot").astype(x.dtype)
+            _note_host_census(out)
         out = out.reshape(b, 1, h * dh)
         with pscope("out_proj"):
             y = linear(p["wo"], out)
@@ -441,10 +465,13 @@ def _sdpa_paged(q, k_pool, v_pool, tables, cfg: ModelConfig, *, kv_len,
     backend = cfg.kernel_backend
     bits = dict(qk_bits=qk_bits, pv_bits=pv_bits, mode=mode)
     if backend in ("pallas", "interpret"):
-        return kops.paged_flash_attention(
+        collect = _census.census_active()
+        return _noted(kops.paged_flash_attention(
             q, k_pool, v_pool, tables, causal=True,
             window=cfg.sliding_window, kv_len=kv_len, q_start=q_start,
-            backend=backend, **bits)
+            pages_per_block=cfg.pages_per_block, backend=backend,
+            collect_census=collect, **bits), collect)
+    # the gather fallback delegates to _sdpa, which notes the census
     from repro.kernels.ref import gather_pages
     kk = gather_pages(k_pool, tables).transpose(0, 2, 1, 3)
     vv = gather_pages(v_pool, tables).transpose(0, 2, 1, 3)

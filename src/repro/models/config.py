@@ -50,6 +50,10 @@ class ModelConfig:
 
     # NEAT / kernels integration
     kernel_backend: str = "auto"    # auto | pallas | interpret | ref
+    # paged flash: table entries streamed per KV grid step (block_k =
+    # pages_per_block * page_size) — lets small pool pages fill the MXU
+    # tile; serving validates it against the pool geometry (KVConfig)
+    pages_per_block: int = 1
 
     # distribution / memory policy
     remat: bool = False             # per-layer activation checkpointing

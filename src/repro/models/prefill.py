@@ -22,6 +22,8 @@ from typing import Callable, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import census as _census
+
 
 def broadcast_n_new(n_new, batch: int) -> jnp.ndarray:
     """Normalize a per-slot valid-token count to (B,) int32 (a scalar
@@ -155,10 +157,19 @@ def spec_scan_verify(decode_step: Callable, params, cache,
     nxt = jnp.concatenate(
         [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
 
+    # census-tape shield: notes inside the scan body are inner tracers,
+    # so the body collects locally and threads the per-column total out
+    # as a scan output (see core.census.collect)
+    active = _census.census_active()
+
     def step(carry, xs):
         cc, alive = carry
         tok, ntok, col = xs                      # (B,), (B,), scalar
-        logits, new_cache = decode_step(params, cc, tok[:, None])
+        if active:
+            (logits, new_cache), cnt = _census.collect(
+                lambda: decode_step(params, cc, tok[:, None]))
+        else:
+            logits, new_cache = decode_step(params, cc, tok[:, None])
         keep = alive & (col < n_new)
         merged = merge_slotwise(new_cache, cc, keep)
         g = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
@@ -166,11 +177,15 @@ def spec_scan_verify(decode_step: Callable, params, cache,
         # next token (the following draft) is the cell's own prediction
         alive = jnp.where(spec, keep & (ntok.astype(jnp.int32) == g),
                           True)
-        return (merged, alive), logits[:, -1]
+        y = logits[:, -1]
+        return (merged, alive), ((y, cnt) if active else y)
 
     (cache, _), seq = jax.lax.scan(
         step, (cache, jnp.ones((b,), bool)),
         (tokens.T, nxt.T, jnp.arange(c, dtype=jnp.int32)))
+    if active:
+        seq, counts = seq
+        _census.note_count(jnp.sum(counts, dtype=jnp.int32))
     logits = seq.transpose(1, 0, 2)              # (B, C, V)
     greedy, n_acc, _ = spec_acceptance(logits, draft, n_new, spec)
     return greedy, n_acc, cache
@@ -209,14 +224,25 @@ def masked_scan_prefill(decode_step: Callable, params, cache,
     b, c = tokens.shape
     n_new = broadcast_n_new(n_new, b)
 
+    # census-tape shield: see spec_scan_verify
+    active = _census.census_active()
+
     def step(carry, xs):
         tok, col = xs                               # (B,), scalar
-        logits, new_cache = decode_step(params, carry, tok[:, None])
+        if active:
+            (logits, new_cache), cnt = _census.collect(
+                lambda: decode_step(params, carry, tok[:, None]))
+        else:
+            logits, new_cache = decode_step(params, carry, tok[:, None])
         merged = merge_slotwise(new_cache, carry, col < n_new)
-        return merged, logits[:, 0]                 # (B, V)
+        y = logits[:, 0]                            # (B, V)
+        return merged, ((y, cnt) if active else y)
 
     cache, seq = jax.lax.scan(
         step, cache, (tokens.T, jnp.arange(c, dtype=jnp.int32)))
+    if active:
+        seq, counts = seq
+        _census.note_count(jnp.sum(counts, dtype=jnp.int32))
     return gather_last_logits(seq.transpose(1, 0, 2), n_new), cache
 
 

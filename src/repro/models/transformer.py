@@ -10,6 +10,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import census as _census
 from repro.core.scope import pscope, tag_phase
 from repro.sharding.specs import shard_activations
 from repro.models import attention as attn_mod
@@ -195,6 +196,28 @@ def _prefill_block(layer, lc, x, pos, n_new, cfg: ModelConfig, i: int,
     return x, new_lc
 
 
+def _scan_blocks(block, x, layers, caches):
+    """``lax.scan`` over stacked layers, shielding the census tape:
+    notes inside a scan body are inner tracers, so each iteration
+    collects locally and threads its count out as a scan output; the
+    fold is re-noted on the caller's tape (see ``core.census``).
+    ``block(layer, lc, y) -> (y, new_lc)``."""
+    active = _census.census_active()
+
+    def body(y, xs):
+        layer, lc = xs
+        if active:
+            (y2, new_lc), cnt = _census.collect(lambda: block(layer, lc, y))
+            return y2, (new_lc, cnt)
+        return block(layer, lc, y)
+
+    x, ys = jax.lax.scan(body, x, (layers, caches))
+    if active:
+        ys, counts = ys
+        _census.note_count(jnp.sum(counts, dtype=jnp.int32))
+    return x, ys
+
+
 def _chunk_logits(params, cache, tokens, n_new, cfg: ModelConfig,
                   moe_impl: str):
     """Shared (B, C)-chunk trunk: run the chunk through every layer's
@@ -206,13 +229,10 @@ def _chunk_logits(params, cache, tokens, n_new, cfg: ModelConfig,
     with pscope("model"):
         x = embedding(params["embed"], tokens, cfg.compute_dtype)
         if cfg.scan_layers:
-            def body(y, xs):
-                layer, lc = xs
-                y, new_lc = _prefill_block(layer, lc, y, pos, n_new, cfg,
-                                           0, moe_impl)
-                return y, new_lc
-            x, new_layers = jax.lax.scan(
-                body, x, (params["layers"], cache["layers"]))
+            x, new_layers = _scan_blocks(
+                lambda layer, lc, y: _prefill_block(
+                    layer, lc, y, pos, n_new, cfg, 0, moe_impl),
+                x, params["layers"], cache["layers"])
         else:
             new_layers = []
             for i, layer in enumerate(params["layers"]):
@@ -298,13 +318,10 @@ def _packed_logits(params, cache, tokens, slot, qpos, cfg: ModelConfig,
     with pscope("model"):
         x = embedding(params["embed"], tokens[None], cfg.compute_dtype)
         if cfg.scan_layers:
-            def body(y, xs):
-                layer, lc = xs
-                y, new_lc = _packed_block(layer, lc, y, bt, slot, qpos,
-                                          cfg, 0, moe_impl)
-                return y, new_lc
-            x, new_layers = jax.lax.scan(
-                body, x, (params["layers"], cache["layers"]))
+            x, new_layers = _scan_blocks(
+                lambda layer, lc, y: _packed_block(
+                    layer, lc, y, bt, slot, qpos, cfg, 0, moe_impl),
+                x, params["layers"], cache["layers"])
         else:
             new_layers = []
             for i, layer in enumerate(params["layers"]):
@@ -398,13 +415,10 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
     with pscope("model"):
         x = embedding(params["embed"], tokens, cfg.compute_dtype)
         if cfg.scan_layers:
-            def body(y, xs):
-                layer, lc = xs
-                y, new_lc = _decode_block(layer, lc, y, pos, cfg, 0,
-                                          moe_impl, block_tables=bt)
-                return y, new_lc
-            x, new_layers = jax.lax.scan(
-                body, x, (params["layers"], cache["layers"]))
+            x, new_layers = _scan_blocks(
+                lambda layer, lc, y: _decode_block(
+                    layer, lc, y, pos, cfg, 0, moe_impl, block_tables=bt),
+                x, params["layers"], cache["layers"])
         else:
             new_layers = []
             for i, layer in enumerate(params["layers"]):

@@ -90,12 +90,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import census as _census
 from repro.core.placement import PlacementRule
 from repro.core.policy import (PhaseSpec, PrecisionPolicy, policy_params,
                                uniform_param_views)
 from repro.core.quantize import use_rule
 from repro.core.scope import PHASES, phase_scope
-from repro.models.model_api import Model
+from repro.models.model_api import Model, build_model
 
 
 def drafter_params(params, bits: int, mode: str = "rne"):
@@ -171,6 +172,12 @@ class KVConfig:
     #: ``batch_slots * prefill_chunk``. Must be >= batch_slots so every
     #: active slot gets at least one row per step.
     pack_tokens: int = 0
+    #: block-table entries the paged flash kernel streams per KV grid
+    #: step (``block_k = pages_per_block * page_size``) — lets small
+    #: pages fill the MXU tile without changing the pool layout or the
+    #: logical attention math (greedy completions are identical across
+    #: values). Requires the paged layout; 1 = one page per block.
+    pages_per_block: int = 1
 
 
 @dataclasses.dataclass
@@ -276,6 +283,23 @@ class ServeConfig:
                 f"{self.max_len} so the paged logical length equals the "
                 "contiguous S axis; pick e.g. page_size="
                 f"{self._suggest_page_size()}")
+        ppb = self.kv.pages_per_block
+        if ppb < 1:
+            raise ValueError(
+                f"kv.pages_per_block must be >= 1; got {ppb}")
+        if ppb != 1 and not self.page_size:
+            raise ValueError(
+                f"kv.pages_per_block={ppb} requires the paged KV layout "
+                "(page_size > 0): it widens the paged flash kernel's KV "
+                "block to block_k = pages_per_block * page_size, which "
+                "the contiguous layout has no block table to feed")
+        if ppb != 1 and ppb * self.page_size > self.max_len:
+            raise ValueError(
+                f"kv.pages_per_block={ppb} * page_size={self.page_size} "
+                f"= {ppb * self.page_size} exceeds max_len={self.max_len}"
+                ": the KV block would be wider than the whole logical "
+                "sequence; pick pages_per_block <= "
+                f"{max(1, self.max_len // max(self.page_size, 1))}")
         if self.page_size and self.pack_tokens \
                 and self.pack_tokens < self.batch_slots:
             raise ValueError(
@@ -365,6 +389,15 @@ class ServeStats:
     #: times the abstract decode-cell cost under each phase's rule;
     #: 0.0 unless ``ServeConfig.estimate_energy``
     est_pj: float = 0.0
+    #: measured per-phase dynamic bit census: the §III-C trailing-zero
+    #: counts fused into the attention/matmul kernel epilogues (VMEM
+    #: tiles summed into an SMEM scalar riding each step program — zero
+    #: extra dispatches); empty unless ``ServeConfig.estimate_energy``
+    phase_census: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: measured energy (picojoules) from the fused census: total active
+    #: mantissa bits times the fp32 dot-op energy per full-width bit;
+    #: 0.0 unless ``ServeConfig.estimate_energy``
+    measured_pj: float = 0.0
     #: tiered serving: per-tier stats, request -> tier assignment, and
     #: how many requests admission downgraded below their asked tier
     per_tier: Dict[str, "ServeStats"] = dataclasses.field(
@@ -393,6 +426,10 @@ class ServeStats:
     @property
     def est_pj_per_token(self) -> float:
         return self.est_pj / max(self.tokens_out, 1)
+
+    @property
+    def measured_pj_per_token(self) -> float:
+        return self.measured_pj / max(self.tokens_out, 1)
 
     def ttft_percentile(self, q: float) -> float:
         """Nearest-rank TTFT percentile over completed requests,
@@ -476,7 +513,8 @@ class PageAllocator:
 
 def _phase_programs(model: Model, cfg: ServeConfig,
                     ambient: Optional[PlacementRule],
-                    spec: Optional[SpecConfig]) -> dict:
+                    spec: Optional[SpecConfig],
+                    collect_census: bool = False) -> dict:
     """Compile the engine's step programs, each traced under the policy
     ambient rule plus its authoritative phase tag. ``use_rule`` /
     ``phase_scope`` are thread-local and consulted at *trace* time, so
@@ -484,13 +522,24 @@ def _phase_programs(model: Model, cfg: ServeConfig,
     keeps lazy retraces — new shapes, new width buckets — under the
     same rule. Closures deliberately capture only ``model``/``cfg``
     values (never an engine), so tiers with equal policy signatures can
-    share one program set."""
+    share one program set.
+
+    ``collect_census=True`` additionally opens a census scope inside
+    every traced program: the fused kernel epilogues note their §III-C
+    bit counts on the tape and each program returns ``(out, bits)`` —
+    one extra int32 scalar riding the existing dispatch. The engine
+    unwraps the pair host-side (``DecodeEngine._counted``), so call
+    sites keep the original arity."""
     chunk = cfg.prefill_chunk
 
     def phased(phase, fn):
         def run(*args):
             with use_rule(ambient), phase_scope(phase):
-                return fn(*args)
+                if not collect_census:
+                    return fn(*args)
+                with _census.census_scope() as tape:
+                    out = fn(*args)
+                    return out, tape.total()
         return run
 
     progs = {
@@ -527,14 +576,27 @@ def _phase_programs(model: Model, cfg: ServeConfig,
         # semantics = free snapshot), so verification always starts
         # from the committed prefix.
         def _draft_fn(p, c, t):
+            # census-tape shield: the decode cell's notes inside the
+            # scan body are inner tracers, so collect per draft step and
+            # thread the count out as a scan output (see core.census)
+            active = _census.census_active()
+
             def step(carry, _):
                 cc, tok = carry
-                logits, cc = model.decode_step(p, cc, tok)
+                if active:
+                    (logits, cc), cnt = _census.collect(
+                        lambda: model.decode_step(p, cc, tok))
+                else:
+                    logits, cc = model.decode_step(p, cc, tok)
                 nxt = jnp.argmax(
                     logits[:, -1, :],
                     axis=-1).astype(jnp.int32)[:, None]
-                return (cc, nxt), nxt[:, 0]
+                y = nxt[:, 0]
+                return (cc, nxt), ((y, cnt) if active else y)
             (_, _), seq = jax.lax.scan(step, (c, t), None, length=k)
+            if active:
+                seq, counts = seq
+                _census.note_count(jnp.sum(counts, dtype=jnp.int32))
             return seq.T              # (B, k)
 
         progs["draft"] = jax.jit(phased("draft", _draft_fn))
@@ -561,12 +623,24 @@ class DecodeEngine:
             raise ValueError("pass either rule= (deprecated) or policy=, "
                              "not both")
         from repro.models.attention import max_pages_for
+        # multi-page KV blocks: the serving knob lives on KVConfig; the
+        # kernel reads it from ModelConfig, so rebuild the model facade
+        # under the widened block when they disagree
+        ppb = cfg.kv.pages_per_block
+        if model.cfg.pages_per_block != ppb:
+            model = build_model(
+                dataclasses.replace(model.cfg, pages_per_block=ppb))
         self.model = model
         self.params = params
         self.cfg = cfg
         self.rule = rule
         self.stats = ServeStats()
         self.paged = cfg.page_size > 0
+        #: fuse the §III-C bit census into every step program (the
+        #: kernels' epilogue accumulator) — measured energy rides the
+        #: abstract estimate's flag at zero extra dispatches
+        self._collect_census = bool(cfg.estimate_energy)
+        self._census_pending: Dict[str, list] = {}
         if self.paged:
             self.max_pages = max_pages_for(cfg.max_len, cfg.page_size)
             self.num_pages = (cfg.kv_pages or
@@ -626,20 +700,51 @@ class DecodeEngine:
         # -- compiled step programs: one cached set per distinct policy
         #    tier (signature) — tiers with equal policies share jits
         key = (id(model), pol.signature(), cfg.prefill_chunk,
-               None if self._spec is None else self._spec.k)
+               None if self._spec is None else self._spec.k,
+               self._collect_census, ppb)
         progs = None if _programs is None else _programs.get(key)
         if progs is None:
-            progs = _phase_programs(model, cfg, self._ambient, self._spec)
+            progs = _phase_programs(model, cfg, self._ambient, self._spec,
+                                    collect_census=self._collect_census)
             if _programs is not None:
                 _programs[key] = progs
-        self._step = progs["step"]
-        self._chunk_step = progs["chunk_step"]
-        self._packed_step = progs["packed_step"]
-        self._reset = progs["reset"]
+        self._step = self._counted("decode", progs["step"])
+        self._chunk_step = self._counted("prefill", progs["chunk_step"])
+        self._packed_step = self._counted("prefill", progs["packed_step"])
+        self._reset = self._counted("decode", progs["reset"])
         if self._spec is not None:
-            self._draft = progs["draft"]
-            self._verify = progs["verify"]
-            self._verify_packed = progs["verify_packed"]
+            self._draft = self._counted("draft", progs["draft"])
+            self._verify = self._counted("verify", progs["verify"])
+            self._verify_packed = self._counted("verify",
+                                                progs["verify_packed"])
+
+    def _counted(self, phase: str, jfn):
+        """Host-side unwrap of a census-collecting step program: record
+        the program's fused bit count (a lazy device scalar — no sync
+        until ``_finish_stats`` folds it) and restore the original
+        return arity. Identity when census collection is off."""
+        if not self._collect_census:
+            return jfn
+
+        def run(*args, **kw):
+            out, c = jfn(*args, **kw)
+            self._census_pending.setdefault(phase, []).append(c)
+            return out
+        return run
+
+    def _fold_census(self) -> None:
+        """Fold the pending per-step census scalars into
+        ``stats.phase_census`` / ``stats.measured_pj`` (the only point
+        the device scalars are transferred)."""
+        if not self._collect_census:
+            return
+        pc = self.stats.phase_census
+        for ph, vals in self._census_pending.items():
+            pc[ph] = pc.get(ph, 0) + sum(int(v) for v in vals)
+        self._census_pending.clear()
+        if pc:
+            from repro.core.estimators import census_energy_pj
+            self.stats.measured_pj = census_energy_pj(sum(pc.values()))
 
     # -- tiered construction -------------------------------------------------
     def _build_tiers(self, programs: dict) -> None:
@@ -666,12 +771,16 @@ class DecodeEngine:
             frac = slots[n] / max(total, 1)
             sub_cfg = dataclasses.replace(
                 cfg, tiers=None, tier_slots=None, tier_floor=None,
-                batch_slots=slots[n], kv=None,
-                page_size=cfg.page_size,
-                kv_pages=(max(1, round(cfg.kv_pages * frac))
-                          if cfg.kv_pages else 0),
-                pack_tokens=(max(slots[n], round(cfg.pack_tokens * frac))
-                             if cfg.pack_tokens else 0))
+                batch_slots=slots[n],
+                kv=KVConfig(
+                    page_size=cfg.page_size,
+                    pages=(max(1, round(cfg.kv_pages * frac))
+                           if cfg.kv_pages else 0),
+                    pack_tokens=(max(slots[n],
+                                     round(cfg.pack_tokens * frac))
+                                 if cfg.pack_tokens else 0),
+                    pages_per_block=cfg.kv.pages_per_block),
+                page_size=None, kv_pages=None, pack_tokens=None)
             self._sub[n] = DecodeEngine(self.model, self.params, sub_cfg,
                                         policy=cfg.tiers[n],
                                         _programs=programs)
@@ -834,6 +943,7 @@ class DecodeEngine:
         self.stats.wall_s = time.perf_counter() - self._t0
         if self.cfg.estimate_energy:
             self.stats.est_pj = self._estimate_energy()
+            self._fold_census()
 
     def _generate_tiered(self, prompts, max_new_tokens, tiers
                          ) -> List[List[int]]:
@@ -898,6 +1008,7 @@ class DecodeEngine:
             st.wall_s = wall
             if self.cfg.estimate_energy:
                 st.est_pj = sub._estimate_energy()
+                sub._fold_census()
             stats.per_tier[n] = st
             self._merge_stats(stats, st)
         stats.wall_s = wall
@@ -910,14 +1021,16 @@ class DecodeEngine:
         for f in ("steps", "active_slot_steps", "slot_steps", "tokens_out",
                   "prefill_steps", "prefill_tokens", "pool_pages",
                   "draft_steps", "verify_steps", "spec_windows",
-                  "draft_tokens", "accepted_tokens", "est_pj"):
+                  "draft_tokens", "accepted_tokens", "est_pj",
+                  "measured_pj"):
             setattr(dst, f, getattr(dst, f) + getattr(src, f))
         dst.peak_resident_pages += src.peak_resident_pages
         dst.peak_active_requests += src.peak_active_requests
         dst.ttft_s.update(src.ttft_s)
         for d_dst, d_src in ((dst.accepted_hist, src.accepted_hist),
                              (dst.packed_widths, src.packed_widths),
-                             (dst.phase_rows, src.phase_rows)):
+                             (dst.phase_rows, src.phase_rows),
+                             (dst.phase_census, src.phase_census)):
             for k, v in d_src.items():
                 d_dst[k] = d_dst.get(k, 0) + v
 

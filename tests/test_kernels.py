@@ -316,3 +316,172 @@ def test_paged_flash_packed_decode_rows():
                                      v[:, :, :p + 1], causal=True)
         np.testing.assert_allclose(np.asarray(got[i:i + 1]),
                                    np.asarray(sl), atol=3e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# multi-page KV blocks: pages_per_block sweeps, mid-block sentinels,
+# block_k validation/routing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ppb", [1, 2, 4])
+@pytest.mark.parametrize("ps", [8, 16, 64, 128])
+def test_paged_flash_page_size_sweep(ps, ppb):
+    """Every (page_size, pages_per_block) cell matches the gathered
+    oracle under ragged kv_len/q_start — including table widths
+    pages_per_block does NOT divide (the padded sentinel sub-pages are
+    masked in logical coordinates, so the kernel's wider block_k never
+    shows through)."""
+    b, hq, hkv, d = 2, 2, 1, 16
+    mp = 3
+    s = mp * ps
+    num_pages = b * mp + 2
+    q = jnp.asarray(RNG.standard_normal((b, hq, 4, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    k_pool, v_pool, tbl = _paged_from_contiguous(k, v, ps, num_pages)
+    kv_len = jnp.asarray([s, s // 2 + 1], jnp.int32)
+    q_start = kv_len - 4
+    want = ref.flash_attention_ref(q, k, v, causal=True, kv_len=kv_len,
+                                   q_start=q_start)
+    got = ops.paged_flash_attention(q, k_pool, v_pool, tbl, causal=True,
+                                    kv_len=kv_len, q_start=q_start,
+                                    pages_per_block=ppb,
+                                    backend="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("ppb", [2, 4])
+def test_paged_flash_sentinel_pages_mid_block(ppb):
+    """Sentinel table entries landing in the MIDDLE of a multi-page
+    block (with ppb == table width the whole row is one block) never
+    leak unallocated pages into the output."""
+    b, hq, hkv, d = 2, 2, 1, 16
+    ps, mp, num_pages = 4, 4, 9
+    s = mp * ps
+    q = jnp.asarray(RNG.standard_normal((b, hq, 1, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    k_pool, v_pool, tbl = _paged_from_contiguous(k, v, ps, num_pages)
+    kv_len = jnp.asarray([6, 3], jnp.int32)   # <= first two pages
+    q_start = kv_len - 1
+    full = ops.paged_flash_attention(q, k_pool, v_pool, tbl,
+                                     kv_len=kv_len, q_start=q_start,
+                                     pages_per_block=ppb,
+                                     backend="interpret")
+    sent = np.asarray(tbl).copy()
+    sent[:, 2:] = num_pages                   # unallocated -> sentinel
+    got = ops.paged_flash_attention(q, k_pool, v_pool,
+                                    jnp.asarray(sent), kv_len=kv_len,
+                                    q_start=q_start, pages_per_block=ppb,
+                                    backend="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("ppb", [2, 3])
+def test_paged_flash_packed_decode_rows_multi_page(ppb):
+    """Packed decode rows (Tq == 1, per-row tables) under multi-page
+    blocks; ppb=2 does not divide the 3-page table, so the padded
+    sentinel column is exercised on the hot decode layout."""
+    hq, hkv, d = 4, 2, 16
+    ps, mp, num_pages = 4, 3, 11
+    s = mp * ps
+    k = jnp.asarray(RNG.standard_normal((1, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, hkv, s, d)), jnp.float32)
+    k_pool, v_pool, tbl = _paged_from_contiguous(k, v, ps, num_pages)
+    n_rows = 5
+    q = jnp.asarray(RNG.standard_normal((n_rows, hq, 1, d)), jnp.float32)
+    qpos = jnp.asarray([0, 3, 7, 10, 11], jnp.int32)
+    rows_tbl = jnp.broadcast_to(tbl, (n_rows, mp))
+    got = ops.paged_flash_attention(q, k_pool, v_pool, rows_tbl,
+                                    kv_len=qpos + 1, q_start=qpos,
+                                    pages_per_block=ppb,
+                                    backend="interpret")
+    for i, p in enumerate(np.asarray(qpos)):
+        sl = ref.flash_attention_ref(q[i:i + 1], k[:, :, :p + 1],
+                                     v[:, :, :p + 1], causal=True)
+        np.testing.assert_allclose(np.asarray(got[i:i + 1]),
+                                   np.asarray(sl), atol=3e-5, rtol=1e-4)
+
+
+def test_paged_flash_block_k_validation():
+    """block_k is routed through pages_per_block, never silently
+    clamped: non-multiples and conflicting explicit settings raise with
+    actionable messages; a consistent block_k dispatches the multi-page
+    kernel and matches the oracle."""
+    b, hq, hkv, d = 1, 2, 1, 16
+    ps, mp, num_pages = 8, 4, 6
+    s = mp * ps
+    q = jnp.asarray(RNG.standard_normal((b, hq, 2, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    k_pool, v_pool, tbl = _paged_from_contiguous(k, v, ps, num_pages)
+    kv_len = jnp.asarray([s], jnp.int32)
+    q_start = kv_len - 2
+    with pytest.raises(ValueError, match="multiple of page_size"):
+        ops.paged_flash_attention(q, k_pool, v_pool, tbl, kv_len=kv_len,
+                                  q_start=q_start, block_k=12,
+                                  backend="interpret")
+    with pytest.raises(ValueError, match="conflicts with pages_per_block"):
+        ops.paged_flash_attention(q, k_pool, v_pool, tbl, kv_len=kv_len,
+                                  q_start=q_start, block_k=16,
+                                  pages_per_block=4, backend="interpret")
+    with pytest.raises(ValueError, match="pages_per_block"):
+        ops.paged_flash_attention(q, k_pool, v_pool, tbl, kv_len=kv_len,
+                                  q_start=q_start, pages_per_block=0,
+                                  backend="interpret")
+    got = ops.paged_flash_attention(q, k_pool, v_pool, tbl, kv_len=kv_len,
+                                    q_start=q_start, block_k=16,
+                                    backend="interpret")
+    want = ref.flash_attention_ref(q, k, v, causal=True, kv_len=kv_len,
+                                   q_start=q_start)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused bit-census epilogues: kernel scalar == host census of the output
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["interpret", "ref"])
+@pytest.mark.parametrize("bits", [24, 8])
+def test_flash_attention_census_matches_host(backend, bits):
+    b, hq, hkv, tq, tk, d = 2, 4, 2, 33, 77, 16
+    q = jnp.asarray(RNG.standard_normal((b, hq, tq, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, tk, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, tk, d)), jnp.float32)
+    out, c = ops.flash_attention(q, k, v, causal=True, qk_bits=bits,
+                                 pv_bits=bits, collect_census=True,
+                                 backend=backend)
+    assert int(c) == int(ref.bit_census_ref(out))
+
+
+@pytest.mark.parametrize("ppb", [1, 2])
+def test_paged_flash_census_matches_host(ppb):
+    b, hq, hkv, d = 2, 2, 1, 16
+    ps, mp, num_pages = 8, 3, 8
+    s = mp * ps
+    q = jnp.asarray(RNG.standard_normal((b, hq, 4, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, s, d)), jnp.float32)
+    k_pool, v_pool, tbl = _paged_from_contiguous(k, v, ps, num_pages)
+    kv_len = jnp.asarray([s, 13], jnp.int32)
+    q_start = kv_len - 4
+    out, c = ops.paged_flash_attention(q, k_pool, v_pool, tbl,
+                                       kv_len=kv_len, q_start=q_start,
+                                       pages_per_block=ppb,
+                                       collect_census=True,
+                                       backend="interpret")
+    assert int(c) == int(ref.bit_census_ref(out))
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (100, 70, 90)])
+def test_quant_matmul_census_matches_host(m, k, n):
+    """Padded rows/cols must be masked out of the fused census — the
+    (100, 70, 90) case pads every grid axis."""
+    a = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((k, n)), jnp.float32)
+    out, c = ops.quant_matmul(a, b, a_bits=8, b_bits=8, out_bits=12,
+                              collect_census=True, backend="interpret")
+    assert int(c) == int(ref.bit_census_ref(out))

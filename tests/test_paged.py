@@ -11,7 +11,7 @@ import pytest
 from repro.configs import get_arch
 from repro.models import build_model
 from repro.serve import DecodeEngine, ServeConfig
-from repro.serve.engine import PageAllocator
+from repro.serve.engine import KVConfig, PageAllocator
 
 # one arch per family: dense, moe, recurrent (ssm), hybrid, encdec
 ARCHS = ["codeqwen1.5-7b", "granite-moe-1b-a400m", "xlstm-1.3b",
@@ -70,6 +70,34 @@ def test_paged_engine_matches_wave_greedy(arch, models):
     if model.paged_kv:
         assert eng.stats.pool_pages == 6
         assert 0 < eng.stats.peak_resident_pages <= 6
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_pages_per_block_parity_all_families(arch, models):
+    """Multi-page KV blocks are a pure dispatch-shape change: serve
+    completions are byte-identical across pages_per_block ∈ {1, 2, 4}
+    on the paged layout, and match the contiguous layout's."""
+    model, params = models(arch)
+    contig = _engine(model, params, prefill_chunk=7).generate(
+        PROMPTS, max_new_tokens=6)
+    for ppb in (1, 2, 4):
+        eng = _engine(model, params, prefill_chunk=7,
+                      kv=KVConfig(page_size=8, pages_per_block=ppb))
+        got = eng.generate(PROMPTS, max_new_tokens=6)
+        assert got == contig, f"pages_per_block={ppb} diverged"
+
+
+def test_pages_per_block_validation():
+    """The serving knob rejects inconsistent geometry with actionable
+    errors instead of silently clamping."""
+    with pytest.raises(ValueError, match="requires the paged KV layout"):
+        ServeConfig(kv=KVConfig(page_size=0, pages_per_block=2))
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        ServeConfig(max_len=48, kv=KVConfig(page_size=16,
+                                            pages_per_block=4))
+    with pytest.raises(ValueError, match="pages_per_block must be >= 1"):
+        ServeConfig(kv=KVConfig(page_size=8, pages_per_block=0),
+                    max_len=48)
 
 
 @pytest.mark.parametrize("chunk", [1, 7, 32])

@@ -364,6 +364,45 @@ def test_energy_estimate_monotone_in_bits():
     assert pj6 < pj24
 
 
+def test_measured_census_rides_energy_estimate():
+    """``estimate_energy=True`` additionally measures the token
+    stream's fused §III-C bit census: per-phase counts and measured pJ
+    land on the stats (overall and per tier), a cheaper tier measures
+    strictly fewer active bits, and collecting the census never changes
+    the served completions."""
+    model, params = _tiny("codeqwen1.5-7b")
+    asked = ["gold", "bronze"] * 3
+    eng = DecodeEngine(model, params, _tier_cfg())
+    outs = eng.generate(PROMPTS, max_new_tokens=4, tiers=asked)
+    st = eng.stats
+    assert st.measured_pj > 0 and st.phase_census
+    gold, bronze = st.per_tier["gold"], st.per_tier["bronze"]
+    assert 0 < bronze.measured_pj_per_token < gold.measured_pj_per_token
+    assert sum(st.phase_census.values()) \
+        == sum(gold.phase_census.values()) \
+        + sum(bronze.phase_census.values())
+    off = DecodeEngine(model, params, _tier_cfg(estimate_energy=False))
+    assert off.generate(PROMPTS, max_new_tokens=4, tiers=asked) == outs
+    assert off.stats.measured_pj == 0.0 and not off.stats.phase_census
+
+
+def test_serving_nsga_recurrent_census_fallback():
+    """A pure-recurrent decode path has no censused kernels, so its
+    measured census totals zero; the serving energy axis must fall back
+    to the abstract width-affine estimate rather than collapsing every
+    genome to 0 pJ/token."""
+    model, params = _tiny("xlstm-1.3b")
+    rep = explore(ServingTask(model=model, params=params,
+                              prompts=PROMPTS[:2], serve_cfg=_cfg(),
+                              max_new_tokens=3, k=2, n_sites=2,
+                              pop_size=4, n_gen=1, max_evals=4),
+                  objectives="serving")
+    assert rep.points
+    for p in rep.points:
+        assert p.payload["measured_pj_per_token"] == 0.0
+        assert p.energy == p.payload["est_pj_per_token"] > 0.0
+
+
 def test_policy_params_per_layer_views():
     """policy_params truncates only the layers a plc spec names, leaving
     other layers' weights bit-exact."""
