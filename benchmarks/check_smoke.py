@@ -48,6 +48,13 @@ Reads the ``BENCH_*.json`` files emitted by ``benchmarks.run`` and fails
   to non-policy serving (including the tiered engine's exact tier),
   and hold p99 TTFT within ``MAX_POLICY_P99_TTFT_RATIO`` x the
   baseline's.
+* serve-async: fused decode megasteps must beat the sync-every-token
+  loop by >= ``MIN_ASYNC_SPEEDUP`` tokens/sec at ``sync_every=32`` on
+  the decode-dominated workload, with host syncs bounded by
+  steps/sync_every plus scheduling events, byte-identical greedy
+  completions (all five families), and the measured fused-census
+  pJ/token equal to the single-step path within
+  ``ASYNC_CENSUS_RTOL``.
 * kernels-paged: the multi-page paged-attention blocking must fill the
   MXU tile at small page sizes (KV grid trips at ``page_size=8 x
   pages_per_block=16`` == the ``page_size=128`` reference; paged serve
@@ -96,6 +103,10 @@ MIN_POLICY_ACCEPTANCE = 0.9        # acceptance under the explored policy
 MAX_POLICY_P99_TTFT_RATIO = 2.5    # policy p99 TTFT vs the uniform
 #                                    drafter baseline (same engine shape;
 #                                    observed ~1.3x, wall-clock headroom)
+MIN_ASYNC_SPEEDUP = 1.3            # fused megasteps (sync_every=32) vs
+#                                    the sync-every-token loop, tokens/s
+ASYNC_CENSUS_RTOL = 1e-6           # measured pJ/token, megastep vs
+#                                    single-step (exact by construction)
 MAX_DISPATCH_RATIO = 0.25          # batched <= serial / 4
 MAX_DYNAMIC_EXTRA_DISPATCHES = 2   # dynamic objective <= static + 2
 DYNAMIC_HOST_DEVICE_RTOL = 1e-6
@@ -112,6 +123,7 @@ BASELINE_RATIO_TOL = 0.75
 BASELINE_GATES = {
     "steps": "le",
     "prefill_steps": "le",
+    "host_syncs": "le",
     "batched": "le",
     "dynamic": "le",
     "speedup": "ge",
@@ -301,6 +313,34 @@ def check_serve_policy(path: str) -> list:
     return errs
 
 
+def check_serve_async(path: str) -> list:
+    rows = _rows(path)
+    errs = []
+    sp = rows["serve_async_speedup"]
+    speed = float(_field(sp, "speedup").rstrip("x"))
+    if speed < MIN_ASYNC_SPEEDUP:
+        errs.append(f"async-serve speedup regression: {speed:.2f}x < "
+                    f"{MIN_ASYNC_SPEEDUP}x tokens/sec at sync_every=32 "
+                    "over the sync-every-token loop")
+    if _field(sp, "parity") != "True":
+        errs.append("async-serve parity regression: megastep greedy "
+                    "completions != single-step loop")
+    if _field(sp, "families_parity") != "True":
+        errs.append("async-serve family-parity regression: a family's "
+                    "fused-megastep completions diverged from its "
+                    "single-step engine")
+    if _field(sp, "sync_bound") != "True":
+        errs.append("async-serve host-sync regression: host_syncs "
+                    "exceeded steps/sync_every + scheduling events "
+                    f"(host_syncs_32={_field(sp, 'host_syncs_32')})")
+    census_rel = float(_field(sp, "census_rel"))
+    if not census_rel <= ASYNC_CENSUS_RTOL:
+        errs.append(f"async-serve census divergence: measured pJ/token "
+                    f"rel diff {census_rel:.3e} > {ASYNC_CENSUS_RTOL} "
+                    "vs the single-step path")
+    return errs
+
+
 def check_kernels_paged(path: str) -> list:
     rows = _rows(path)
     errs = []
@@ -395,6 +435,7 @@ def main() -> None:
               ("BENCH_serve-paged.json", check_serve_paged),
               ("BENCH_serve-spec.json", check_serve_spec),
               ("BENCH_serve-policy.json", check_serve_policy),
+              ("BENCH_serve-async.json", check_serve_async),
               ("BENCH_kernels-paged.json", check_kernels_paged)]
     errs = []
     for fname, fn in checks:

@@ -566,8 +566,123 @@ def serve_policy(full: bool = False) -> List[Tuple[str, float, str]]:
     ]
 
 
+def _megastep_family_parity(sync_every: int) -> bool:
+    """Byte-identical greedy completions, fused megasteps vs the
+    single-step loop, on tiny models of all five assigned families
+    (paged KV where the family pages)."""
+    import jax
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serve import DecodeEngine, ServeConfig
+
+    prompts = [[5, 9, 2, 7], [1, 2], [3] * 12, [4, 5, 6], [7], [13, 14]]
+    for arch in ("codeqwen1.5-7b", "xlstm-1.3b", "zamba2-7b",
+                 "seamless-m4t-medium", "granite-moe-1b-a400m"):
+        cfg = get_arch(arch).reduced(n_layers=2, d_model=32, d_ff=64,
+                                     vocab=64)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+
+        def serve(n):
+            return DecodeEngine(model, params, ServeConfig(
+                max_len=48, batch_slots=2, engine="continuous",
+                prefill_chunk=4, page_size=8, sync_every=n,
+                debug_invariants=True)).generate(prompts,
+                                                 max_new_tokens=6)
+        if serve(sync_every) != serve(1):
+            return False
+    return True
+
+
+def serve_async(full: bool = False) -> List[Tuple[str, float, str]]:
+    """Fused decode megasteps: sync_every ∈ {1, 8, 32} on a
+    decode-dominated workload (short prompts, long completions — the
+    regime where the per-token host round trip is the bottleneck).
+
+    Gated downstream (``check_smoke.check_serve_async``): tokens/sec at
+    sync_every=32 must beat sync_every=1 by >= MIN_ASYNC_SPEEDUP, host
+    syncs must drop to steps/sync_every plus scheduling events, greedy
+    completions must stay byte-identical (all five families), and the
+    measured fused-census pJ/token must equal the single-step path.
+    """
+    import jax
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serve import DecodeEngine, ServeConfig
+
+    cfg = get_arch("codeqwen1.5-7b").reduced(n_layers=2, d_model=64,
+                                             d_ff=128, vocab=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    n_req = 32 if full else 16
+    max_new = 48
+    slots = 8
+    # decode-heavy: 4–8 token prompts, uniform 48-token completions
+    prompts = [[(7 * i + 3 + j) % cfg.vocab_size
+                for j in range(4 + i % 5)] for i in range(n_req)]
+
+    def build(n, energy=False):
+        return DecodeEngine(model, params, ServeConfig(
+            max_len=64, batch_slots=slots, engine="continuous",
+            prefill_chunk=8, sync_every=n, estimate_energy=energy))
+
+    results = {}
+    for n in (1, 8, 32):
+        eng = build(n)
+        eng.generate(prompts[:slots], max_new_tokens=4)   # compile warmup
+        t0 = time.perf_counter()
+        outs = eng.generate(prompts, max_new_tokens=max_new)
+        dt = time.perf_counter() - t0
+        st = eng.stats
+        results[n] = dict(outs=outs, us=dt * 1e6,
+                          toks_per_s=st.tokens_out / dt, stats=st)
+
+    s1, s32 = results[1]["stats"], results[32]["stats"]
+    speedup = results[32]["toks_per_s"] / max(results[1]["toks_per_s"],
+                                              1e-9)
+    parity = (results[8]["outs"] == results[1]["outs"]
+              and results[32]["outs"] == results[1]["outs"])
+    # deterministic sync bound: one pull per fused window or scheduling
+    # step — ceil(steps/32) decode windows plus prefill steps and one
+    # flush window per retirement
+    bound = (-(-s32.steps // 32) + s32.prefill_steps + n_req)
+    sync_bound = s32.host_syncs <= bound
+    # measured fused-census parity, megastep vs single-step
+    c1 = build(1, energy=True)
+    c32 = build(32, energy=True)
+    c1.generate(prompts, max_new_tokens=max_new)
+    c32.generate(prompts, max_new_tokens=max_new)
+    m1 = c1.stats.measured_pj_per_token
+    m32 = c32.stats.measured_pj_per_token
+    census_rel = abs(m32 - m1) / max(abs(m1), 1e-12)
+    fam_parity = _megastep_family_parity(8)
+
+    rows = []
+    for n in (1, 8, 32):
+        st = results[n]["stats"]
+        rows.append((f"serve_async_sync{n}", results[n]["us"],
+                     f"toks_per_s={results[n]['toks_per_s']:.1f};"
+                     f"steps={st.steps};host_syncs={st.host_syncs};"
+                     f"megasteps={st.megasteps};"
+                     f"dispatch_wait_ms={st.dispatch_wait_s * 1e3:.1f};"
+                     f"host_sched_ms={st.host_sched_s * 1e3:.1f};"
+                     f"p50_tok_lat_ms={st.p50_tok_lat_s * 1e3:.3f};"
+                     f"p99_tok_lat_ms={st.p99_tok_lat_s * 1e3:.3f}"))
+    rows.append(("serve_async_speedup", 0.0,
+                 f"speedup={speedup:.3f}x;parity={parity};"
+                 f"families_parity={fam_parity};"
+                 f"sync_bound={sync_bound};"
+                 f"host_syncs_1={s1.host_syncs};"
+                 f"host_syncs_32={s32.host_syncs};"
+                 f"census_rel={census_rel:.3e};"
+                 f"measured_pj_per_tok={m32:.4e};"
+                 f"n_requests={n_req};max_new={max_new}"))
+    return rows
+
+
 if __name__ == "__main__":
     for name, us, derived in (serve_throughput() + serve_prefill()
                               + serve_paged() + serve_spec()
-                              + serve_policy()):
+                              + serve_policy() + serve_async()):
         print(f"{name},{us:.0f},{derived}")

@@ -19,6 +19,16 @@ as a scan output, and the caller re-notes the summed totals to the
 enclosing tape (see ``models/prefill.py`` and the ``scan_layers``
 bodies in ``models/transformer.py``).
 
+The same shield applies to ``lax.while_loop`` bodies, with one twist:
+a while loop has no per-iteration outputs, so the body runs
+:func:`collect` each iteration and ACCUMULATES the total into an int32 element
+of the loop *carry*; after the loop the caller re-notes the carried sum
+to the enclosing tape. This is how the serving engine's fused decode
+megastep (``models/decode_loop.py``) keeps the measured census exact at
+one dispatch per window: each loop iteration's count equals the count
+the corresponding single-step dispatch would have noted, and the carry
+folds them without any extra device round trip.
+
 Counts are exact int32 and match ``kernels.ref.bit_census_ref`` of the
 tensors the kernels actually stored — the measured-census parity gate in
 ``benchmarks/check_smoke.py`` holds them to the host reference exactly.

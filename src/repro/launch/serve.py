@@ -83,6 +83,10 @@ def main() -> None:
                     help="prefill chunk size for the continuous engine "
                          "(tokens ingested per slot per compiled step; "
                          "1 = legacy streaming prefill)")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="pure-decode steps fused into one on-device "
+                         "megastep (the host syncs once per window); "
+                         "1 = the historical sync-every-token loop")
     ap.add_argument("--page-size", type=int, default=0,
                     help="KV page size in tokens (0 = contiguous "
                          "per-slot strips; > 0 = paged pool + block "
@@ -153,6 +157,7 @@ def main() -> None:
                                       engine=args.engine,
                                       admission=args.admission,
                                       prefill_chunk=args.chunk,
+                                      sync_every=args.sync_every,
                                       kv=KVConfig(
                                           page_size=args.page_size,
                                           pages=args.kv_pages,
@@ -178,6 +183,12 @@ def main() -> None:
           f"occupancy={st.occupancy:.2f} tokens={st.tokens_out} "
           f"prefill_tokens={st.prefill_tokens} "
           f"mean_ttft={st.mean_ttft_s * 1e3:.1f}ms")
+    print(f"[serve] host/device: host_syncs={st.host_syncs} "
+          f"megasteps={st.megasteps} "
+          f"dispatch_wait={st.dispatch_wait_s * 1e3:.1f}ms "
+          f"host_sched={st.host_sched_s * 1e3:.1f}ms "
+          f"p50_tok_lat={st.p50_tok_lat_s * 1e3:.2f}ms "
+          f"p99_tok_lat={st.p99_tok_lat_s * 1e3:.2f}ms")
     if args.estimate_energy:
         print(f"[serve] energy: {st.est_pj_per_token:.0f} pJ/token "
               f"(phase_rows={dict(sorted(st.phase_rows.items()))})")

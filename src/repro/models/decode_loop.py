@@ -1,0 +1,109 @@
+"""Fused multi-step decode loop ("megastep"): up to ``n_steps``
+consecutive pure-decode steps inside ONE jitted ``lax.while_loop``, with
+the sampled/greedy token fed back on device — the serving engine syncs
+with the host once per window instead of once per token.
+
+The loop mirrors the engine's single-step scheduler exactly, which is
+what makes byte-identical output across megastep boundaries a contract
+rather than a hope:
+
+* each iteration runs the family's ``decode_step`` on the full (B, 1)
+  batch — retired/free slots feed token 0, exactly what the host loop
+  dispatches for a free slot — then takes argmax (greedy) or a
+  ``jax.random.categorical`` sample at ``temperature > 0``; the PRNG key
+  is split once per iteration (the host loop's split schedule), so the
+  sampled stream is bit-identical too;
+* emitted tokens land in a per-slot **ring buffer** row ``ring[s, j]``
+  (j-th token of the window; ``done`` is monotone, so each live slot
+  fills a contiguous prefix of length ``n_emitted[s]``);
+* per-slot stop is detected on device with the host's own retire rule,
+  in the host's own order: advance the position, spend the budget, then
+  retire on ``left <= 0``, EOS, or the cache-exhaustion guard
+  ``pos >= max_len - 1``;
+* the while condition early-exits once every slot is done — and, with
+  ``flush_on_retire`` set (the engine passes it when admissions are
+  pending), the moment ANY slot retires, so a freed slot is offered
+  back to the scheduler at the same step boundary the single-step
+  engine would have admitted into it;
+* when a census scope is open (``ServeConfig.estimate_energy``), the
+  fused kernel epilogues' bit counts are collected per iteration and
+  threaded through the loop carry (the ``lax.scan`` shield of
+  ``core.census``, applied to a while carry), then noted once on the
+  enclosing tape — the megastep's measured census equals the sum of the
+  single steps it replaces, exactly.
+
+Returns ``((ring, n_emitted, done, cur, pos, left, key, steps_run),
+cache)``; every array in the first tuple is the device-side carry the
+engine feeds straight into the NEXT megastep (dispatch-ahead double
+buffering) without a host round trip.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import census as _census
+
+
+def fused_decode_loop(step_fn: Callable, params, cache,
+                      cur: jnp.ndarray, pos: jnp.ndarray,
+                      left: jnp.ndarray, done: jnp.ndarray,
+                      key, flush_on_retire: jnp.ndarray, *,
+                      n_steps: int, temperature: float,
+                      eos_token: Optional[int], max_len: int):
+    """Run up to ``n_steps`` decode steps of ``step_fn(params, cache,
+    (B, 1) tokens) -> (logits, cache)`` on device.
+
+    ``cur`` is (B, 1) int32 (next token per slot), ``pos``/``left`` are
+    (B,) int32 (cache position / completion budget), ``done`` is (B,)
+    bool (True for free slots), ``flush_on_retire`` a bool scalar
+    operand (dynamic, so toggling it never retraces)."""
+    B = cur.shape[0]
+    done0 = done
+    collect = _census.census_active()
+
+    def cond(carry):
+        i, _, _, _, _, done, _, _, _, _ = carry
+        newly_retired = jnp.any(done & ~done0)
+        return ((i < n_steps) & ~jnp.all(done)
+                & ~(flush_on_retire & newly_retired))
+
+    def body(carry):
+        i, c, cur, pos, left, done, key, ring, nem, bits = carry
+        tok_in = jnp.where(done[:, None], 0, cur)
+        if collect:
+            (logits, c), cnt = _census.collect(
+                lambda: step_fn(params, c, tok_in))
+            bits = bits + cnt
+        else:
+            logits, c = step_fn(params, c, tok_in)
+        key, sub = jax.random.split(key)
+        last = logits[:, -1, :]
+        if temperature <= 0.0:
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                sub, last / temperature).astype(jnp.int32)
+        emit = ~done
+        adv = emit.astype(jnp.int32)
+        ring = ring.at[:, i].set(jnp.where(emit, nxt, 0))
+        nem = nem + adv
+        pos = pos + adv
+        left = left - adv
+        stop = (left <= 0) | (pos >= max_len - 1)
+        if eos_token is not None:
+            stop = stop | (nxt == eos_token)
+        done = done | (emit & stop)
+        cur = jnp.where(done[:, None], 0, nxt[:, None])
+        return i + 1, c, cur, pos, left, done, key, ring, nem, bits
+
+    carry = (jnp.zeros((), jnp.int32), cache, cur, pos, left, done, key,
+             jnp.zeros((B, n_steps), jnp.int32), jnp.zeros((B,), jnp.int32),
+             jnp.zeros((), jnp.int32))
+    (i, cache, cur, pos, left, done, key, ring, nem,
+     bits) = jax.lax.while_loop(cond, body, carry)
+    if collect:
+        _census.note_count(bits)
+    return (ring, nem, done, cur, pos, left, key, i), cache

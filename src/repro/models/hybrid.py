@@ -278,3 +278,15 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
         attn_cache["block_tables"] = bt
     return logits, {"mamba": new_mamba, "attn": attn_cache,
                     "pos": pos + 1, "x0": cache["x0"]}
+
+
+def decode_loop(params, cache, cur, pos, left, done, key, flush,
+                cfg: ModelConfig, *, n_steps: int, temperature: float,
+                eos_token, max_len: int):
+    """Megastep: up to ``n_steps`` fused decode steps on device (both
+    the mamba states and the shared-attention KV ride the carry)."""
+    from repro.models.decode_loop import fused_decode_loop
+    return fused_decode_loop(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, cur,
+        pos, left, done, key, flush, n_steps=n_steps,
+        temperature=temperature, eos_token=eos_token, max_len=max_len)

@@ -44,6 +44,12 @@ class Model:
     #: draft, (B,) spec, cap) -> ((B, C) greedy, (B,) n_acc, cache);
     #: speculation windows ride the same packed stream as prefill chunks
     spec_verify_packed: Callable = None
+    #: fused multi-step decode ("megastep"): (params, cache, (B, 1) cur,
+    #: (B,) pos, (B,) left, (B,) done, key, flush, *, n_steps,
+    #: temperature, eos_token, max_len) -> ((ring, n_emitted, done, cur,
+    #: pos, left, key, steps_run), cache) — up to n_steps decode steps
+    #: in one jitted while_loop, host syncs once per window
+    decode_loop: Callable = None
     #: True when init_paged_cache really pages KV (block tables present),
     #: i.e. the engine's page allocator governs this family's memory
     paged_kv: bool = False
@@ -80,6 +86,9 @@ def build_model(cfg: ModelConfig) -> Model:
         spec_verify_packed=lambda p, c, t, s, q, ri, n, d, sp, cap:
             mod.spec_verify_packed(p, c, t, s, q, ri, n, d, sp, cfg,
                                    cap=cap),
+        decode_loop=lambda p, c, cur, pos, left, done, key, flush, **kw:
+            mod.decode_loop(p, c, cur, pos, left, done, key, flush, cfg,
+                            **kw),
         paged_kv=fam != "ssm",
     )
 

@@ -432,3 +432,17 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig,
     if bt is not None:
         out["block_tables"] = bt
     return logits, out
+
+
+def decode_loop(params, cache, cur, pos, left, done, key, flush,
+                cfg: ModelConfig, *, n_steps: int, temperature: float,
+                eos_token, max_len: int):
+    """Megastep: up to ``n_steps`` fused decode steps on device.
+
+    Contiguous and paged caches alike — the block table rides the cache
+    pytree through the while carry unchanged."""
+    from repro.models.decode_loop import fused_decode_loop
+    return fused_decode_loop(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, cur,
+        pos, left, done, key, flush, n_steps=n_steps,
+        temperature=temperature, eos_token=eos_token, max_len=max_len)

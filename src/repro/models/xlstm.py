@@ -421,3 +421,14 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
         x = norm(params["final_norm"], x, cfg.norm)
         logits = unembed(params["head"], x, tied=False)
     return logits, {"blocks": new, "pos": cache["pos"] + 1}
+
+
+def decode_loop(params, cache, cur, pos, left, done, key, flush,
+                cfg: ModelConfig, *, n_steps: int, temperature: float,
+                eos_token, max_len: int):
+    """Megastep: up to ``n_steps`` fused recurrence steps on device."""
+    from repro.models.decode_loop import fused_decode_loop
+    return fused_decode_loop(
+        lambda p, c, t: decode_step(p, c, t, cfg), params, cache, cur,
+        pos, left, done, key, flush, n_steps=n_steps,
+        temperature=temperature, eos_token=eos_token, max_len=max_len)

@@ -83,6 +83,7 @@ round-robin several sub-engines through one wall clock.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -203,6 +204,16 @@ class ServeConfig:
     #: tokens each prefilling slot ingests per compiled step (continuous
     #: engine only; 1 = legacy streaming prefill, token by token)
     prefill_chunk: int = 32
+    #: pure-decode steps fused into ONE device dispatch (a "megastep"
+    #: ``lax.while_loop`` with on-device token feedback and per-slot
+    #: EOS/budget stop — see ``models/decode_loop``); the host syncs
+    #: once per window instead of once per token. 1 = the historical
+    #: sync-every-token loop. > 1 requires the continuous engine; the
+    #: engine drops back to single steps whenever scheduling events are
+    #: possible (prefilling slots, speculative windows, or — under
+    #: sampling — pending admissions), and greedy output is
+    #: byte-identical across megastep boundaries by construction.
+    sync_every: int = 1
     #: DEPRECATED flat paging kwargs — the shim for the nested ``kv``
     #: config below. None defers to ``kv``; setting both to conflicting
     #: values is an error.
@@ -271,6 +282,13 @@ class ServeConfig:
                              f"{self.admission!r}; one of ('fifo', 'sjf')")
         if self.prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if self.sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1; got "
+                             f"{self.sync_every}")
+        if self.sync_every > 1 and self.engine != "continuous":
+            raise ValueError(
+                "fused decode megasteps (sync_every > 1) require the "
+                f"continuous engine; got engine={self.engine!r}")
         if self.page_size < 0 or self.kv_pages < 0 or self.pack_tokens < 0:
             raise ValueError("page_size/kv_pages/pack_tokens must be >= 0")
         if self.page_size and self.engine != "continuous":
@@ -351,10 +369,22 @@ class ServeConfig:
         return 1
 
 
+def _percentile(vals: Sequence[float], q: float) -> float:
+    """True nearest-rank percentile: the ``ceil(q * n)``-th smallest
+    value (1-indexed), ``q`` in [0, 1]. The historical
+    ``round(q * (n - 1))`` form biased small-sample p99 low (banker's
+    rounding pulled the rank toward the median). 0.0 on empty input."""
+    if not vals:
+        return 0.0
+    vals = sorted(vals)
+    n = len(vals)
+    return vals[min(n - 1, max(0, math.ceil(q * n) - 1))]
+
+
 @dataclasses.dataclass
 class ServeStats:
     """Occupancy + latency accounting for the last ``generate`` call."""
-    steps: int = 0                    # compiled step dispatches
+    steps: int = 0                    # logical decode/prefill steps
     active_slot_steps: int = 0        # slot-steps spent on a live request
     slot_steps: int = 0               # steps * batch_slots
     tokens_out: int = 0               # completion tokens emitted
@@ -368,6 +398,23 @@ class ServeStats:
     peak_active_requests: int = 0
     #: per-request time-to-first-token, seconds since generate() started
     ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    #: fused decode windows consumed (``sync_every > 1`` only); each one
+    #: covered up to ``sync_every`` of the logical ``steps`` above in a
+    #: single device dispatch
+    megasteps: int = 0
+    #: blocking device→host pulls the scheduler performed (one per
+    #: ``_pull`` sync point — the async loop's denominator: at
+    #: ``sync_every = N`` pure-decode syncs drop ~N-fold)
+    host_syncs: int = 0
+    #: wall seconds spent blocked inside those pulls waiting on device
+    #: results — the "device" side of the host/device wall split;
+    #: ``host_sched_s`` is the remainder
+    dispatch_wait_s: float = 0.0
+    #: per-token emission latency samples, seconds: each step boundary's
+    #: wall time divided evenly over the tokens it emitted (a fused
+    #: window's tokens share its window wall — what a streaming client
+    #: observes); feeds ``p50_tok_lat_s``/``p99_tok_lat_s``
+    tok_lat_s: List[float] = dataclasses.field(default_factory=list)
     #: speculative decoding accounting (zeros outside spec mode)
     draft_steps: int = 0              # fused k-step drafter dispatches
     verify_steps: int = 0             # target verify dispatches
@@ -431,13 +478,16 @@ class ServeStats:
     def measured_pj_per_token(self) -> float:
         return self.measured_pj / max(self.tokens_out, 1)
 
+    @property
+    def host_sched_s(self) -> float:
+        """Wall seconds spent on host scheduling (admission, emission,
+        retirement, Python loop) — everything not blocked on device."""
+        return max(0.0, self.wall_s - self.dispatch_wait_s)
+
     def ttft_percentile(self, q: float) -> float:
         """Nearest-rank TTFT percentile over completed requests,
         ``q`` in [0, 1]. 0.0 with no requests recorded."""
-        if not self.ttft_s:
-            return 0.0
-        vals = sorted(self.ttft_s.values())
-        return vals[min(len(vals) - 1, int(round(q * (len(vals) - 1))))]
+        return _percentile(list(self.ttft_s.values()), q)
 
     @property
     def p50_ttft_s(self) -> float:
@@ -446,6 +496,18 @@ class ServeStats:
     @property
     def p99_ttft_s(self) -> float:
         return self.ttft_percentile(0.99)
+
+    def tok_lat_percentile(self, q: float) -> float:
+        """Nearest-rank per-token latency percentile, ``q`` in [0, 1]."""
+        return _percentile(self.tok_lat_s, q)
+
+    @property
+    def p50_tok_lat_s(self) -> float:
+        return self.tok_lat_percentile(0.50)
+
+    @property
+    def p99_tok_lat_s(self) -> float:
+        return self.tok_lat_percentile(0.99)
 
 
 class PageAllocator:
@@ -542,27 +604,47 @@ def _phase_programs(model: Model, cfg: ServeConfig,
                     return out, tape.total()
         return run
 
+    # Every program that REBINDS the cache donates it (donate_argnums
+    # on the cache operand): the engine never reuses a cache it handed
+    # to one of these, so XLA updates the KV pools in place instead of
+    # copying every layer's (B, S, KV, Dh) buffers per dispatch. The
+    # one deliberate exception is "draft" below — the engine discards
+    # the drafter's trial cache and verifies from the SAME committed
+    # cache, so donating it there would read a deleted buffer.
     progs = {
         "step": jax.jit(phased(
-            "decode", lambda p, c, t: model.decode_step(p, c, t))),
+            "decode", lambda p, c, t: model.decode_step(p, c, t)),
+            donate_argnums=1),
         # the chunked-prefill step: (B, C) tokens + per-slot n_new in
         # one dispatch (mixed prefill/decode); compiled lazily, so
         # wave engines never pay for it
         "chunk_step": jax.jit(phased(
-            "prefill", lambda p, c, t, n: model.prefill_chunk(p, c, t, n))),
+            "prefill", lambda p, c, t, n: model.prefill_chunk(p, c, t, n)),
+            donate_argnums=1),
         # the packed-prefill step: one (ΣC,) ragged stream + per-row
         # slot/position vectors; per-slot rows are capped at
         # prefill_chunk (static, for the recurrent unpack rectangle)
         "packed_step": jax.jit(phased(
             "prefill", lambda p, c, t, s, q, l: model.prefill_packed(
-                p, c, t, s, q, l, chunk))),
-        # donate the cache: the reset runs on the admit hot path and
-        # the caller always rebinds, so XLA may update it in place
-        # instead of copying every layer's (B, S, KV, Dh) buffers
+                p, c, t, s, q, l, chunk)),
+            donate_argnums=1),
         "reset": jax.jit(phased(
             "decode", lambda c, m: model.reset_slots(c, m)),
             donate_argnums=0),
     }
+    if cfg.sync_every > 1:
+        # the fused decode megastep: up to sync_every decode cells in
+        # one while_loop dispatch, on-device sampling feedback + stop
+        # detection; the census tape threads the loop carry so measured
+        # pJ/token equals the single-step path exactly
+        n_mega = cfg.sync_every
+        progs["megastep"] = jax.jit(phased(
+            "decode", lambda p, c, cur, pos, left, done, key, flush:
+                model.decode_loop(
+                    p, c, cur, pos, left, done, key, flush,
+                    n_steps=n_mega, temperature=cfg.temperature,
+                    eos_token=cfg.eos_token, max_len=cfg.max_len)),
+            donate_argnums=1)
     if spec is not None:
         k = spec.k
 
@@ -599,18 +681,22 @@ def _phase_programs(model: Model, cfg: ServeConfig,
                 _census.note_count(jnp.sum(counts, dtype=jnp.int32))
             return seq.T              # (B, k)
 
+        # no donation: the engine verifies from the SAME cache it
+        # drafted against (the drafter's trial cache is discarded)
         progs["draft"] = jax.jit(phased("draft", _draft_fn))
         # target verify over the k+1 candidate rows — the existing
         # chunk path's q_start/kv_len math under the "verify" phase
         # (identity unless the policy says otherwise)
         progs["verify"] = jax.jit(phased(
             "verify", lambda p, c, tok, n, d, sp: model.spec_verify(
-                p, c, tok, n, d, sp)))
+                p, c, tok, n, d, sp)),
+            donate_argnums=1)
         vcap = max(cfg.prefill_chunk, k + 1)
         progs["verify_packed"] = jax.jit(phased(
             "verify", lambda p, c, t, s, q, ri, n, d, sp:
                 model.spec_verify_packed(p, c, t, s, q, ri, n,
-                                         d, sp, vcap)))
+                                         d, sp, vcap)),
+            donate_argnums=1)
     return progs
 
 
@@ -701,7 +787,7 @@ class DecodeEngine:
         #    tier (signature) — tiers with equal policies share jits
         key = (id(model), pol.signature(), cfg.prefill_chunk,
                None if self._spec is None else self._spec.k,
-               self._collect_census, ppb)
+               self._collect_census, ppb, cfg.sync_every)
         progs = None if _programs is None else _programs.get(key)
         if progs is None:
             progs = _phase_programs(model, cfg, self._ambient, self._spec,
@@ -712,6 +798,8 @@ class DecodeEngine:
         self._chunk_step = self._counted("prefill", progs["chunk_step"])
         self._packed_step = self._counted("prefill", progs["packed_step"])
         self._reset = self._counted("decode", progs["reset"])
+        self._mega = (self._counted("decode", progs["megastep"])
+                      if "megastep" in progs else None)
         if self._spec is not None:
             self._draft = self._counted("draft", progs["draft"])
             self._verify = self._counted("verify", progs["verify"])
@@ -797,6 +885,30 @@ class DecodeEngine:
                    * self._tier_slots[names[i]]):
                 i += 1
         return names[i]
+
+    def _pull(self, *arrays):
+        """THE scheduler's blocking device→host sync point: transfer the
+        given device arrays, attributing the blocked wall time to
+        ``stats.dispatch_wait_s`` and counting one ``host_syncs`` event
+        (several arrays pulled together are one round trip)."""
+        t0 = time.perf_counter()
+        out = tuple(np.asarray(a) for a in arrays)
+        self.stats.dispatch_wait_s += time.perf_counter() - t0
+        self.stats.host_syncs += 1
+        return out[0] if len(out) == 1 else out
+
+    def _flush_tok_lat(self) -> None:
+        """Per-token latency sampling at a step boundary: the elapsed
+        wall since the last emitting boundary, divided evenly over the
+        tokens this step emitted (a fused window's tokens share its
+        window wall — what a streaming client observes). Boundaries
+        that emit nothing (pure prefill) accrue into the next token."""
+        if self._step_emits:
+            now = time.perf_counter()
+            per = (now - self._last_emit_t) / self._step_emits
+            self.stats.tok_lat_s.extend([per] * self._step_emits)
+            self._last_emit_t = now
+            self._step_emits = 0
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         logits = logits[:, -1, :]
@@ -915,6 +1027,8 @@ class DecodeEngine:
             raise ValueError("tiers= requires ServeConfig.tiers")
         self.stats = ServeStats(n_requests=len(prompts))
         self._t0 = time.perf_counter()
+        self._step_emits = 0
+        self._last_emit_t = self._t0
         outputs: dict[int, List[int]] = {i: [] for i in range(len(prompts))}
         budgets = self._budgets(prompts, max_new_tokens)
         key = jax.random.key(self.cfg.seed)
@@ -981,6 +1095,8 @@ class DecodeEngine:
             sub = self._sub[n]
             sub.stats = ServeStats(n_requests=len(by_tier[n]))
             sub._t0 = t0
+            sub._step_emits = 0
+            sub._last_emit_t = t0
             if not by_tier[n]:
                 continue
             queue = sub._admission_order(
@@ -1022,11 +1138,13 @@ class DecodeEngine:
                   "prefill_steps", "prefill_tokens", "pool_pages",
                   "draft_steps", "verify_steps", "spec_windows",
                   "draft_tokens", "accepted_tokens", "est_pj",
-                  "measured_pj"):
+                  "measured_pj", "megasteps", "host_syncs",
+                  "dispatch_wait_s"):
             setattr(dst, f, getattr(dst, f) + getattr(src, f))
         dst.peak_resident_pages += src.peak_resident_pages
         dst.peak_active_requests += src.peak_active_requests
         dst.ttft_s.update(src.ttft_s)
+        dst.tok_lat_s.extend(src.tok_lat_s)
         for d_dst, d_src in ((dst.accepted_hist, src.accepted_hist),
                              (dst.packed_widths, src.packed_widths),
                              (dst.phase_rows, src.phase_rows),
@@ -1078,7 +1196,7 @@ class DecodeEngine:
             for s in range(n_slots):
                 if rid[s] >= 0 and not rem[s]:
                     cur_t[s, 0] = cur[s]
-            drafts = np.asarray(self._draft(self._draft_params, cache,
+            drafts = self._pull(self._draft(self._draft_params, cache,
                                             jnp.asarray(cur_t)))
             self.stats.draft_steps += 1
             # the fused scan computes all B slots for k cells regardless
@@ -1109,6 +1227,7 @@ class DecodeEngine:
         for j, tok in enumerate(toks):
             self._first_token(rid[s])
             outputs[rid[s]].append(int(tok))
+            self._step_emits += 1
             left[s] -= 1
             if (left[s] <= 0
                     or (cfg.eos_token is not None
@@ -1135,6 +1254,7 @@ class DecodeEngine:
         left = [0] * n_slots              # completion tokens still owed
         spos = [0] * n_slots              # slot's own cache position
         ema = [1.0] * n_slots             # trailing acceptance (adaptive k)
+        mega = None                       # in-flight dispatched window
 
         while queue or any(r >= 0 for r in rid):
             # admit: reset + refill every free slot from the queue (one
@@ -1187,8 +1307,7 @@ class DecodeEngine:
                     self._phase_params["verify"], cache, jnp.asarray(toks),
                     jnp.asarray(n_new), jnp.asarray(drafts),
                     jnp.asarray(specv))
-                greedy = np.asarray(greedy)
-                n_acc = np.asarray(n_acc)
+                greedy, n_acc = self._pull(greedy, n_acc)
                 self.stats.steps += 1
                 self.stats.verify_steps += 1
                 self._note_rows("verify", sum(
@@ -1228,6 +1347,75 @@ class DecodeEngine:
                     else:
                         spos[s] += acc + 1
                         cur[s] = emitted[-1]
+                self._flush_tok_lat()
+                yield
+                continue
+
+            # fused megastep: every live slot is past its prompt — run
+            # up to sync_every decode steps in ONE dispatch (see
+            # models/decode_loop), syncing once per window. With
+            # pending admissions the window flushes on the first
+            # retirement (greedy only: that is exactly the step
+            # boundary the single-step scheduler admits at, so output
+            # stays byte-identical); sampled runs with a pending queue
+            # stay single-step to keep the shared RNG stream aligned.
+            if (self._mega is not None and self._spec is None
+                    and any(r >= 0 for r in rid)
+                    and not any(rem[s] for s in range(n_slots)
+                                if rid[s] >= 0)
+                    and (not queue or cfg.temperature <= 0.0)):
+                if mega is None:
+                    cur_a = np.zeros((n_slots, 1), np.int32)
+                    pos_a = np.zeros((n_slots,), np.int32)
+                    left_a = np.zeros((n_slots,), np.int32)
+                    done_a = np.ones((n_slots,), bool)
+                    for s in range(n_slots):
+                        if rid[s] >= 0:
+                            cur_a[s, 0] = cur[s]
+                            pos_a[s] = spos[s]
+                            left_a[s] = left[s]
+                            done_a[s] = False
+                    mega, cache = self._mega(
+                        self._phase_params["decode"], cache,
+                        jnp.asarray(cur_a), jnp.asarray(pos_a),
+                        jnp.asarray(left_a), jnp.asarray(done_a), key,
+                        jnp.asarray(bool(queue)))
+                (ring_d, nem_d, done_d, cur_d, pos_d, left_d, key,
+                 ns_d) = mega
+                mega = None
+                if not queue:
+                    # dispatch-ahead double buffering: no admissions
+                    # are possible, so the returned carry IS the next
+                    # window's input — launch it before syncing this
+                    # one (host emission overlaps device compute; a
+                    # window dispatched past the last live slot runs
+                    # zero iterations and is simply abandoned)
+                    mega, cache = self._mega(
+                        self._phase_params["decode"], cache, cur_d,
+                        pos_d, left_d, done_d, key, jnp.asarray(False))
+                ring, nem, done_h, ns = self._pull(ring_d, nem_d,
+                                                   done_d, ns_d)
+                tot = 0
+                for s in range(n_slots):
+                    if rid[s] < 0:
+                        continue
+                    k = int(nem[s])
+                    tot += k
+                    for t in ring[s, :k]:
+                        self._first_token(rid[s])
+                        outputs[rid[s]].append(int(t))
+                        self._step_emits += 1
+                    spos[s] += k
+                    left[s] -= k
+                    if done_h[s]:
+                        rid[s] = -1       # retire; refill next step
+                    elif k:
+                        cur[s] = int(ring[s, k - 1])
+                self.stats.steps += int(ns)
+                self.stats.megasteps += 1
+                self.stats.active_slot_steps += tot
+                self._note_rows("decode", tot)
+                self._flush_tok_lat()
                 yield
                 continue
 
@@ -1266,7 +1454,7 @@ class DecodeEngine:
                                            cache, jnp.asarray(toks))
                 self._note_rows("decode",
                                 sum(1 for r in rid if r >= 0))
-            nxt = np.asarray(self._sample(logits, sub))
+            nxt = self._pull(self._sample(logits, sub))
             self.stats.steps += 1
 
             for s in range(n_slots):
@@ -1284,6 +1472,7 @@ class DecodeEngine:
                 tok = int(nxt[s])
                 self._first_token(rid[s])
                 outputs[rid[s]].append(tok)
+                self._step_emits += 1
                 left[s] -= 1
                 if (left[s] <= 0
                         or (cfg.eos_token is not None
@@ -1292,6 +1481,7 @@ class DecodeEngine:
                     rid[s] = -1               # retire; refill next step
                 else:
                     cur[s] = tok
+            self._flush_tok_lat()
             yield
 
     # -- paged scheduler (packed ragged prefill) -----------------------------
@@ -1346,6 +1536,7 @@ class DecodeEngine:
         left = [0] * n_slots
         spos = [0] * n_slots
         ema = [1.0] * n_slots             # trailing acceptance (adaptive k)
+        mega = None                       # in-flight dispatched window
 
         def set_tables(c):
             # the block table may nest under "attn" (hybrid family)
@@ -1456,8 +1647,7 @@ class DecodeEngine:
                     jnp.asarray(slot_v), jnp.asarray(qpos),
                     jnp.asarray(rowidx), jnp.asarray(n_new),
                     jnp.asarray(drafts), jnp.asarray(specv))
-                greedy = np.asarray(greedy)
-                n_acc = np.asarray(n_acc)
+                greedy, n_acc = self._pull(greedy, n_acc)
                 self.stats.steps += 1
                 self.stats.verify_steps += 1
                 self._note_rows("verify", len(tok_l))
@@ -1510,6 +1700,75 @@ class DecodeEngine:
                 if cfg.debug_invariants and not virtual:
                     alloc.assert_invariant(
                         sum(len(p) for p in slot_pages))
+                self._flush_tok_lat()
+                yield
+                continue
+
+            # fused megastep over the paged cache: identical contract to
+            # the contiguous branch (the block tables ride the while
+            # carry unchanged); a retirement frees the slot's pages the
+            # moment the window is consumed. During a dispatch-ahead
+            # window a just-retired slot still writes through its stale
+            # table — harmless by construction: dispatch-ahead requires
+            # an empty queue, so its freed pages are never reallocated
+            # within this generate and no live slot reads them.
+            if (self._mega is not None and self._spec is None
+                    and any(r >= 0 for r in rid)
+                    and not any(rem[s] for s in range(n_slots)
+                                if rid[s] >= 0)
+                    and (not queue or cfg.temperature <= 0.0)):
+                if mega is None:
+                    cur_a = np.zeros((n_slots, 1), np.int32)
+                    pos_a = np.zeros((n_slots,), np.int32)
+                    left_a = np.zeros((n_slots,), np.int32)
+                    done_a = np.ones((n_slots,), bool)
+                    for s in range(n_slots):
+                        if rid[s] >= 0:
+                            cur_a[s, 0] = cur[s]
+                            pos_a[s] = spos[s]
+                            left_a[s] = left[s]
+                            done_a[s] = False
+                    mega, cache = self._mega(
+                        self._phase_params["decode"], cache,
+                        jnp.asarray(cur_a), jnp.asarray(pos_a),
+                        jnp.asarray(left_a), jnp.asarray(done_a), key,
+                        jnp.asarray(bool(queue)))
+                (ring_d, nem_d, done_d, cur_d, pos_d, left_d, key,
+                 ns_d) = mega
+                mega = None
+                if not queue:
+                    mega, cache = self._mega(
+                        self._phase_params["decode"], cache, cur_d,
+                        pos_d, left_d, done_d, key, jnp.asarray(False))
+                ring, nem, done_h, ns = self._pull(ring_d, nem_d,
+                                                   done_d, ns_d)
+                tot = 0
+                for s in range(n_slots):
+                    if rid[s] < 0:
+                        continue
+                    k = int(nem[s])
+                    tot += k
+                    for t in ring[s, :k]:
+                        self._first_token(rid[s])
+                        outputs[rid[s]].append(int(t))
+                        self._step_emits += 1
+                    spos[s] += k
+                    left[s] -= k
+                    if done_h[s]:
+                        rid[s] = -1       # retire: free pages now
+                        alloc.free(slot_pages[s])
+                        slot_pages[s] = []
+                        tables[s, :] = self.num_pages
+                        tables_dirty = tables_dirty or not virtual
+                    elif k:
+                        cur[s] = int(ring[s, k - 1])
+                self.stats.steps += int(ns)
+                self.stats.megasteps += 1
+                self.stats.active_slot_steps += tot
+                self._note_rows("decode", tot)
+                if cfg.debug_invariants and not virtual:
+                    alloc.assert_invariant(sum(len(p) for p in slot_pages))
+                self._flush_tok_lat()
                 yield
                 continue
 
@@ -1566,7 +1825,7 @@ class DecodeEngine:
                                            cache, jnp.asarray(toks))
                 self._note_rows("decode",
                                 sum(1 for r in rid if r >= 0))
-            nxt = np.asarray(self._sample(logits, sub))
+            nxt = self._pull(self._sample(logits, sub))
             self.stats.steps += 1
 
             for s in range(n_slots):
@@ -1581,6 +1840,7 @@ class DecodeEngine:
                 tok = int(nxt[s])
                 self._first_token(rid[s])
                 outputs[rid[s]].append(tok)
+                self._step_emits += 1
                 left[s] -= 1
                 if (left[s] <= 0
                         or (cfg.eos_token is not None
@@ -1595,6 +1855,7 @@ class DecodeEngine:
                     cur[s] = tok
             if cfg.debug_invariants and not virtual:
                 alloc.assert_invariant(sum(len(p) for p in slot_pages))
+            self._flush_tok_lat()
             yield
 
     # -- wave scheduler (parity reference) -----------------------------------
@@ -1630,7 +1891,7 @@ class DecodeEngine:
             key, sub = jax.random.split(key)
             logits, cache = self._step(self._phase_params["decode"],
                                        cache, jnp.asarray(cur))
-            nxt = np.asarray(self._sample(logits, sub))
+            nxt = self._pull(self._sample(logits, sub))
             self.stats.steps += 1
             self.stats.active_slot_steps += sum(not d for d in done)
             self._note_rows("decode", sum(not d for d in done))
@@ -1645,6 +1906,7 @@ class DecodeEngine:
                 tok = int(nxt[s])                     # prompt fully in cache
                 self._first_token(rids[s])
                 outputs[rids[s]].append(tok)
+                self._step_emits += 1
                 left[s] -= 1
                 if left[s] <= 0 or (cfg.eos_token is not None
                                     and tok == cfg.eos_token):
@@ -1652,6 +1914,7 @@ class DecodeEngine:
                 else:
                     cur[s, 0] = tok
             pos += 1
+            self._flush_tok_lat()
             yield
             if pos >= cfg.max_len - 1:
                 break

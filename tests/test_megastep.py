@@ -1,0 +1,196 @@
+"""Fused decode megasteps (``ServeConfig.sync_every > 1``): byte parity
+with the single-step scheduler across families × KV layouts × window
+sizes, EOS mid-window, admission window-flush, census exactness, buffer
+donation, host-sync accounting, and the nearest-rank percentile fix."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve.engine import (DecodeEngine, KVConfig, ServeConfig,
+                                ServeStats, SpecConfig, _percentile)
+
+ARCHS = ["codeqwen1.5-7b",        # dense transformer
+         "granite-moe-1b-a400m",  # MoE
+         "xlstm-1.3b",            # recurrent (ssm)
+         "zamba2-7b",             # hybrid
+         "seamless-m4t-medium"]   # enc-dec
+
+# skewed: more requests than slots so admission happens mid-flight
+PROMPTS = [[5, 9, 2, 7], [1, 2], [3] * 12, [4, 5, 6], [7],
+           [8, 9, 10, 11, 12], [6] * 9, [13, 14]]
+
+
+@pytest.fixture(scope="module")
+def models():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_arch(arch).reduced(n_layers=2, d_model=32, d_ff=64,
+                                         vocab=64)
+            model = build_model(cfg)
+            cache[arch] = (model, model.init(jax.random.key(0)))
+        return cache[arch]
+    return get
+
+
+def _gen(model, params, sync_every, page_size=0, slots=2, max_new=6,
+         **kw):
+    eng = DecodeEngine(model, params, ServeConfig(
+        max_len=48, batch_slots=slots, prefill_chunk=8,
+        sync_every=sync_every, kv=KVConfig(page_size=page_size),
+        debug_invariants=True, **kw))
+    outs = eng.generate(PROMPTS, max_new_tokens=max_new)
+    return outs, eng.stats
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("page_size", [0, 8])
+def test_megastep_byte_parity(models, arch, page_size):
+    """The hard contract: byte-identical greedy completions across
+    megastep boundaries, every family × contiguous/paged KV ×
+    sync_every ∈ {1, 4, 16}."""
+    model, params = models(arch)
+    base, s1 = _gen(model, params, 1, page_size)
+    for n in (4, 16):
+        got, sn = _gen(model, params, n, page_size)
+        assert got == base, f"{arch} ps={page_size} sync_every={n}"
+        assert sn.megasteps > 0
+        assert sn.steps == s1.steps        # logical steps preserved
+        assert sn.host_syncs < s1.host_syncs
+
+
+def test_megastep_spec_mode_stays_single_step(models):
+    """Speculative windows are scheduling events: with spec on the
+    engine never fuses (megasteps == 0) and output still matches the
+    single-step speculative run."""
+    model, params = models("codeqwen1.5-7b")
+    base, _ = _gen(model, params, 1, spec=SpecConfig(k=3, drafter_bits=24))
+    got, st = _gen(model, params, 8, spec=SpecConfig(k=3, drafter_bits=24))
+    assert got == base
+    assert st.megasteps == 0
+
+
+def test_megastep_eos_mid_window(models):
+    """A slot hitting EOS inside a fused window must stop exactly where
+    the single-step loop stops (no tokens past EOS, EOS emitted)."""
+    model, params = models("codeqwen1.5-7b")
+    base, _ = _gen(model, params, 1, eos_token=7, max_new=16)
+    got, st = _gen(model, params, 16, eos_token=7, max_new=16)
+    assert got == base
+    assert st.megasteps > 0
+
+
+def test_megastep_admission_flush(models):
+    """More requests than slots: a retirement inside a window must hand
+    the freed slot back at the same step boundary the single-step
+    scheduler admits at (flush-on-retire), keeping greedy output and
+    the logical step count identical."""
+    model, params = models("codeqwen1.5-7b")
+    base, s1 = _gen(model, params, 1, slots=2, max_new=10)
+    got, st = _gen(model, params, 16, slots=2, max_new=10)
+    assert got == base
+    assert st.steps == s1.steps
+    assert st.megasteps > 0
+
+
+def test_megastep_sampled_parity(models):
+    """temperature > 0: the device loop splits the PRNG key once per
+    iteration exactly like the host loop, so sampled completions are
+    bit-identical too (windows only run when the queue is empty)."""
+    model, params = models("codeqwen1.5-7b")
+    base, _ = _gen(model, params, 1, temperature=1.0)
+    got, st = _gen(model, params, 8, temperature=1.0)
+    assert got == base
+    assert st.megasteps > 0
+
+
+@pytest.mark.parametrize("page_size", [0, 8])
+def test_megastep_census_exact(models, page_size):
+    """Measured census (pJ/token) must equal the single-step path — the
+    loop carry threads the per-iteration bit counts exactly."""
+    model, params = models("codeqwen1.5-7b")
+    _, s1 = _gen(model, params, 1, page_size, estimate_energy=True)
+    _, s8 = _gen(model, params, 8, page_size, estimate_energy=True)
+    assert s1.phase_census == s8.phase_census
+    assert s1.measured_pj == s8.measured_pj
+
+
+def test_host_syncs_bounded(models):
+    """host_syncs ≤ logical_steps / sync_every + scheduling events: the
+    fused windows really do collapse the per-token round trips."""
+    model, params = models("codeqwen1.5-7b")
+    _, s1 = _gen(model, params, 1, max_new=16)
+    _, sn = _gen(model, params, 16, max_new=16)
+    assert s1.host_syncs == s1.steps          # one pull per step
+    # schedule events: prefill steps + one flush window per retirement
+    events = sn.prefill_steps + sn.n_requests
+    assert sn.host_syncs <= -(-sn.steps // 16) + events
+    assert sn.megasteps >= 1
+    assert sn.dispatch_wait_s >= 0.0
+    assert sn.host_sched_s >= 0.0
+    assert len(sn.tok_lat_s) == sn.tokens_out
+    assert sn.p99_tok_lat_s >= sn.p50_tok_lat_s >= 0.0
+
+
+def test_cache_donated_no_per_step_copy(models):
+    """Every phase jit donates the KV cache: after a step the input
+    cache's buffers are deleted (XLA reused them in place) — the pool
+    is never copied per dispatch."""
+    model, params = models("codeqwen1.5-7b")
+    eng = DecodeEngine(model, params,
+                       ServeConfig(max_len=48, batch_slots=2))
+    cache = model.init_cache(2, 48)
+    leaves = [x for x in jax.tree.leaves(cache)
+              if hasattr(x, "is_deleted")]
+    toks = jnp.zeros((2, 1), jnp.int32)
+    _, cache2 = eng._step(eng._phase_params["decode"], cache, toks)
+    assert leaves and all(x.is_deleted() for x in leaves)
+    # and the returned cache is immediately usable for the next step
+    _, cache3 = eng._step(eng._phase_params["decode"], cache2, toks)
+    assert jax.tree.leaves(cache3)[0].shape is not None
+
+
+def test_generate_after_generate_memory_stable(models):
+    """Back-to-back generates under debug_invariants: donation keeps
+    the engine from accumulating live pool copies (outputs identical
+    run to run, page accounting intact)."""
+    model, params = models("codeqwen1.5-7b")
+    eng = DecodeEngine(model, params, ServeConfig(
+        max_len=48, batch_slots=2, prefill_chunk=8, sync_every=8,
+        kv=KVConfig(page_size=8), debug_invariants=True))
+    first = eng.generate(PROMPTS, max_new_tokens=6)
+    for _ in range(2):
+        assert eng.generate(PROMPTS, max_new_tokens=6) == first
+
+
+def test_percentile_nearest_rank_regression():
+    """The nearest-rank fix (ceil(q*n) - 1): on a known 100-sample list
+    p99 is the 99th smallest (index 98) and p50 the 50th (index 49) —
+    the old round(q*(n-1)) form returned index 50 for p50 (banker's
+    rounding of 49.5) and biased small-sample percentiles low."""
+    vals = [float(i + 1) for i in range(100)]   # 1.0 .. 100.0
+    st = ServeStats(ttft_s={i: v for i, v in enumerate(vals)})
+    assert st.ttft_percentile(0.99) == 99.0     # ceil(99) - 1 = idx 98
+    assert st.ttft_percentile(0.50) == 50.0     # ceil(50) - 1 = idx 49
+    assert st.ttft_percentile(1.00) == 100.0
+    assert st.ttft_percentile(0.0) == 1.0
+    # small-sample bias: p99 of 10 samples is the max, not the 9th
+    assert _percentile(vals[:10], 0.99) == 10.0
+    assert _percentile([], 0.5) == 0.0
+    st.tok_lat_s = vals[:10]
+    assert st.p99_tok_lat_s == 10.0
+    assert st.p50_tok_lat_s == 5.0
+
+
+def test_sync_every_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(sync_every=0)
+    with pytest.raises(ValueError):
+        ServeConfig(sync_every=4, engine="wave")
+    ServeConfig(sync_every=4)                   # continuous: fine
