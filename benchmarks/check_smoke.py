@@ -55,6 +55,21 @@ Reads the ``BENCH_*.json`` files emitted by ``benchmarks.run`` and fails
   completions (all five families), and the measured fused-census
   pJ/token equal to the single-step path within
   ``ASYNC_CENSUS_RTOL``.
+* serve-burst: bursty-traffic hardening — at a pool too small for the
+  workload's worst case, lazy page growth + preemption must hold >=
+  ``MIN_BURST_CONCURRENCY`` x the concurrent requests of worst-case
+  reservation with byte-identical greedy completions (both arms and an
+  ample-pool reference); poison requests (expired ``deadline_s=0`` TTFT
+  SLA, a budget needing more pages than the whole pool) must retire as
+  ``shed_deadline`` / ``shed_capacity`` statuses — never a raise —
+  while the rest of the batch completes byte-identically; every engine
+  runs ``debug_invariants=True`` so a page/swap-ledger accounting
+  violation fails the bench itself. Against the committed baseline the
+  open-loop Poisson arm's p99 TTFT may grow at most
+  ``BURST_TTFT_BASELINE_RATIO`` x (wall clock — wide tolerance),
+  goodput fraction must keep ``MIN_BURST_GOODPUT_OF_BASE`` of the
+  recorded value and shed rate may exceed it by at most
+  ``BURST_SHED_RATE_EPS`` (both status-determined — tight).
 * kernels-paged: the multi-page paged-attention blocking must fill the
   MXU tile at small page sizes (KV grid trips at ``page_size=8 x
   pages_per_block=16`` == the ``page_size=128`` reference; paged serve
@@ -107,6 +122,15 @@ MIN_ASYNC_SPEEDUP = 1.3            # fused megasteps (sync_every=32) vs
 #                                    the sync-every-token loop, tokens/s
 ASYNC_CENSUS_RTOL = 1e-6           # measured pJ/token, megastep vs
 #                                    single-step (exact by construction)
+MIN_BURST_CONCURRENCY = 1.5        # lazy+preempt peak concurrent reqs vs
+#                                    worst-case reservation, fixed pool
+MAX_BURST_P99_TTFT_MS = 60_000.0   # open-loop p99 TTFT sanity ceiling
+BURST_TTFT_BASELINE_RATIO = 3.0    # p99 TTFT vs committed baseline
+#                                    (wall clock on shared CI runners)
+BURST_TTFT_ABS_FLOOR_MS = 250.0    # ignore ratio blowups below this —
+#                                    a 5 ms baseline tripling is noise
+MIN_BURST_GOODPUT_OF_BASE = 0.9    # goodput fraction vs baseline
+BURST_SHED_RATE_EPS = 0.05         # shed rate may exceed baseline by
 MAX_DISPATCH_RATIO = 0.25          # batched <= serial / 4
 MAX_DYNAMIC_EXTRA_DISPATCHES = 2   # dynamic objective <= static + 2
 DYNAMIC_HOST_DEVICE_RTOL = 1e-6
@@ -341,6 +365,67 @@ def check_serve_async(path: str) -> list:
     return errs
 
 
+def check_serve_burst(path: str) -> list:
+    rows = _rows(path)
+    errs = []
+    res = rows["serve_burst_reservation"]
+    conc = float(_field(res, "concurrency").rstrip("x"))
+    if conc < MIN_BURST_CONCURRENCY:
+        errs.append(f"burst-serve concurrency regression: lazy+preempt "
+                    f"held {conc:.2f}x < {MIN_BURST_CONCURRENCY}x the "
+                    "worst-case reservation's concurrent requests at a "
+                    "fixed pool")
+    if _field(res, "parity") != "True":
+        errs.append("burst-serve parity regression: lazy+preempt (or "
+                    "worst-case) completions diverged from the "
+                    "ample-pool reference under forced preemption")
+    shed = rows["serve_burst_shed"]
+    if _field(shed, "statuses_ok") != "True":
+        errs.append("burst-serve structured-failure regression: poison "
+                    "requests did not retire as shed_deadline/"
+                    "shed_capacity with the rest of the batch "
+                    "byte-identical")
+    if int(_field(shed, "shed_deadline")) < 1 \
+            or int(_field(shed, "shed_capacity")) < 1:
+        errs.append("burst-serve shed regression: the deadline/capacity "
+                    "poison requests were not shed (a scheduler path "
+                    "raised or silently dropped them?)")
+    p99 = float(_field(rows["serve_burst_open"], "p99_ttft_ms"))
+    if p99 > MAX_BURST_P99_TTFT_MS:
+        errs.append(f"burst-serve p99 TTFT insane: {p99:.0f} ms > "
+                    f"{MAX_BURST_P99_TTFT_MS:.0f} ms on the open-loop "
+                    "workload")
+    return errs
+
+
+def check_burst_baseline(path: str, base_path: str) -> list:
+    """serve-burst's own baseline gates, beyond the generic
+    BASELINE_GATES sweep: p99 TTFT is wall clock (wide ratio +
+    absolute floor), goodput/shed-rate are status-determined (tight,
+    additive eps for the zero-shed baseline)."""
+    rows, base = _rows(path), _rows(base_path)
+    errs = []
+    cur, prev = rows["serve_burst_open"], base["serve_burst_open"]
+    p99, p99b = (float(_field(r, "p99_ttft_ms")) for r in (cur, prev))
+    limit = max(p99b * BURST_TTFT_BASELINE_RATIO,
+                BURST_TTFT_ABS_FLOOR_MS)
+    if p99 > limit:
+        errs.append(f"burst-serve p99 TTFT regressed vs baseline: "
+                    f"{p99:.0f} ms > max({p99b:.0f} * "
+                    f"{BURST_TTFT_BASELINE_RATIO}, "
+                    f"{BURST_TTFT_ABS_FLOOR_MS:.0f}) ms")
+    good, goodb = (float(_field(r, "goodput_frac")) for r in (cur, prev))
+    if good < goodb * MIN_BURST_GOODPUT_OF_BASE:
+        errs.append(f"burst-serve goodput regressed vs baseline: "
+                    f"{good:.3f} < {goodb:.3f} * "
+                    f"{MIN_BURST_GOODPUT_OF_BASE}")
+    shed, shedb = (float(_field(r, "shed_rate")) for r in (cur, prev))
+    if shed > shedb + BURST_SHED_RATE_EPS:
+        errs.append(f"burst-serve shed rate regressed vs baseline: "
+                    f"{shed:.3f} > {shedb:.3f} + {BURST_SHED_RATE_EPS}")
+    return errs
+
+
 def check_kernels_paged(path: str) -> list:
     rows = _rows(path)
     errs = []
@@ -436,6 +521,7 @@ def main() -> None:
               ("BENCH_serve-spec.json", check_serve_spec),
               ("BENCH_serve-policy.json", check_serve_policy),
               ("BENCH_serve-async.json", check_serve_async),
+              ("BENCH_serve-burst.json", check_serve_burst),
               ("BENCH_kernels-paged.json", check_kernels_paged)]
     errs = []
     for fname, fn in checks:
@@ -448,6 +534,8 @@ def main() -> None:
         base = os.path.join(args.baseline_dir, fname)
         if os.path.exists(base):
             errs.extend(check_baseline(path, base))
+            if fname == "BENCH_serve-burst.json":
+                errs.extend(check_burst_baseline(path, base))
 
     if errs:
         for e in errs:

@@ -54,6 +54,7 @@ def main() -> None:
         ("serve-spec", serve_bench.serve_spec),
         ("serve-policy", serve_bench.serve_policy),
         ("serve-async", serve_bench.serve_async),
+        ("serve-burst", serve_bench.serve_burst),
         ("fig04", paper_figs.fig04_flop_breakdown),
         ("fig05_06", paper_figs.fig05_06_wp_vs_cip),
         ("fig07", paper_figs.fig07_memory_savings),

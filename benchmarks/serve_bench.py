@@ -681,8 +681,139 @@ def serve_async(full: bool = False) -> List[Tuple[str, float, str]]:
     return rows
 
 
+def serve_burst(full: bool = False) -> List[Tuple[str, float, str]]:
+    """Bursty-traffic hardening: lazy page growth + preemption vs the
+    historical worst-case reservation, on a pool deliberately too small
+    for the workload's worst case.
+
+    Three claims, gated downstream (``check_smoke.check_serve_burst``):
+
+    * **Reservation** (deterministic): at a fixed pool the lazy+preempt
+      engine must hold >= ``MIN_BURST_CONCURRENCY`` x the concurrent
+      requests of worst-case reservation, with byte-identical greedy
+      completions (both arms, and vs an ample-pool reference) — resident
+      KV tracks live tokens, not budgets.
+    * **Structured failure** (deterministic): two poison requests — a
+      ``deadline_s=0`` TTFT SLA that expires before admission and a
+      budget whose worst-case pages exceed the whole pool — must retire
+      as ``shed_deadline`` / ``shed_capacity`` statuses while every
+      other request completes byte-identically; nothing raises.
+    * **Open loop** (wall clock): a seeded Poisson arrival stream
+      (``benchmarks.traffic``) with two priority classes reports p99
+      TTFT (relative to each request's arrival), goodput fraction,
+      shed rate and swap traffic; p99 TTFT is baseline-gated with a
+      wide wall-clock tolerance, goodput/shed-rate tightly (they are
+      status-determined, not timing-determined).
+
+    ``debug_invariants=True`` on every engine: each scheduler step
+    asserts free + resident (+ deferred) == pool and the host-side
+    swap ledger matches the queue's restore payloads, so an accounting
+    violation fails the bench itself.
+    """
+    import jax
+    from repro.configs import get_arch
+    from repro.models import build_model
+    from repro.serve import DecodeEngine, ServeConfig
+
+    from benchmarks.traffic import burst_workload
+
+    cfg = get_arch("codeqwen1.5-7b").reduced(n_layers=2, d_model=32,
+                                             d_ff=64, vocab=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    n_req = 24 if full else 16
+    seed = 0
+    reqs = burst_workload(n_req, seed=seed)
+    prompts = [r.prompt for r in reqs]
+    budgets = [r.max_new_tokens for r in reqs]
+    prios = [r.priority for r in reqs]
+    arrivals = [r.arrival_s for r in reqs]
+
+    slots, ps, pool = 4, 8, 8      # pool < slots * worst-case pages
+
+    def build(reserve: str, preempt: bool, pages: int = pool):
+        return DecodeEngine(model, params, ServeConfig(
+            max_len=72, batch_slots=slots, engine="continuous",
+            prefill_chunk=8, page_size=ps, kv_pages=pages,
+            sync_every=8, reserve=reserve, preempt=preempt,
+            debug_invariants=True))
+
+    # -- reservation arms: closed loop (all requests at t=0) so peak
+    #    concurrency and completions are schedule-deterministic
+    ample = build("lazy", True, pages=64)
+    ample.generate(prompts[:slots], max_new_tokens=4)   # compile warmup
+    ref = ample.generate(prompts, max_new_tokens=budgets,
+                         priority=prios)
+    worst = build("worst_case", False)
+    worst_out = worst.generate(prompts, max_new_tokens=budgets,
+                               priority=prios)
+    lazy = build("lazy", True)
+    lazy_out = lazy.generate(prompts, max_new_tokens=budgets,
+                             priority=prios)
+    peak_w = worst.stats.peak_active_requests
+    peak_l = lazy.stats.peak_active_requests
+    gain = peak_l / max(peak_w, 1)
+    parity = lazy_out == worst_out == ref
+
+    # -- structured failure: poison the lazy arm with an expired
+    #    deadline and an unplaceable budget; the rest must not notice
+    poison_prompts = prompts + [[1, 2, 3], [4] * 12]
+    poison_budgets = budgets + [8, 64]      # 64: ceil((7+64)/8) = 9 > 8
+    poison_dl = [None] * n_req + [0.0, None]
+    shed_eng = build("lazy", True)
+    shed_out = shed_eng.generate(poison_prompts,
+                                 max_new_tokens=poison_budgets,
+                                 priority=prios + [0, 0],
+                                 deadline_s=poison_dl)
+    st = shed_eng.stats
+    statuses_ok = (
+        st.status.get(n_req) == "shed_deadline"
+        and st.status.get(n_req + 1) == "shed_capacity"
+        and shed_out[:n_req] == lazy_out
+        and shed_out[n_req] == [] and shed_out[n_req + 1] == []
+        and all(st.status[i] == "ok" or st.status[i].startswith("preempt")
+                for i in range(n_req)))
+
+    # -- open loop: the seeded Poisson stream, arrivals honored
+    open_eng = build("lazy", True)
+    t0 = time.perf_counter()
+    open_eng.generate(prompts, max_new_tokens=budgets, priority=prios,
+                      arrival_s=arrivals)
+    dt = time.perf_counter() - t0
+    so = open_eng.stats
+    ttfts = sorted(so.ttft_s[i] - arrivals[i]
+                   for i in so.ttft_s)
+    p99 = ttfts[min(len(ttfts) - 1,
+                    int(0.99 * (len(ttfts) - 1)))] if ttfts else 0.0
+    goodput_frac = so.goodput_tokens / max(so.tokens_out, 1)
+
+    return [
+        ("serve_burst_open", dt * 1e6,
+         f"toks_per_s={so.tokens_out / dt:.1f};"
+         f"p99_ttft_ms={p99 * 1e3:.1f};"
+         f"goodput_frac={goodput_frac:.3f};"
+         f"shed_rate={so.shed_rate:.3f};"
+         f"preemptions={so.preemptions};"
+         f"swap_mb={(so.swap_out_bytes + so.swap_in_bytes) / 1e6:.3f};"
+         f"seed={seed};n_requests={n_req}"),
+        ("serve_burst_reservation", 0.0,
+         f"concurrency={gain:.2f}x;peak_lazy={peak_l};"
+         f"peak_worst={peak_w};parity={parity};"
+         f"preemptions={lazy.stats.preemptions};pool={pool};"
+         f"pages_worst_case={slots * 5}"),
+        ("serve_burst_shed", 0.0,
+         f"statuses_ok={statuses_ok};"
+         f"shed_deadline={st.shed_deadline};"
+         f"shed_capacity={st.shed_capacity};"
+         f"goodput_frac={st.goodput_tokens / max(st.tokens_out, 1):.3f};"
+         f"invariants=on;no_raise=True"),
+    ]
+
+
 if __name__ == "__main__":
     for name, us, derived in (serve_throughput() + serve_prefill()
                               + serve_paged() + serve_spec()
-                              + serve_policy() + serve_async()):
+                              + serve_policy() + serve_async()
+                              + serve_burst()):
         print(f"{name},{us:.0f},{derived}")

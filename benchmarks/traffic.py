@@ -1,0 +1,24 @@
+"""Bench-side traffic surface: re-exports the seeded open-loop
+generator from :mod:`repro.serve.traffic` (the implementation lives in
+``src`` so the launcher can import it too) and adds the canned burst
+workloads the ``serve-burst`` bench and its CI gates run against."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.serve.traffic import (TrafficConfig, TrafficRequest,  # noqa: F401
+                                 generate_traffic)
+
+
+def burst_workload(n_requests: int, seed: int = 0,
+                   rate_rps: float = 200.0) -> List[TrafficRequest]:
+    """The serve-burst open-loop workload: Poisson arrivals fast enough
+    that the queue builds real depth on a tiny CPU model, long-tail
+    prompt lengths, two priority classes. Deadlines are NOT drawn here —
+    the bench injects deterministic poison requests instead, so the
+    gated shed counts never depend on wall clock."""
+    return generate_traffic(TrafficConfig(
+        n_requests=n_requests, seed=seed, process="poisson",
+        rate_rps=rate_rps, prompt_mean=5.0, prompt_sigma=0.5,
+        prompt_max=12, decode_mean=20.0, decode_sigma=0.3,
+        decode_max=24, vocab=64, priority_weights=(3.0, 1.0)))

@@ -20,6 +20,13 @@ Precision flows through ONE surface — a
 ``--continuous`` (default) refills slots mid-flight from the queue;
 ``--wave`` keeps the historical wave scheduler (slots refill only
 between waves).
+
+Bursty-traffic knobs: ``--arrivals poisson:RATE`` / ``--arrivals
+diurnal`` replays a seeded open-loop workload (requests arrive over
+wall time instead of all at t=0); ``--deadline-s`` sheds requests
+whose TTFT SLA expires while queued; ``--priority P0,P1,...`` admits
+(and, unless ``--no-preempt``, preempts) higher classes first. Shed /
+preemption / swap-traffic totals print in the report.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ from repro.core.policy import PrecisionPolicy
 from repro.models import build_model
 from repro.serve.engine import (DecodeEngine, KVConfig, ServeConfig,
                                 SpecConfig)
+from repro.serve.traffic import TrafficConfig, generate_traffic
 
 
 def _parse_policy(spec: str) -> PrecisionPolicy:
@@ -113,6 +121,27 @@ def main() -> None:
     ap.add_argument("--spec-adaptive", action="store_true",
                     help="scale each slot's draft budget by its "
                          "trailing acceptance rate")
+    ap.add_argument("--arrivals", default=None,
+                    help="open-loop arrival process: poisson:RATE "
+                         "(requests/s) or diurnal (thinned sinusoid); "
+                         "default = closed-loop, everything at t=0. "
+                         "Replaces --prompts' synthetic prompts with a "
+                         "seeded traffic workload of the same size")
+    ap.add_argument("--traffic-seed", type=int, default=0,
+                    help="seed naming the --arrivals workload exactly")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="TTFT deadline per request (seconds from its "
+                         "arrival); expired queued requests are shed "
+                         "with status shed_deadline instead of served")
+    ap.add_argument("--priority", default=None,
+                    help="comma-separated per-request priority classes "
+                         "(higher admits/preempts first), cycled over "
+                         "the request list; e.g. 1,0,0")
+    ap.add_argument("--no-preempt", dest="preempt", action="store_false",
+                    default=True,
+                    help="disable preemption: pool pressure stalls (or "
+                         "as a last resort sheds) instead of swapping "
+                         "the lowest-priority slot to host")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -166,23 +195,56 @@ def main() -> None:
                                       spec=spec, tiers=tiers,
                                       tier_floor=args.tier_floor,
                                       tier_backlog=args.tier_backlog,
+                                      preempt=args.preempt,
                                       estimate_energy=args.estimate_energy),
                           policy=policy)
     prompts = [[(7 * i + 3) % cfg.vocab_size for _ in range(4)]
                for i in range(args.prompts)]
+    max_new = args.max_new
+    arrivals = priorities = None
+    if args.arrivals:
+        proc, _, rate = args.arrivals.partition(":")
+        if proc not in ("poisson", "diurnal"):
+            ap.error(f"--arrivals {args.arrivals!r}: process must be "
+                     "poisson[:RATE] or diurnal")
+        traffic = generate_traffic(TrafficConfig(
+            n_requests=args.prompts, seed=args.traffic_seed, process=proc,
+            rate_rps=float(rate) if rate else 8.0, vocab=cfg.vocab_size,
+            decode_max=args.max_new,
+            priority_weights=(3.0, 1.0) if args.priority is None else (1.0,)))
+        prompts = [t.prompt for t in traffic]
+        max_new = [t.max_new_tokens for t in traffic]
+        arrivals = [t.arrival_s for t in traffic]
+        priorities = [t.priority for t in traffic]
+        print(f"[serve] traffic: {proc} seed={args.traffic_seed} "
+              f"span={arrivals[-1]:.2f}s")
+    if args.priority is not None:
+        classes = [int(p) for p in args.priority.split(",")]
+        priorities = [classes[i % len(classes)]
+                      for i in range(args.prompts)]
+    deadlines = args.deadline_s
     tier_of = None
     if tiers:
         names = list(tiers)
         tier_of = [names[i % len(names)] for i in range(args.prompts)]
-    outs = engine.generate(prompts, max_new_tokens=args.max_new,
-                           tiers=tier_of)
+    outs = engine.generate(prompts, max_new_tokens=max_new,
+                           tiers=tier_of, priority=priorities,
+                           deadline_s=deadlines, arrival_s=arrivals)
     for i, o in enumerate(outs):
-        print(f"[serve] prompt {i}: {len(o)} tokens -> {o[:8]}...")
+        status = engine.stats.status.get(i, "ok")
+        print(f"[serve] prompt {i}: {len(o)} tokens -> {o[:8]}... "
+              f"[{status}]")
     st = engine.stats
     print(f"[serve] engine={args.engine} steps={st.steps} "
           f"occupancy={st.occupancy:.2f} tokens={st.tokens_out} "
           f"prefill_tokens={st.prefill_tokens} "
           f"mean_ttft={st.mean_ttft_s * 1e3:.1f}ms")
+    print(f"[serve] hardening: shed_deadline={st.shed_deadline} "
+          f"shed_capacity={st.shed_capacity} "
+          f"preemptions={st.preemptions} "
+          f"swap_out={st.swap_out_bytes / 2 ** 20:.2f}MB "
+          f"swap_in={st.swap_in_bytes / 2 ** 20:.2f}MB "
+          f"goodput_tokens={st.goodput_tokens}")
     print(f"[serve] host/device: host_syncs={st.host_syncs} "
           f"megasteps={st.megasteps} "
           f"dispatch_wait={st.dispatch_wait_s * 1e3:.1f}ms "

@@ -295,6 +295,62 @@ def reset_kv_cache(cache, mask: jnp.ndarray):
     return {"layers": layers, "pos": jnp.where(mask, 0, cache["pos"])}
 
 
+def snapshot_kv_slot(cache, s: int, live: int, pages):
+    """Gather slot ``s``'s KV to a host-side pytree (preemption swap-out).
+
+    Paged layouts gather the slot's content ``pages`` out of every layer
+    pool (block-table-resolved page ids → ``(n, ps, KV, Dh)`` per
+    layer). Contiguous layouts copy the slot's full cache row — entries
+    past ``live`` are junk the per-slot ``kv_len``/causal masks already
+    hide, so restoring them verbatim is harmless and needs no slicing
+    bookkeeping. Handles both layer layouts: list of per-layer dicts and
+    the ``scan_layers`` stacked dict (leading L axis)."""
+    lyr = cache["layers"]
+    if is_paged(cache):
+        idx = jnp.asarray(list(pages), jnp.int32)
+        if isinstance(lyr, dict):       # stacked: (L, P, ps, KV, Dh)
+            snap = {k: v[:, idx] for k, v in lyr.items()}
+        else:                           # list of (P, ps, KV, Dh) pools
+            snap = [{k: v[idx] for k, v in lc.items()} for lc in lyr]
+    else:
+        if isinstance(lyr, dict):       # stacked: (L, B, S, KV, Dh)
+            snap = {k: v[:, s] for k, v in lyr.items()}
+        else:                           # list of (B, S, KV, Dh)
+            snap = [{k: v[s] for k, v in lc.items()} for lc in lyr]
+    return jax.device_get(snap)
+
+
+def restore_kv_slot(cache, s: int, live: int, pages, snap):
+    """Write a :func:`snapshot_kv_slot` payload back (preemption
+    swap-in): paged layouts scatter into the slot's *new* page ids
+    (``pages`` — same count, possibly different physical pages),
+    contiguous ones overwrite the slot's row; either way the slot's
+    position is set to ``live``. Eager (un-jitted) ops — swaps are rare
+    and off the steady-state step path."""
+    cache = dict(cache)
+    lyr = cache["layers"]
+    if is_paged(cache):
+        idx = jnp.asarray(list(pages), jnp.int32)
+        if isinstance(lyr, dict):
+            lyr = {k: v.at[:, idx].set(jnp.asarray(snap[k], v.dtype))
+                   for k, v in lyr.items()}
+        else:
+            lyr = [{k: v.at[idx].set(jnp.asarray(sl[k], v.dtype))
+                    for k, v in lc.items()}
+                   for lc, sl in zip(lyr, snap)]
+    else:
+        if isinstance(lyr, dict):
+            lyr = {k: v.at[:, s].set(jnp.asarray(snap[k], v.dtype))
+                   for k, v in lyr.items()}
+        else:
+            lyr = [{k: v.at[s].set(jnp.asarray(sl[k], v.dtype))
+                    for k, v in lc.items()}
+                   for lc, sl in zip(lyr, snap)]
+    cache["layers"] = lyr
+    cache["pos"] = cache["pos"].at[s].set(live)
+    return cache
+
+
 def _broadcast_pos(pos, batch: int) -> jnp.ndarray:
     """Accept scalar (lockstep) or (B,) per-slot positions."""
     pos = jnp.asarray(pos, jnp.int32)

@@ -146,6 +146,24 @@ def reset_slots(cfg: ModelConfig, cache, mask):
     return new
 
 
+def snapshot_slot(cfg: ModelConfig, cache, s: int, live: int, pages):
+    """Preemption swap-out: decoder self-attn KV via the generic gather
+    plus the slot's cached encoder memory."""
+    return {
+        "core": attn_mod.snapshot_kv_slot(cache, s, live, pages),
+        "memory": jax.device_get(cache["memory"][s]),
+    }
+
+
+def restore_slot(cfg: ModelConfig, cache, s: int, live: int, pages, snap):
+    """Preemption swap-in: the generic helper rebuilds the KV/pos half
+    (and preserves extra keys), then the encoder memory is re-attached."""
+    cache = attn_mod.restore_kv_slot(cache, s, live, pages, snap["core"])
+    cache["memory"] = cache["memory"].at[s].set(
+        jnp.asarray(snap["memory"], cache["memory"].dtype))
+    return cache
+
+
 def _chunk_logits(params, cache, tokens, n_new, memory,
                   cfg: ModelConfig):
     """Shared (B, C)-chunk decoder trunk (self-attn via the ``q_start``

@@ -181,6 +181,32 @@ def reset_slots(cfg: ModelConfig, cache, mask):
     }
 
 
+def snapshot_slot(cfg: ModelConfig, cache, s: int, live: int, pages):
+    """Preemption swap-out: dense Mamba state + residual carry by batch
+    slice, attention KV via the generic paged/contiguous gather."""
+    return {
+        "mamba": jax.device_get(
+            jax.tree.map(lambda v: v[s], cache["mamba"])),
+        "x0": jax.device_get(cache["x0"][s]),
+        "attn": attn_mod.snapshot_kv_slot(cache["attn"], s, live, pages),
+    }
+
+
+def restore_slot(cfg: ModelConfig, cache, s: int, live: int, pages, snap):
+    """Preemption swap-in: writes both the outer and the nested
+    attention-core position (the attn core tracks its own ``pos``)."""
+    cache = dict(cache)
+    cache["mamba"] = jax.tree.map(
+        lambda v, sl: v.at[s].set(jnp.asarray(sl, v.dtype)),
+        cache["mamba"], snap["mamba"])
+    cache["x0"] = cache["x0"].at[s].set(
+        jnp.asarray(snap["x0"], cache["x0"].dtype))
+    cache["attn"] = attn_mod.restore_kv_slot(cache["attn"], s, live,
+                                             pages, snap["attn"])
+    cache["pos"] = cache["pos"].at[s].set(live)
+    return cache
+
+
 @tag_phase("prefill")
 def prefill_chunk(params, cache, tokens, n_new, cfg: ModelConfig):
     """Chunked prefill: the Mamba backbone is stateful per token, so the

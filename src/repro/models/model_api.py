@@ -50,6 +50,15 @@ class Model:
     #: pos, left, key, steps_run), cache) — up to n_steps decode steps
     #: in one jitted while_loop, host syncs once per window
     decode_loop: Callable = None
+    #: preemption swap-out: (cache, slot, live, pages) -> host pytree of
+    #: the slot's first ``live`` tokens of KV/state — paged families
+    #: gather the listed pages out of each layer pool, contiguous ones
+    #: copy the slot's cache rows, recurrent ones snapshot dense state
+    snapshot_slot: Callable = None
+    #: preemption swap-in: (cache, slot, live, pages, snap) -> cache with
+    #: the snapshot written back (into the slot's *new* pages for paged
+    #: layouts) and the slot's position set to ``live``
+    restore_slot: Callable = None
     #: True when init_paged_cache really pages KV (block tables present),
     #: i.e. the engine's page allocator governs this family's memory
     paged_kv: bool = False
@@ -89,6 +98,10 @@ def build_model(cfg: ModelConfig) -> Model:
         decode_loop=lambda p, c, cur, pos, left, done, key, flush, **kw:
             mod.decode_loop(p, c, cur, pos, left, done, key, flush, cfg,
                             **kw),
+        snapshot_slot=lambda c, s, live, pages: mod.snapshot_slot(
+            cfg, c, s, live, pages),
+        restore_slot=lambda c, s, live, pages, snap: mod.restore_slot(
+            cfg, c, s, live, pages, snap),
         paged_kv=fam != "ssm",
     )
 

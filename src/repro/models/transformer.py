@@ -165,6 +165,18 @@ def reset_slots(cfg: ModelConfig, cache, mask):
     return attn_mod.reset_kv_cache(cache, mask)
 
 
+def snapshot_slot(cfg: ModelConfig, cache, s: int, live: int, pages):
+    """Preemption swap-out: gather slot ``s``'s KV to host (the generic
+    helper handles list / scan-stacked and paged / contiguous forms)."""
+    return attn_mod.snapshot_kv_slot(cache, s, live, pages)
+
+
+def restore_slot(cfg: ModelConfig, cache, s: int, live: int, pages, snap):
+    """Preemption swap-in: write the snapshot back into the slot's new
+    pages (or cache row) and set its position to ``live``."""
+    return attn_mod.restore_kv_slot(cache, s, live, pages, snap)
+
+
 def _decode_block(layer, lc, x, pos, cfg: ModelConfig, i: int,
                   moe_impl: str, block_tables=None):
     with pscope(f"layer{i:02d}" if not cfg.scan_layers else "layer"):

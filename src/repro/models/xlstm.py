@@ -337,6 +337,24 @@ def reset_slots(cfg: ModelConfig, cache, mask):
     return {"blocks": blocks, "pos": jnp.where(mask, 0, cache["pos"])}
 
 
+def snapshot_slot(cfg: ModelConfig, cache, s: int, live: int, pages):
+    """Preemption swap-out: the recurrent state is dense and per-slot —
+    every leaf carries a leading batch axis, so slot ``s``'s state is
+    the ``[s]`` slice of each (no pages involved)."""
+    del pages
+    return jax.device_get(jax.tree.map(lambda v: v[s], cache["blocks"]))
+
+
+def restore_slot(cfg: ModelConfig, cache, s: int, live: int, pages, snap):
+    """Preemption swap-in: scatter the dense snapshot back into slot
+    ``s`` and set its position to ``live``."""
+    del pages
+    blocks = jax.tree.map(
+        lambda v, sl: v.at[s].set(jnp.asarray(sl, v.dtype)),
+        cache["blocks"], snap)
+    return {"blocks": blocks, "pos": cache["pos"].at[s].set(live)}
+
+
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
                      page_size: int, num_pages: int):
     """A pure recurrent stack has no KV length axis to page — the dense

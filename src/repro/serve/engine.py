@@ -151,6 +151,36 @@ class SpecConfig:
     draft_params: Optional[object] = None
 
 
+#: default for ``ServeConfig.debug_invariants`` when the field is left
+#: None — the test-suite conftest flips this to True so the page-pool
+#: accounting invariant runs on every scheduler step in tier-1
+DEBUG_INVARIANTS_DEFAULT = False
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued serving request as the schedulers see it.
+
+    ``tail`` is the cache-truncated prompt tail still to ingest;
+    ``budget`` the remaining completion allowance at submit time.
+    ``priority`` orders admission (higher first) and shields a slot from
+    preemption by lower-priority work; ``deadline_s`` is a TTFT SLA
+    relative to ``arrival_s`` (both relative to generate() start) — a
+    request still *queued* past its deadline is shed with status
+    ``shed_deadline`` (a running slot is never shed on deadline: it has
+    its first token by definition). ``restore`` is the preemption swap
+    payload: the slot's host-gathered KV/dense state plus its scheduler
+    registers, written back verbatim on re-admission."""
+    rid: int
+    tail: List[int]
+    budget: int
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    arrival_s: float = 0.0
+    preempts: int = 0
+    restore: Optional[dict] = None
+
+
 @dataclasses.dataclass
 class KVConfig:
     """KV-cache memory layout for the continuous engine.
@@ -229,8 +259,28 @@ class ServeConfig:
     #: Requires the continuous engine and greedy (temperature 0).
     spec: Optional[SpecConfig] = None
     #: assert the page-pool accounting invariant (free + resident ==
-    #: total) after every step — cheap, host-side; meant for tests
-    debug_invariants: bool = False
+    #: total, swapped-out count consistent) after every step — cheap,
+    #: host-side; None defers to the module default (the test-suite
+    #: conftest turns it on for every tier-1 engine)
+    debug_invariants: Optional[bool] = None
+    #: paged admission reservation: "lazy" reserves only the prompt's
+    #: pages plus one decode page (the scheduler grows the slot at page
+    #: boundaries, preempting if the pool is empty), "worst_case" the
+    #: historical full ``ceil((tail + budget) / page_size)`` up front
+    #: (growth never triggers; backpressure blocks admission instead)
+    reserve: str = "lazy"
+    #: allow the scheduler to preempt the lowest-priority / most-
+    #: recently-admitted slot (KV swapped to host, request re-queued
+    #: with a restore payload) when growth finds the pool empty or a
+    #: higher-priority request cannot be placed. False falls back to
+    #: stalling (and, as a last resort, shedding) instead.
+    preempt: bool = True
+    #: fault injection for tests/benches: request ids forcibly swapped
+    #: out once, as soon as the slot has emitted its first token —
+    #: exercises the snapshot/free/restore path on ANY schedule,
+    #: independent of pool pressure or priority inversions (continuous
+    #: engines only; the wave scheduler never preempts).
+    force_preempt: Sequence[int] = ()
     #: SLA precision tiers: ordered {name: PrecisionPolicy}, best
     #: (most exact / most expensive) first. Non-None partitions
     #: ``batch_slots`` (and the page pool / pack budget) into per-tier
@@ -273,7 +323,12 @@ class ServeConfig:
         self.page_size = self.kv.page_size
         self.kv_pages = self.kv.pages
         self.pack_tokens = self.kv.pack_tokens
+        if self.debug_invariants is None:
+            self.debug_invariants = DEBUG_INVARIANTS_DEFAULT
         # -- validation: catch implicit invalid combos at construction
+        if self.reserve not in ("lazy", "worst_case"):
+            raise ValueError(f"unknown reserve mode {self.reserve!r}; "
+                             "one of ('lazy', 'worst_case')")
         if self.engine not in ("continuous", "wave"):
             raise ValueError(f"unknown engine {self.engine!r}; one of "
                              "('continuous', 'wave')")
@@ -451,6 +506,30 @@ class ServeStats:
         default_factory=dict)
     tier_of: Dict[int, str] = dataclasses.field(default_factory=dict)
     downgraded: int = 0
+    #: production-hardening accounting: structured per-request outcome
+    #: (``ok | shed_deadline | shed_capacity | preempted_n``) instead of
+    #: a raise anywhere in the scheduler
+    status: Dict[int, str] = dataclasses.field(default_factory=dict)
+    shed_deadline: int = 0            # expired while still queued
+    shed_capacity: int = 0            # unplaceable (footprint > pool)
+    preemptions: int = 0              # slots swapped out mid-flight
+    swap_out_bytes: int = 0           # KV/state gathered to host
+    swap_in_bytes: int = 0            # KV/state restored to device
+    #: completion tokens from requests that actually finished (status
+    #: ``ok`` or ``preempted_n``) — shed requests' partial output is
+    #: wasted work and does not count; the serving number that survives
+    #: overload, gated by the serve-burst bench
+    goodput_tokens: int = 0
+
+    @property
+    def shed_rate(self) -> float:
+        """Fraction of submitted requests shed (deadline or capacity)."""
+        return ((self.shed_deadline + self.shed_capacity)
+                / max(self.n_requests, 1))
+
+    @property
+    def goodput_per_s(self) -> float:
+        return self.goodput_tokens / self.wall_s if self.wall_s > 0 else 0.0
 
     @property
     def occupancy(self) -> float:
@@ -521,6 +600,11 @@ class PageAllocator:
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages))
+        #: pages' worth of KV currently swapped out to host buffers
+        #: (preempted requests awaiting re-admission) — the swapped KV
+        #: holds no pool pages, but the invariant cross-checks the
+        #: engine's view of how much is parked on host
+        self.swapped_out = 0
 
     @property
     def free_pages(self) -> int:
@@ -562,15 +646,38 @@ class PageAllocator:
                 f"{need} pages but the slot holds {len(pages)}")
         return need
 
-    def assert_invariant(self, resident: int) -> None:
+    def note_swap_out(self, n: int) -> None:
+        """Record ``n`` pages' worth of KV gathered to host (the pages
+        themselves return to the free list via ``free``)."""
+        self.swapped_out += n
+
+    def note_swap_in(self, n: int) -> None:
+        """Record ``n`` swapped pages restored to (newly allocated) pool
+        pages — or discarded outright when a preempted request is shed
+        before it could resume."""
+        self.swapped_out -= n
+        if self.swapped_out < 0:
+            raise AssertionError(
+                f"swap accounting broken: {n}-page swap-in drove the "
+                "swapped-out count negative")
+
+    def assert_invariant(self, resident: int,
+                         swapped: Optional[int] = None) -> None:
         """``free + resident == total``: every pool page is exactly one
         of free or owned by a live slot. A retire that double-freed
         (e.g. mid-speculation EOS handled twice) or leaked pages trips
-        this."""
+        this. ``swapped`` (when given) additionally cross-checks the
+        engine's count of preempted pages parked in host buffers against
+        the allocator's swap ledger."""
         if len(self._free) + resident != self.num_pages:
             raise AssertionError(
                 f"page accounting broken: {len(self._free)} free + "
                 f"{resident} resident != {self.num_pages} total")
+        if swapped is not None and swapped != self.swapped_out:
+            raise AssertionError(
+                f"swap accounting broken: engine sees {swapped} pages "
+                f"swapped out but the allocator ledger says "
+                f"{self.swapped_out}")
 
 
 def _phase_programs(model: Model, cfg: ServeConfig,
@@ -737,6 +844,7 @@ class DecodeEngine:
                 raise ValueError("pack_tokens must be >= batch_slots "
                                  "(every active slot needs one row)")
         self._spec = cfg.spec
+        self._force_preempt = set(cfg.force_preempt or ())
         self._row_pj_cache: Dict[object, float] = {}
 
         # -- resolve the precision policy: the one surface every legacy
@@ -959,24 +1067,102 @@ class DecodeEngine:
         return min(-(-(tail_len + budget) // self.cfg.page_size),
                    self.max_pages)
 
-    def _admission_order(self, queue: List[tuple]) -> List[tuple]:
-        """Apply the configured admission policy to a (rid, prompt, budget)
-        queue. ``sjf`` sorts by the post-chunking remaining-prefill
-        length — the compiled prefill steps the admitted tail will
-        consume, ``ceil(len / prefill_stride)`` — stably, so chunked
-        prefill doesn't misorder on sub-chunk length differences that
-        cost identical step counts. On the paged engine the sort key is
-        ``(prefill_steps, pages_needed)``: a request's KV-page demand
-        covers its *completion budget* too, so a short-prompt request
-        with a huge ``max_new`` (cheap to prefill, expensive to hold)
-        no longer outranks an equally-cheap request that could actually
-        be admitted — the documented page-availability tie-break."""
+    def _admission_order(self, queue: List["Request"]) -> List["Request"]:
+        """Apply the configured admission policy to a Request queue.
+        Priority always sorts first (higher-priority requests admit —
+        and may preempt — ahead of lower ones; the default 0 leaves the
+        historical ordering untouched). ``sjf`` then sorts by the
+        post-chunking remaining-prefill length — the compiled prefill
+        steps the admitted tail will consume, ``ceil(len /
+        prefill_stride)`` — stably, so chunked prefill doesn't misorder
+        on sub-chunk length differences that cost identical step counts.
+        On the paged engine the sjf key adds ``pages_needed``: a
+        request's KV-page demand covers its *completion budget* too, so
+        a short-prompt request with a huge ``max_new`` (cheap to
+        prefill, expensive to hold) no longer outranks an equally-cheap
+        request that could actually be admitted — the documented
+        page-availability tie-break."""
         if self.cfg.admission == "sjf":
             stride = self._prefill_stride()
-            return sorted(queue, key=lambda e: (
-                -(-len(e[1]) // stride),
-                self._pages_needed(len(e[1]), e[2])))
-        return list(queue)
+            return sorted(queue, key=lambda r: (
+                -r.priority,
+                -(-len(r.tail) // stride),
+                self._pages_needed(len(r.tail), r.budget)))
+        return sorted(queue, key=lambda r: -r.priority)
+
+    def _shed(self, req: "Request", why: str) -> None:
+        """Retire a request with a structured failure status instead of
+        raising — the batch keeps serving."""
+        self.stats.status[req.rid] = why
+        if why == "shed_deadline":
+            self.stats.shed_deadline += 1
+        else:
+            self.stats.shed_capacity += 1
+
+    def _mark_done(self, req: "Request") -> None:
+        """Record a completed request's outcome: ``ok``, or
+        ``preempted_n`` when it was swapped out ``n`` times on the way
+        (still a successful completion — its tokens count as goodput)."""
+        self.stats.status[req.rid] = (
+            "ok" if req.preempts == 0 else f"preempted_{req.preempts}")
+
+    def _poll_queue(self, queue: List["Request"],
+                    alloc: Optional["PageAllocator"] = None
+                    ) -> List["Request"]:
+        """One queue poll: shed requests whose TTFT deadline expired
+        while they were still waiting (a running slot is never shed —
+        it has its first token), and return the arrived, admissible
+        subset. Not-yet-arrived requests stay queued untouched."""
+        now = time.perf_counter() - self._t0
+        ready, waiting = [], []
+        for req in queue:
+            if (req.deadline_s is not None
+                    and now - req.arrival_s > req.deadline_s):
+                if req.restore is not None:
+                    # a preempted request expiring in the queue drops
+                    # its host swap buffer — release the swap ledger
+                    n = req.restore.get("pages_n", 0)
+                    if alloc is not None and n:
+                        alloc.note_swap_in(n)
+                self._shed(req, "shed_deadline")
+            elif now >= req.arrival_s:
+                ready.append(req)
+            else:
+                waiting.append(req)
+        queue[:] = ready + waiting
+        return ready
+
+    def _admit_pages(self, req: "Request") -> int:
+        """Pages admission must secure before the request can occupy a
+        slot. ``worst_case`` reserves the full remaining footprint up
+        front (growth never fires); ``lazy`` reserves only what the
+        first step can touch — the prompt tail's pages plus one decode
+        page for a fresh request, the swapped content plus one page for
+        a restore — and lets growth allocate the rest at page-boundary
+        crossings."""
+        if not (self.paged and self.model.paged_kv):
+            return 0
+        ps = self.cfg.page_size
+        if req.restore is not None:
+            r = req.restore
+            total = r["spos"] + len(req.tail) + r["left"]
+            foot = min(-(-total // ps), self.max_pages)
+            if self.cfg.reserve == "worst_case":
+                return max(foot, r["pages_n"])
+            return max(r["pages_n"], min(r["pages_n"] + 1, foot))
+        foot = self._pages_needed(len(req.tail), req.budget)
+        if self.cfg.reserve == "worst_case":
+            return foot
+        return min(-(-len(req.tail) // ps) + 1, foot)
+
+    def _snapshot(self, cache, s: int, live: int, pages: List[int]):
+        """Gather slot ``s``'s live KV/state to host and count the swap
+        bytes; returns the restore payload's snapshot half."""
+        snap = self.model.snapshot_slot(cache, s, live, pages)
+        nbytes = int(sum(np.asarray(x).nbytes
+                         for x in jax.tree.leaves(snap)))
+        self.stats.swap_out_bytes += nbytes
+        return snap, nbytes
 
     # -- energy accounting ---------------------------------------------------
     def _phase_row_pj(self, phase: str) -> float:
@@ -1011,31 +1197,58 @@ class DecodeEngine:
         pr = self.stats.phase_rows
         pr[phase] = pr.get(phase, 0) + int(n)
 
+    @staticmethod
+    def _per_request(val, n: int, default, name: str) -> list:
+        """Broadcast a scalar (or None) per-request knob to n entries."""
+        if val is None:
+            return [default] * n
+        if isinstance(val, (int, float, np.integer, np.floating)):
+            return [val] * n
+        out = list(val)
+        if len(out) != n:
+            raise ValueError(f"{len(out)} {name} values for {n} prompts")
+        return out
+
     # -- generate ------------------------------------------------------------
     def generate(self, prompts: List[List[int]],
                  max_new_tokens: Union[int, Sequence[int]] = 32,
-                 tiers: Union[None, str, Sequence[str]] = None
-                 ) -> List[List[int]]:
+                 tiers: Union[None, str, Sequence[str]] = None,
+                 priority: Union[None, int, Sequence[int]] = None,
+                 deadline_s=None, arrival_s=None) -> List[List[int]]:
         """Serve a list of token prompts; returns completions per prompt.
         ``max_new_tokens`` is a global ceiling (int) or one budget per
         request. ``tiers`` (tiered engines only) names each request's
         asked SLA class (a str broadcasts; default = the best tier).
-        ``self.stats`` holds step/occupancy/TTFT accounting."""
+        ``priority`` (int, higher admits/preempts first), ``deadline_s``
+        (TTFT SLA relative to the request's arrival) and ``arrival_s``
+        (open-loop arrival offset from the call start) are per-request
+        or broadcast; requests that expire queued or can never fit the
+        KV pool are retired with a structured ``self.stats.status``
+        entry (``shed_deadline`` / ``shed_capacity``) instead of
+        raising. ``self.stats`` holds step/occupancy/TTFT accounting."""
         if self._tiered:
-            return self._generate_tiered(prompts, max_new_tokens, tiers)
+            return self._generate_tiered(prompts, max_new_tokens, tiers,
+                                         priority, deadline_s, arrival_s)
         if tiers is not None:
             raise ValueError("tiers= requires ServeConfig.tiers")
         self.stats = ServeStats(n_requests=len(prompts))
+        self._force_preempt = set(self.cfg.force_preempt or ())
         self._t0 = time.perf_counter()
         self._step_emits = 0
         self._last_emit_t = self._t0
         outputs: dict[int, List[int]] = {i: [] for i in range(len(prompts))}
         budgets = self._budgets(prompts, max_new_tokens)
         key = jax.random.key(self.cfg.seed)
+        n = len(prompts)
+        prios = self._per_request(priority, n, 0, "priority")
+        deads = self._per_request(deadline_s, n, None, "deadline_s")
+        arrs = self._per_request(arrival_s, n, 0.0, "arrival_s")
         # both schedulers admit the cache-truncated prompt tails, so
         # the sjf sort key is computed on the length actually prefilled
         queue = self._admission_order(
-            [(rid, self._prompt_tail(p, budgets[rid]), budgets[rid])
+            [Request(rid=rid, tail=self._prompt_tail(p, budgets[rid]),
+                     budget=budgets[rid], priority=int(prios[rid]),
+                     deadline_s=deads[rid], arrival_s=float(arrs[rid]))
              for rid, p in enumerate(prompts)])
         for _ in self._scheduler(queue, outputs, key):
             pass
@@ -1054,12 +1267,19 @@ class DecodeEngine:
     def _finish_stats(self, outputs) -> None:
         self.stats.slot_steps = self.stats.steps * self.cfg.batch_slots
         self.stats.tokens_out = sum(len(o) for o in outputs.values())
+        st = self.stats.status
+        for rid in outputs:
+            st.setdefault(rid, "ok")
+        self.stats.goodput_tokens = sum(
+            len(o) for rid, o in outputs.items()
+            if st[rid] == "ok" or st[rid].startswith("preempted"))
         self.stats.wall_s = time.perf_counter() - self._t0
         if self.cfg.estimate_energy:
             self.stats.est_pj = self._estimate_energy()
             self._fold_census()
 
-    def _generate_tiered(self, prompts, max_new_tokens, tiers
+    def _generate_tiered(self, prompts, max_new_tokens, tiers,
+                         priority=None, deadline_s=None, arrival_s=None
                          ) -> List[List[int]]:
         names = self._tier_names
         if tiers is None:
@@ -1076,6 +1296,10 @@ class DecodeEngine:
             raise ValueError(f"unknown tiers {sorted(unknown)}; "
                              f"configured: {names}")
         budgets = self._budgets(prompts, max_new_tokens)
+        n_req = len(prompts)
+        prios = self._per_request(priority, n_req, 0, "priority")
+        deads = self._per_request(deadline_s, n_req, None, "deadline_s")
+        arrs = self._per_request(arrival_s, n_req, 0.0, "arrival_s")
         stats = ServeStats(n_requests=len(prompts))
         # submit-time tier assignment (downgrade under backlog pressure)
         backlog = {n: 0 for n in names}
@@ -1097,10 +1321,14 @@ class DecodeEngine:
             sub._t0 = t0
             sub._step_emits = 0
             sub._last_emit_t = t0
+            sub._force_preempt = set(sub.cfg.force_preempt or ())
             if not by_tier[n]:
                 continue
             queue = sub._admission_order(
-                [(r, sub._prompt_tail(prompts[r], budgets[r]), budgets[r])
+                [Request(rid=r,
+                         tail=sub._prompt_tail(prompts[r], budgets[r]),
+                         budget=budgets[r], priority=int(prios[r]),
+                         deadline_s=deads[r], arrival_s=float(arrs[r]))
                  for r in by_tier[n]])
             gens.append(sub._scheduler(
                 queue, outputs, jax.random.key(self.cfg.seed + i)))
@@ -1121,6 +1349,12 @@ class DecodeEngine:
             st = sub.stats
             st.slot_steps = st.steps * sub.cfg.batch_slots
             st.tokens_out = sum(len(outputs[r]) for r in by_tier[n])
+            for r in by_tier[n]:
+                st.status.setdefault(r, "ok")
+            st.goodput_tokens = sum(
+                len(outputs[r]) for r in by_tier[n]
+                if st.status[r] == "ok"
+                or st.status[r].startswith("preempted"))
             st.wall_s = wall
             if self.cfg.estimate_energy:
                 st.est_pj = sub._estimate_energy()
@@ -1139,10 +1373,13 @@ class DecodeEngine:
                   "draft_steps", "verify_steps", "spec_windows",
                   "draft_tokens", "accepted_tokens", "est_pj",
                   "measured_pj", "megasteps", "host_syncs",
-                  "dispatch_wait_s"):
+                  "dispatch_wait_s", "shed_deadline", "shed_capacity",
+                  "preemptions", "swap_out_bytes", "swap_in_bytes",
+                  "goodput_tokens"):
             setattr(dst, f, getattr(dst, f) + getattr(src, f))
         dst.peak_resident_pages += src.peak_resident_pages
         dst.peak_active_requests += src.peak_active_requests
+        dst.status.update(src.status)
         dst.ttft_s.update(src.ttft_s)
         dst.tok_lat_s.extend(src.tok_lat_s)
         for d_dst, d_src in ((dst.accepted_hist, src.accepted_hist),
@@ -1249,27 +1486,119 @@ class DecodeEngine:
         chunk = cfg.prefill_chunk
         cache = self.model.init_cache(n_slots, cfg.max_len)
         rid = [-1] * n_slots              # -1 = free slot
+        reqs: List[Optional[Request]] = [None] * n_slots
         rem: List[List[int]] = [[] for _ in range(n_slots)]  # prompt left
         cur = [0] * n_slots               # next decode token per slot
         left = [0] * n_slots              # completion tokens still owed
         spos = [0] * n_slots              # slot's own cache position
+        prio = [0] * n_slots              # admitted request's priority
+        seq = [0] * n_slots               # admission sequence number
+        next_seq = 0
         ema = [1.0] * n_slots             # trailing acceptance (adaptive k)
         mega = None                       # in-flight dispatched window
 
+        def preempt_slot(t: int) -> Request:
+            """Swap slot ``t`` out: snapshot its dense KV/state rows to
+            host (nothing to snapshot before any token entered the
+            cache), free the slot and re-queue the request with the
+            restore payload."""
+            req = reqs[t]
+            payload = None
+            if spos[t] > 0:
+                snap, nbytes = self._snapshot(cache, t, spos[t], [])
+                payload = {"snap": snap, "spos": spos[t], "cur": cur[t],
+                           "left": left[t], "pages_n": 0,
+                           "nbytes": nbytes}
+            req.tail = list(rem[t])
+            req.restore = payload
+            req.preempts += 1
+            self.stats.preemptions += 1
+            rid[t] = -1
+            rem[t] = []
+            reqs[t] = None
+            return req
+
         while queue or any(r >= 0 for r in rid):
-            # admit: reset + refill every free slot from the queue (one
-            # compiled reset call per step regardless of how many admit)
+            if mega is not None and not any(r >= 0 for r in rid):
+                # the dispatch-ahead window was issued past the last
+                # retirement: it runs zero iterations — drop it
+                mega = None
+            # admit: reset + refill every free slot from the arrived
+            # queue (one compiled reset call per step regardless of how
+            # many admit). Skipped entirely while a dispatch-ahead
+            # window is in flight — the device is running a carry the
+            # host hasn't consumed, so slot state must not move under
+            # it (chains only start with an empty queue, so nothing is
+            # ever actually delayed).
             admit = np.zeros((n_slots,), bool)
-            for s in range(n_slots):
-                if rid[s] < 0 and queue:
-                    rid[s], prompt, budget = queue.pop(0)
-                    rem[s] = list(prompt)
-                    left[s] = budget
+            if mega is None:
+                forced: List[Request] = []
+                if self._force_preempt:
+                    # fault injection: swap the marked request out the
+                    # first time we see it past its first emitted token
+                    for t in range(n_slots):
+                        if (rid[t] >= 0
+                                and rid[t] in self._force_preempt
+                                and outputs[rid[t]]):
+                            self._force_preempt.discard(rid[t])
+                            forced.append(preempt_slot(t))
+                ready = self._poll_queue(queue)
+                waiting = queue[len(ready):]
+                pending: List[Request] = []
+                bumped: List[Request] = []
+                restores = []
+                for req in self._admission_order(ready):
+                    s = next((t for t in range(n_slots) if rid[t] < 0),
+                             None)
+                    if s is None and cfg.preempt:
+                        # priority preemption: the lowest-priority,
+                        # most-recently-admitted slot strictly below
+                        # the waiting request's priority yields
+                        victims = [t for t in range(n_slots)
+                                   if rid[t] >= 0 and not admit[t]
+                                   and prio[t] < req.priority]
+                        if victims:
+                            s = min(victims,
+                                    key=lambda t: (prio[t], -seq[t]))
+                            bumped.append(preempt_slot(s))
+                    if s is None:
+                        pending.append(req)
+                        continue
+                    rid[s] = req.rid
+                    reqs[s] = req
+                    rem[s] = list(req.tail)
+                    left[s] = req.budget
                     spos[s] = 0
+                    cur[s] = 0
+                    prio[s] = req.priority
+                    seq[s] = next_seq
+                    next_seq += 1
                     ema[s] = 1.0
                     admit[s] = True
-            if admit.any():
-                cache = self._reset(cache, jnp.asarray(admit))
+                    if req.restore is not None:
+                        restores.append((s, req))
+                queue[:] = forced + bumped + pending + waiting
+                if admit.any():
+                    cache = self._reset(cache, jnp.asarray(admit))
+                for s, req in restores:
+                    # write the swapped rows back AFTER the batched
+                    # reset (which zeroed the slot) — the request
+                    # resumes exactly where preemption cut it
+                    r = req.restore
+                    cache = self.model.restore_slot(cache, s, r["spos"],
+                                                    [], r["snap"])
+                    spos[s] = r["spos"]
+                    cur[s] = r["cur"]
+                    left[s] = r["left"]
+                    self.stats.swap_in_bytes += r["nbytes"]
+                    req.restore = None
+            if not any(r >= 0 for r in rid):
+                if queue:
+                    # open-loop idle: nothing admitted yet, arrivals
+                    # still pending — tick without burning a step
+                    time.sleep(2e-4)
+                    yield
+                continue
 
             # speculative step: every decoding slot drafts up to k
             # tokens (one fused reduced-precision dispatch), then the
@@ -1329,6 +1658,8 @@ class DecodeEngine:
                         tok = int(greedy[s, adv - 1])
                         if self._emit(s, rid, left, spos, outputs,
                                       [tok], adv):
+                            self._mark_done(reqs[s])
+                            reqs[s] = None
                             rid[s] = -1   # retire; refill next step
                         else:
                             spos[s] += adv
@@ -1343,6 +1674,8 @@ class DecodeEngine:
                     emitted = [int(t) for t in greedy[s, :acc + 1]]
                     if self._emit(s, rid, left, spos, outputs, emitted,
                                   1):
+                        self._mark_done(reqs[s])
+                        reqs[s] = None
                         rid[s] = -1
                     else:
                         spos[s] += acc + 1
@@ -1408,6 +1741,8 @@ class DecodeEngine:
                     spos[s] += k
                     left[s] -= k
                     if done_h[s]:
+                        self._mark_done(reqs[s])
+                        reqs[s] = None
                         rid[s] = -1       # retire; refill next step
                     elif k:
                         cur[s] = int(ring[s, k - 1])
@@ -1478,6 +1813,8 @@ class DecodeEngine:
                         or (cfg.eos_token is not None
                             and tok == cfg.eos_token)
                         or spos[s] >= cfg.max_len - 1):
+                    self._mark_done(reqs[s])
+                    reqs[s] = None
                     rid[s] = -1               # retire; refill next step
                 else:
                     cur[s] = tok
@@ -1514,13 +1851,17 @@ class DecodeEngine:
         virtual = not self.model.paged_kv     # recurrent: nothing to page
         alloc = PageAllocator(self.num_pages)
         self.stats.pool_pages = 0 if virtual else self.num_pages
-        for _, prompt, budget in queue:
-            need = self._pages_needed(len(prompt), budget)
+        # structured failure instead of fail-fast: a request whose live
+        # KV could never fit the whole pool is shed (status
+        # shed_capacity) and the rest of the batch keeps serving
+        keep = []
+        for req in queue:
+            need = self._pages_needed(len(req.tail), req.budget)
             if need > self.num_pages:
-                raise ValueError(
-                    f"request needs {need} KV pages but the pool holds "
-                    f"{self.num_pages}; raise kv_pages or lower "
-                    "max_len/max_new")
+                self._shed(req, "shed_capacity")
+            else:
+                keep.append(req)
+        queue[:] = keep
         if virtual:
             cache = self.model.init_cache(n_slots, cfg.max_len)
         else:
@@ -1531,12 +1872,23 @@ class DecodeEngine:
         tables_dirty = not virtual
         slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
         rid = [-1] * n_slots
+        reqs: List[Optional[Request]] = [None] * n_slots
         rem: List[List[int]] = [[] for _ in range(n_slots)]
         cur = [0] * n_slots
         left = [0] * n_slots
         spos = [0] * n_slots
+        prio = [0] * n_slots              # admitted request's priority
+        seq = [0] * n_slots               # admission sequence number
+        next_seq = 0
         ema = [1.0] * n_slots             # trailing acceptance (adaptive k)
         mega = None                       # in-flight dispatched window
+        #: pages freed by a retirement while a dispatch-ahead window is
+        #: still in flight: the retired slot's stale table keeps writing
+        #: token-0 junk through them until the chain ends, so they only
+        #: rejoin the free list once no window is outstanding
+        deferred: List[int] = []
+        #: preempted requests waiting to rejoin the queue head
+        bumped: List[Request] = []
 
         def set_tables(c):
             # the block table may nest under "attn" (hybrid family)
@@ -1548,46 +1900,256 @@ class DecodeEngine:
                 c["attn"]["block_tables"] = jnp.asarray(tables)
             return c
 
-        while queue or any(r >= 0 for r in rid):
-            # admit: free slots + page reservations, bounded bypass
-            admit = np.zeros((n_slots,), bool)
-            blocked_need = None
-            pending = []
-            for entry in queue:
-                e_rid, prompt, budget = entry
-                need = self._pages_needed(len(prompt), budget)
-                free_slot = next((s for s in range(n_slots)
-                                  if rid[s] < 0 and not admit[s]), None)
-                bypass_ok = blocked_need is None or need < blocked_need
-                pages = (alloc.alloc(need)
-                         if free_slot is not None and bypass_ok else None)
-                if free_slot is None or (need and pages is None) \
-                        or not bypass_ok:
-                    if blocked_need is None or need < blocked_need:
-                        blocked_need = need
-                    pending.append(entry)
+        def swapped_pages() -> int:
+            """Engine-side view of pages' worth of KV parked on host —
+            cross-checked against the allocator's swap ledger."""
+            return (sum(r.restore["pages_n"] for r in queue if r.restore)
+                    + sum(r.restore["pages_n"] for r in bumped
+                          if r.restore))
+
+        def flush_bumped() -> None:
+            if bumped:
+                queue[:] = bumped + queue
+                bumped.clear()
+
+        def preempt_slot(t: int) -> None:
+            """Swap slot ``t`` out: gather its live pages (resolved
+            through the block table) / dense state to host, free the
+            pages, and re-queue the request with the restore payload."""
+            nonlocal tables_dirty
+            req = reqs[t]
+            payload = None
+            if spos[t] > 0:
+                content = (0 if virtual else
+                           min(-(-spos[t] // ps), len(slot_pages[t])))
+                pages_c = [] if virtual else slot_pages[t][:content]
+                snap, nbytes = self._snapshot(cache, t, spos[t], pages_c)
+                if content:
+                    alloc.note_swap_out(content)
+                payload = {"snap": snap, "spos": spos[t], "cur": cur[t],
+                           "left": left[t], "pages_n": content,
+                           "nbytes": nbytes}
+            req.tail = list(rem[t])
+            req.restore = payload
+            req.preempts += 1
+            self.stats.preemptions += 1
+            alloc.free(slot_pages[t])
+            slot_pages[t] = []
+            tables[t, :] = self.num_pages
+            tables_dirty = tables_dirty or not virtual
+            rid[t] = -1
+            rem[t] = []
+            reqs[t] = None
+            bumped.append(req)
+
+        def grow_to(s: int, want_tokens: int) -> None:
+            """Lazy page growth: extend slot ``s``'s page run to cover
+            ``want_tokens`` of KV. Takes free pages greedily; when the
+            pool runs dry and preemption is allowed, the lowest-
+            priority / most-recently-admitted slot (possibly ``s``
+            itself) is swapped out and its pages reused. Without
+            preemption the slot simply ends short — the caller clamps
+            its step to the pages it actually holds (or stalls it)."""
+            nonlocal tables_dirty
+            want = min(want_tokens, cfg.max_len)
+            need = -(-want // ps) - len(slot_pages[s])
+            while need > 0:
+                take = min(need, alloc.free_pages)
+                got = alloc.alloc(take) if take > 0 else None
+                if got:
+                    base = len(slot_pages[s])
+                    slot_pages[s].extend(got)
+                    tables[s, base:base + len(got)] = got
+                    tables_dirty = True
+                    need -= len(got)
                     continue
-                s = free_slot
-                rid[s], rem[s], left[s] = e_rid, list(prompt), budget
-                spos[s] = 0
-                ema[s] = 1.0
-                slot_pages[s] = pages or []
-                tables[s, :] = self.num_pages
-                tables[s, :len(slot_pages[s])] = slot_pages[s]
-                tables_dirty = tables_dirty or not virtual
-                admit[s] = True
-            queue[:] = pending
-            if admit.any():
-                cache = self._reset(cache, jnp.asarray(admit))
-            if tables_dirty and not virtual:
-                cache = set_tables(cache)
-                tables_dirty = False
+                if not cfg.preempt:
+                    return
+                victims = [t for t in range(n_slots) if rid[t] >= 0]
+                v = min(victims, key=lambda t: (prio[t], -seq[t]))
+                preempt_slot(v)
+                if v == s:
+                    return            # the grower itself was evicted
+
+        while queue or any(r >= 0 for r in rid):
+            if mega is not None and not any(r >= 0 for r in rid):
+                # the dispatch-ahead window was issued past the last
+                # retirement: it runs zero iterations — drop it
+                mega = None
+            admit = np.zeros((n_slots,), bool)
+            if mega is None:
+                if deferred:
+                    alloc.free(deferred)
+                    deferred = []
+                if self._force_preempt:
+                    # fault injection: swap the marked request out the
+                    # first time we see it past its first emitted token
+                    # (preempt_slot re-queues it through ``bumped``)
+                    for t in range(n_slots):
+                        if (rid[t] >= 0
+                                and rid[t] in self._force_preempt
+                                and outputs[rid[t]]):
+                            self._force_preempt.discard(rid[t])
+                            preempt_slot(t)
+                # admit: free slots + page reservations, bounded bypass.
+                # Skipped while a dispatch-ahead window is in flight —
+                # chains only start with an empty queue, and slot/table
+                # state must not move under the device's carry.
+                ready = self._poll_queue(queue, alloc)
+                waiting = queue[len(ready):]
+                blocked_need = None
+                pending = []
+                restores = []
+                for req in self._admission_order(ready):
+                    need = self._admit_pages(req)
+                    free_slot = next((t for t in range(n_slots)
+                                      if rid[t] < 0 and not admit[t]),
+                                     None)
+                    bypass_ok = blocked_need is None or need < blocked_need
+                    pages = None
+                    if bypass_ok and cfg.preempt:
+                        # priority preemption: strictly-lower-priority
+                        # slots yield their slot/pages to a waiting
+                        # higher-priority request (lowest priority,
+                        # most recent first)
+                        def victims():
+                            return sorted(
+                                (t for t in range(n_slots)
+                                 if rid[t] >= 0 and not admit[t]
+                                 and prio[t] < req.priority),
+                                key=lambda t: (prio[t], -seq[t]))
+                        while free_slot is None and victims():
+                            preempt_slot(victims()[0])
+                            free_slot = next(
+                                (t for t in range(n_slots)
+                                 if rid[t] < 0 and not admit[t]), None)
+                        while (free_slot is not None
+                               and alloc.free_pages < need and victims()):
+                            preempt_slot(victims()[0])
+                    if free_slot is not None and bypass_ok:
+                        pages = alloc.alloc(need)
+                    if free_slot is None or (need and pages is None) \
+                            or not bypass_ok:
+                        if blocked_need is None or need < blocked_need:
+                            blocked_need = need
+                        pending.append(req)
+                        continue
+                    s = free_slot
+                    rid[s], rem[s], left[s] = req.rid, list(req.tail), \
+                        req.budget
+                    reqs[s] = req
+                    spos[s] = 0
+                    cur[s] = 0
+                    prio[s] = req.priority
+                    seq[s] = next_seq
+                    next_seq += 1
+                    ema[s] = 1.0
+                    slot_pages[s] = pages or []
+                    tables[s, :] = self.num_pages
+                    tables[s, :len(slot_pages[s])] = slot_pages[s]
+                    tables_dirty = tables_dirty or not virtual
+                    admit[s] = True
+                    if req.restore is not None:
+                        restores.append((s, req))
+                queue[:] = pending + waiting
+                flush_bumped()
+                if admit.any():
+                    cache = self._reset(cache, jnp.asarray(admit))
+                if tables_dirty and not virtual:
+                    cache = set_tables(cache)
+                    tables_dirty = False
+                for s, req in restores:
+                    # paged_write the swapped KV back into the slot's
+                    # (new) pages AFTER the batched reset — restore
+                    # addresses the pool directly, so table state is
+                    # irrelevant to the write itself
+                    r = req.restore
+                    pages_c = ([] if virtual
+                               else slot_pages[s][:r["pages_n"]])
+                    cache = self.model.restore_slot(
+                        cache, s, r["spos"], pages_c, r["snap"])
+                    spos[s] = r["spos"]
+                    cur[s] = r["cur"]
+                    left[s] = r["left"]
+                    self.stats.swap_in_bytes += r["nbytes"]
+                    if r["pages_n"]:
+                        alloc.note_swap_in(r["pages_n"])
+                    req.restore = None
             self.stats.peak_resident_pages = max(
                 self.stats.peak_resident_pages,
                 0 if virtual else alloc.used_pages)
             self.stats.peak_active_requests = max(
                 self.stats.peak_active_requests,
                 sum(r >= 0 for r in rid))
+            if not any(r >= 0 for r in rid):
+                if queue:
+                    # open-loop idle: arrivals still pending — tick
+                    # without burning a compiled step
+                    time.sleep(2e-4)
+                    yield
+                continue
+
+            # -- lazy page growth: secure exactly the pages the coming
+            #    step will write, at page-boundary crossings (no-op
+            #    under worst_case reservation — the pages all exist)
+            live = [s for s in range(n_slots) if rid[s] >= 0]
+            mega_able = (self._mega is not None and self._spec is None
+                         and not any(rem[s] for s in live)
+                         and (not queue or cfg.temperature <= 0.0))
+            chain_able = mega_able and not queue
+            if not virtual and mega is None:
+                for s in sorted(live, key=lambda t: seq[t]):
+                    if rid[s] < 0:
+                        continue      # preempted by an earlier grower
+                    if rem[s]:
+                        want = spos[s] + min(len(rem[s]), chunk)
+                    elif self._spec is not None:
+                        kb = max(0, min(self._spec.k, left[s] - 1,
+                                        cfg.max_len - 2 - spos[s]))
+                        want = spos[s] + kb + 1
+                    elif chain_able:
+                        # dispatch-ahead chains run with no host
+                        # scheduling points: pre-grow to the full
+                        # remaining bound so no growth is ever needed
+                        # mid-chain
+                        want = spos[s] + left[s]
+                    elif mega_able:
+                        want = spos[s] + min(left[s], cfg.sync_every)
+                    else:
+                        want = spos[s] + 1
+                    grow_to(s, want)
+                flush_bumped()
+                if tables_dirty:
+                    cache = set_tables(cache)
+                    tables_dirty = False
+            live = [s for s in range(n_slots) if rid[s] >= 0]
+            if not live:
+                continue
+            if virtual:
+                capv = {s: 1 << 30 for s in live}
+            else:
+                capv = {s: len(slot_pages[s]) * ps for s in live}
+            stalled = {s for s in live if capv[s] <= spos[s]}
+            mega_ok = all(
+                capv[s] >= min(spos[s] + min(left[s], cfg.sync_every),
+                               cfg.max_len) for s in live)
+            ahead_ok = all(capv[s] >= min(spos[s] + left[s], cfg.max_len)
+                           for s in live)
+            if len(stalled) == len(live) and not admit.any():
+                # no-preempt deadlock break: every live slot is wedged
+                # waiting for pages nobody will free — shed the most
+                # recent admission (structured, never a raise) so the
+                # rest can grow
+                v = max(live, key=lambda t: seq[t])
+                self._shed(reqs[v], "shed_capacity")
+                reqs[v] = None
+                rid[v] = -1
+                rem[v] = []
+                alloc.free(slot_pages[v])
+                slot_pages[v] = []
+                tables[v, :] = self.num_pages
+                tables_dirty = tables_dirty or not virtual
+                continue
 
             # speculative step over the packed stream: decoding slots
             # contribute k+1-row speculation windows (cur + drafts),
@@ -1600,7 +2162,11 @@ class DecodeEngine:
                 kvec, drafts = self._draft_tokens(cache, cur, rid, rem,
                                                   left, spos, ema)
                 cap = max(chunk, sc.k + 1)
-                active = [s for s in range(n_slots) if rid[s] >= 0]
+                # stalled slots (no pages for their next token) sit out:
+                # they contribute zero rows, so the packed step advances
+                # their device position by exactly nothing
+                active = [s for s in range(n_slots)
+                          if rid[s] >= 0 and s not in stalled]
                 prefilling = any(rem[s] for s in active)
                 tok_l: List[int] = []
                 start = [0] * n_slots
@@ -1613,13 +2179,15 @@ class DecodeEngine:
                     room = self.pack_tokens - len(tok_l) - reserve
                     start[s] = len(tok_l)
                     if rem[s]:
-                        take = max(1, min(len(rem[s]), chunk, room))
+                        take = max(1, min(len(rem[s]), chunk, room,
+                                          capv[s] - spos[s]))
                         took[s] = take
                         rows[s] = take
                         vals = rem[s][:take]
                         self.stats.prefill_tokens += take
                     else:
-                        ks = max(0, min(kvec[s], room - 1))
+                        ks = max(0, min(kvec[s], room - 1,
+                                        capv[s] - spos[s] - 1))
                         kvec[s] = ks
                         rows[s] = ks + 1
                         vals = [cur[s]] + [int(t) for t in
@@ -1656,6 +2224,8 @@ class DecodeEngine:
                 for s in range(n_slots):
                     if rid[s] < 0:
                         continue
+                    if rows[s] == 0 and took[s] == 0:
+                        continue          # stalled: sat this step out
                     self.stats.active_slot_steps += 1
 
                     def _retire_slot(s=s):
@@ -1672,6 +2242,8 @@ class DecodeEngine:
                         tok = int(greedy[s, adv - 1])
                         if self._emit(s, rid, left, spos, outputs,
                                       [tok], adv):
+                            self._mark_done(reqs[s])
+                            reqs[s] = None
                             rid[s] = -1
                             _retire_slot()
                             tables_dirty = tables_dirty or not virtual
@@ -1691,6 +2263,8 @@ class DecodeEngine:
                     emitted = [int(t) for t in greedy[s, :adv]]
                     if self._emit(s, rid, left, spos, outputs, emitted,
                                   1):
+                        self._mark_done(reqs[s])
+                        reqs[s] = None
                         rid[s] = -1       # retire mid-window: free only
                         _retire_slot()    # after the rollback resolved
                         tables_dirty = tables_dirty or not virtual
@@ -1699,24 +2273,27 @@ class DecodeEngine:
                         cur[s] = emitted[-1]
                 if cfg.debug_invariants and not virtual:
                     alloc.assert_invariant(
-                        sum(len(p) for p in slot_pages))
+                        sum(len(p) for p in slot_pages) + len(deferred),
+                        swapped_pages())
                 self._flush_tok_lat()
                 yield
                 continue
 
             # fused megastep over the paged cache: identical contract to
             # the contiguous branch (the block tables ride the while
-            # carry unchanged); a retirement frees the slot's pages the
-            # moment the window is consumed. During a dispatch-ahead
-            # window a just-retired slot still writes through its stale
-            # table — harmless by construction: dispatch-ahead requires
-            # an empty queue, so its freed pages are never reallocated
-            # within this generate and no live slot reads them.
+            # carry unchanged). Requires every live slot pre-grown to
+            # its full window bound (mega_ok) — there are no host
+            # scheduling points inside the window, so no page can be
+            # granted mid-flight. During a dispatch-ahead window a
+            # just-retired slot still writes through its stale table,
+            # so its pages go to `deferred` and rejoin the free list
+            # only once no window is outstanding.
             if (self._mega is not None and self._spec is None
                     and any(r >= 0 for r in rid)
                     and not any(rem[s] for s in range(n_slots)
                                 if rid[s] >= 0)
-                    and (not queue or cfg.temperature <= 0.0)):
+                    and (not queue or cfg.temperature <= 0.0)
+                    and (mega is not None or mega_ok)):
                 if mega is None:
                     cur_a = np.zeros((n_slots, 1), np.int32)
                     pos_a = np.zeros((n_slots,), np.int32)
@@ -1736,7 +2313,10 @@ class DecodeEngine:
                 (ring_d, nem_d, done_d, cur_d, pos_d, left_d, key,
                  ns_d) = mega
                 mega = None
-                if not queue:
+                if not queue and ahead_ok:
+                    # dispatch-ahead only when every live slot already
+                    # holds pages for its full remaining bound — the
+                    # chained window may run to completion
                     mega, cache = self._mega(
                         self._phase_params["decode"], cache, cur_d,
                         pos_d, left_d, done_d, key, jnp.asarray(False))
@@ -1755,8 +2335,16 @@ class DecodeEngine:
                     spos[s] += k
                     left[s] -= k
                     if done_h[s]:
-                        rid[s] = -1       # retire: free pages now
-                        alloc.free(slot_pages[s])
+                        self._mark_done(reqs[s])
+                        reqs[s] = None
+                        rid[s] = -1
+                        if mega is not None:
+                            # a chained window is still in flight and
+                            # this slot's stale table writes through
+                            # these pages until it lands — park them
+                            deferred.extend(slot_pages[s])
+                        else:
+                            alloc.free(slot_pages[s])
                         slot_pages[s] = []
                         tables[s, :] = self.num_pages
                         tables_dirty = tables_dirty or not virtual
@@ -1767,7 +2355,9 @@ class DecodeEngine:
                 self.stats.active_slot_steps += tot
                 self._note_rows("decode", tot)
                 if cfg.debug_invariants and not virtual:
-                    alloc.assert_invariant(sum(len(p) for p in slot_pages))
+                    alloc.assert_invariant(
+                        sum(len(p) for p in slot_pages) + len(deferred),
+                        swapped_pages())
                 self._flush_tok_lat()
                 yield
                 continue
@@ -1775,10 +2365,15 @@ class DecodeEngine:
             key, sub = jax.random.split(key)
             took = [0] * n_slots
             rows = [0] * n_slots              # packed rows per slot
-            if any(rid[s] >= 0 and rem[s] for s in range(n_slots)):
+            if any(rid[s] >= 0 and rem[s] for s in range(n_slots)) \
+                    or stalled:
                 # packed step: lay out each active slot's rows in slot
-                # order, reserving one row for every active slot after
-                active = [s for s in range(n_slots) if rid[s] >= 0]
+                # order, reserving one row for every active slot after.
+                # Stalled slots must route through here (not the (B, 1)
+                # step, which advances device positions for EVERY slot):
+                # they own zero rows, so their position moves by nothing
+                active = [s for s in range(n_slots)
+                          if rid[s] >= 0 and s not in stalled]
                 toks = np.zeros((self.pack_tokens,), np.int32)
                 slot_v = np.full((self.pack_tokens,), n_slots, np.int32)
                 qpos = np.zeros((self.pack_tokens,), np.int32)
@@ -1788,7 +2383,8 @@ class DecodeEngine:
                     reserve = len(active) - j - 1
                     if rem[s]:
                         take = min(len(rem[s]), chunk,
-                                   self.pack_tokens - cursor - reserve)
+                                   self.pack_tokens - cursor - reserve,
+                                   capv[s] - spos[s])
                         take = max(take, 1)
                         took[s] = take
                         rows[s] = take
@@ -1831,6 +2427,8 @@ class DecodeEngine:
             for s in range(n_slots):
                 if rid[s] < 0:
                     continue
+                if rows[s] == 0 and took[s] == 0:
+                    continue              # stalled: sat this step out
                 self.stats.active_slot_steps += 1
                 spos[s] += rows[s]
                 if took[s]:
@@ -1846,6 +2444,8 @@ class DecodeEngine:
                         or (cfg.eos_token is not None
                             and tok == cfg.eos_token)
                         or spos[s] >= cfg.max_len - 1):
+                    self._mark_done(reqs[s])
+                    reqs[s] = None
                     rid[s] = -1               # retire: free pages now
                     alloc.free(slot_pages[s])
                     slot_pages[s] = []
@@ -1854,7 +2454,9 @@ class DecodeEngine:
                 else:
                     cur[s] = tok
             if cfg.debug_invariants and not virtual:
-                alloc.assert_invariant(sum(len(p) for p in slot_pages))
+                alloc.assert_invariant(
+                    sum(len(p) for p in slot_pages) + len(deferred),
+                    swapped_pages())
             self._flush_tok_lat()
             yield
 
@@ -1862,13 +2464,22 @@ class DecodeEngine:
     def _run_waves(self, queue, outputs, key):
         """Drive the wave scheduler wave by wave (generator form)."""
         while queue:
-            wave = [queue.pop(0) for _ in
-                    range(min(self.cfg.batch_slots, len(queue)))]
+            ready = self._poll_queue(queue)   # sheds expired deadlines
+            if not ready:
+                if queue:
+                    time.sleep(2e-4)
+                    yield
+                continue
+            n = min(self.cfg.batch_slots, len(ready))
+            wave = queue[:n]
+            del queue[:n]
             key = yield from self._run_wave(wave, outputs, key)
+            for req in wave:
+                self._mark_done(req)
 
     def _run_wave(self, wave, outputs, key):
-        """Serve one wave of (rid, prompt, budget) requests (<= batch_slots)
-        from a fresh cache.
+        """Serve one wave of Request objects (<= batch_slots) from a
+        fresh cache.
 
         Streams each slot's prompt through the compiled step token by
         token (prefill), then keeps stepping to decode; a slot flips from
@@ -1877,9 +2488,9 @@ class DecodeEngine:
         """
         cfg = self.cfg
         n_slots = cfg.batch_slots
-        prompts = [p for _, p, _ in wave]    # tails already truncated
-        rids = [r for r, _, _ in wave]
-        left = [b for _, _, b in wave]
+        prompts = [r.tail for r in wave]     # tails already truncated
+        rids = [r.rid for r in wave]
+        left = [r.budget for r in wave]
         done = [False] * len(wave)
         cache = self.model.init_cache(n_slots, cfg.max_len)
         cur = np.zeros((n_slots, 1), np.int32)

@@ -1,0 +1,115 @@
+"""Seeded open-loop traffic generation for the serving engine.
+
+Closed-loop benchmarks (submit everything at t=0, wait) only ever see
+means; production failure modes — p99 TTFT blowups, shed storms, pool
+thrash — live in the *arrival process*. This module synthesizes
+reproducible open-loop workloads: Poisson and diurnal (thinned
+inhomogeneous Poisson) arrivals, a long-tail lognormal prompt-length
+mixture, per-class completion budgets, priority classes and optional
+TTFT deadlines. Everything is driven by one seeded ``numpy`` generator,
+so a (seed, process, rate) triple names a workload exactly.
+
+Lives under ``repro.serve`` so the launcher (``repro.launch.serve``)
+can import it with only ``src`` on the path; ``benchmarks/traffic.py``
+re-exports it for the bench harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TrafficRequest:
+    """One synthetic request: a token prompt plus serving metadata."""
+    prompt: List[int]
+    max_new_tokens: int
+    arrival_s: float                  # offset from the workload's t=0
+    priority: int = 0
+    deadline_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class TrafficConfig:
+    """Knobs for :func:`generate_traffic`. All randomness flows from
+    ``seed`` — two configs with equal fields produce equal workloads."""
+    n_requests: int = 64
+    seed: int = 0
+    #: "poisson" (exponential inter-arrivals at ``rate_rps``) or
+    #: "diurnal" (inhomogeneous Poisson thinned against a sinusoid with
+    #: ``diurnal_period_s`` period — peak rate = ``rate_rps``)
+    process: str = "poisson"
+    rate_rps: float = 8.0
+    diurnal_period_s: float = 8.0
+    #: prompt lengths ~ lognormal(mean, sigma), clipped to [1, max]:
+    #: most prompts are short, a heavy tail is 5-20x longer
+    prompt_mean: float = 8.0
+    prompt_sigma: float = 0.6
+    prompt_max: int = 48
+    #: completion budgets ~ lognormal, same clip discipline
+    decode_mean: float = 12.0
+    decode_sigma: float = 0.5
+    decode_max: int = 48
+    vocab: int = 64
+    #: priority classes drawn with the given weights (index = priority,
+    #: higher = more important); single-class traffic by default
+    priority_weights: Sequence[float] = (1.0,)
+    #: fraction of requests carrying a TTFT deadline, and its value
+    deadline_frac: float = 0.0
+    deadline_s: float = 0.5
+
+
+def _lengths(rng: np.random.Generator, n: int, mean: float, sigma: float,
+             cap: int) -> np.ndarray:
+    """Long-tail lengths: lognormal with the requested *linear* mean."""
+    mu = math.log(mean) - 0.5 * sigma * sigma
+    vals = rng.lognormal(mu, sigma, size=n)
+    return np.clip(np.round(vals), 1, cap).astype(int)
+
+
+def _arrivals(rng: np.random.Generator, cfg: TrafficConfig) -> np.ndarray:
+    if cfg.process == "poisson":
+        gaps = rng.exponential(1.0 / cfg.rate_rps, size=cfg.n_requests)
+        return np.cumsum(gaps)
+    if cfg.process == "diurnal":
+        # thinning: draw candidates at the peak rate, keep each with
+        # probability intensity(t)/peak — a raised sinusoid, so the
+        # workload alternates calm troughs and admission-storm crests
+        out: List[float] = []
+        t = 0.0
+        while len(out) < cfg.n_requests:
+            t += rng.exponential(1.0 / cfg.rate_rps)
+            lam = 0.5 * (1.0 + math.sin(
+                2.0 * math.pi * t / cfg.diurnal_period_s))
+            if rng.random() < lam:
+                out.append(t)
+        return np.asarray(out)
+    raise ValueError(f"unknown arrival process {cfg.process!r}; "
+                     "one of ('poisson', 'diurnal')")
+
+
+def generate_traffic(cfg: TrafficConfig) -> List[TrafficRequest]:
+    """Synthesize the workload: ``n_requests`` requests sorted by
+    arrival time, fully determined by ``cfg`` (including ``seed``)."""
+    rng = np.random.default_rng(cfg.seed)
+    arrive = _arrivals(rng, cfg)
+    plens = _lengths(rng, cfg.n_requests, cfg.prompt_mean,
+                     cfg.prompt_sigma, cfg.prompt_max)
+    budgets = _lengths(rng, cfg.n_requests, cfg.decode_mean,
+                       cfg.decode_sigma, cfg.decode_max)
+    w = np.asarray(cfg.priority_weights, float)
+    prios = rng.choice(len(w), size=cfg.n_requests, p=w / w.sum())
+    dl = rng.random(cfg.n_requests) < cfg.deadline_frac
+    reqs = [TrafficRequest(
+        prompt=[int(x) for x in rng.integers(1, cfg.vocab,
+                                             size=plens[i])],
+        max_new_tokens=int(budgets[i]),
+        arrival_s=float(arrive[i]),
+        priority=int(prios[i]),
+        deadline_s=cfg.deadline_s if dl[i] else None,
+    ) for i in range(cfg.n_requests)]
+    reqs.sort(key=lambda r: r.arrival_s)
+    return reqs

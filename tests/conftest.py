@@ -2,6 +2,22 @@
 import pytest
 
 
+@pytest.fixture(autouse=True)
+def _debug_invariants_on():
+    """Run every test with the engine's allocator/ledger invariant
+    checks enabled (``ServeConfig.debug_invariants=None`` resolves to
+    this module default), so page-leak and swap-ledger bugs fail the
+    suite loudly instead of surfacing as silent corruption. Production
+    keeps the cheap default; tests opt the whole suite in."""
+    from repro.serve import engine
+    prev = engine.DEBUG_INVARIANTS_DEFAULT
+    engine.DEBUG_INVARIANTS_DEFAULT = True
+    try:
+        yield
+    finally:
+        engine.DEBUG_INVARIANTS_DEFAULT = prev
+
+
 def optional_hypothesis():
     """(given, settings, st) — real hypothesis when installed, otherwise
     stubs that turn each property test into a clean skip (the rest of the

@@ -11,7 +11,7 @@ import pytest
 from repro.configs import get_arch
 from repro.models import build_model
 from repro.serve import DecodeEngine, ServeConfig
-from repro.serve.engine import KVConfig, PageAllocator
+from repro.serve.engine import KVConfig, PageAllocator, Request
 
 # one arch per family: dense, moe, recurrent (ssm), hybrid, encdec
 ARCHS = ["codeqwen1.5-7b", "granite-moe-1b-a400m", "xlstm-1.3b",
@@ -182,13 +182,24 @@ def test_page_allocator_unit():
     assert a.free_pages == 2
 
 
-def test_pool_exhaustion_raises(models):
-    """A request whose worst case cannot ever fit the pool fails fast
-    instead of deadlocking the admission loop."""
+def test_pool_exhaustion_sheds_capacity(models):
+    """A request whose worst case cannot ever fit the pool is retired
+    with a structured ``shed_capacity`` status (empty completion)
+    instead of raising — and every other request in the batch still
+    completes byte-identically to an unpoisoned run."""
     model, params = models("codeqwen1.5-7b")
-    eng = _engine(model, params, page_size=4, kv_pages=2)
-    with pytest.raises(ValueError, match="pool"):
-        eng.generate([[1] * 30], max_new_tokens=10)
+    ref = _engine(model, params, page_size=4, kv_pages=6).generate(
+        PROMPTS, max_new_tokens=6)
+    eng = _engine(model, params, page_size=4, kv_pages=6)
+    # tail keep=37, +10 budget => 12 pages worst case > the 6-page pool
+    outs = eng.generate(PROMPTS + [[1] * 44],
+                        max_new_tokens=[6] * len(PROMPTS) + [10])
+    assert outs[-1] == []
+    assert eng.stats.status[len(PROMPTS)] == "shed_capacity"
+    assert eng.stats.shed_capacity == 1
+    assert outs[:len(PROMPTS)] == ref
+    for i in range(len(PROMPTS)):
+        assert eng.stats.status[i].split("_")[0] in ("ok", "preempted")
 
 
 def test_backpressure_blocks_admission_not_correctness(models):
@@ -235,15 +246,15 @@ def test_sjf_tie_break_orders_by_pages_needed(models):
     model, params = models("codeqwen1.5-7b")
     eng = _engine(model, params, admission="sjf", prefill_chunk=8,
                   page_size=8, max_len=64)
-    queue = [(0, [1] * 4, 40),    # 1 step, ceil(44/8) = 6 pages
-             (1, [2] * 5, 4),     # 1 step, ceil(9/8)  = 2 pages
-             (2, [3] * 3, 4),     # 1 step, ceil(7/8)  = 1 page
-             (3, [4] * 2, 4)]     # 1 step, ceil(6/8)  = 1 page
-    order = [e[0] for e in eng._admission_order(queue)]
+    queue = [Request(0, [1] * 4, 40),   # 1 step, ceil(44/8) = 6 pages
+             Request(1, [2] * 5, 4),    # 1 step, ceil(9/8)  = 2 pages
+             Request(2, [3] * 3, 4),    # 1 step, ceil(7/8)  = 1 page
+             Request(3, [4] * 2, 4)]    # 1 step, ceil(6/8)  = 1 page
+    order = [r.rid for r in eng._admission_order(queue)]
     assert order == [2, 3, 1, 0]
     # without paging the tie-break vanishes: pure arrival order
     plain = _engine(model, params, admission="sjf", prefill_chunk=8)
-    assert [e[0] for e in plain._admission_order(queue)] == [0, 1, 2, 3]
+    assert [r.rid for r in plain._admission_order(queue)] == [0, 1, 2, 3]
 
 
 def test_blocked_head_is_bypassed_by_cheaper_request(models):

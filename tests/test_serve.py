@@ -8,6 +8,7 @@ import pytest
 from repro.configs import get_arch
 from repro.models import build_model
 from repro.serve import DecodeEngine, ServeConfig
+from repro.serve.engine import Request
 
 # skewed: short and long prompts interleaved so waves idle and the
 # continuous scheduler admits mid-flight (more requests than slots)
@@ -193,10 +194,11 @@ def test_sjf_admits_short_prompts_first():
     prefill)."""
     model, params = _tiny("codeqwen1.5-7b")
     eng = _engine(model, params, "wave", admission="sjf")
-    q = eng._admission_order([(i, p, 3) for i, p in enumerate(PROMPTS)])
-    assert [len(p) for _, p, _ in q] == sorted(len(p) for p in PROMPTS)
-    assert q[0][0] == 4                      # the single-token prompt
-    assert [e[0] for e in q if len(e[1]) == 2] == [1, 7]   # stable
+    q = eng._admission_order(
+        [Request(i, list(p), 3) for i, p in enumerate(PROMPTS)])
+    assert [len(r.tail) for r in q] == sorted(len(p) for p in PROMPTS)
+    assert q[0].rid == 4                     # the single-token prompt
+    assert [r.rid for r in q if len(r.tail) == 2] == [1, 7]   # stable
 
     fifo = _engine(model, params, "wave")
     sjf = _engine(model, params, "wave", admission="sjf")
@@ -214,17 +216,19 @@ def test_sjf_key_is_post_chunking_prefill_steps():
     model, params = _tiny("codeqwen1.5-7b")
     eng = _engine(model, params, "continuous", admission="sjf",
                   prefill_chunk=8)
-    q = eng._admission_order([(i, p, 3) for i, p in enumerate(PROMPTS)])
-    steps = [-(-len(p) // 8) for _, p, _ in q]
+    q = eng._admission_order(
+        [Request(i, list(p), 3) for i, p in enumerate(PROMPTS)])
+    steps = [-(-len(r.tail) // 8) for r in q]
     assert steps == sorted(steps)
     # every prompt but [3]*12 and [6]*9 fits one 8-token chunk: those two
     # sort last, everything else keeps arrival order (stable sort)
-    assert [e[0] for e in q] == [0, 1, 3, 4, 5, 7, 2, 6]
+    assert [r.rid for r in q] == [0, 1, 3, 4, 5, 7, 2, 6]
     # with chunk 1 the key degenerates to the raw length (streaming)
     eng1 = _engine(model, params, "continuous", admission="sjf",
                    prefill_chunk=1)
-    q1 = eng1._admission_order([(i, p, 3) for i, p in enumerate(PROMPTS)])
-    assert [len(p) for _, p, _ in q1] == sorted(len(p) for p in PROMPTS)
+    q1 = eng1._admission_order(
+        [Request(i, list(p), 3) for i, p in enumerate(PROMPTS)])
+    assert [len(r.tail) for r in q1] == sorted(len(p) for p in PROMPTS)
 
 
 def test_per_request_budgets():

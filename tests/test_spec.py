@@ -173,7 +173,9 @@ def test_serve_stats_ttft_percentiles():
     assert st.p99_ttft_s == 0.0
     st.ttft_s = {i: float(i) for i in range(1, 101)}   # 1..100
     assert st.ttft_percentile(0.0) == 1.0
-    assert st.p50_ttft_s == pytest.approx(51.0)        # nearest rank
+    # nearest rank: the ceil(0.5 * 100) = 50th smallest of 1..100 (the
+    # historical round(q*(n-1)) form banker's-rounded to index 50, 51.0)
+    assert st.p50_ttft_s == pytest.approx(50.0)
     assert st.p99_ttft_s == pytest.approx(99.0)
     assert st.ttft_percentile(1.0) == 100.0
 
